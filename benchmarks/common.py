@@ -1,0 +1,112 @@
+"""Shared benchmark infrastructure.
+
+A small llama-style LM is trained once on the synthetic corpus (weights
+cached under artifacts/bench_model) and reused by every table benchmark;
+paper tables are then reproduced *qualitatively* on it (DESIGN.md §6.3 —
+WikiText-2/Llama weights are unavailable offline, so we validate orderings
+and trends rather than absolute perplexities).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import hessian as hes
+from repro.data.synthetic import SyntheticStream, sample_batch
+from repro.models import model_zoo
+from repro.train import optimizer as opt
+from repro.train.loss import perplexity
+from repro.train.train_step import init_state, make_train_step
+
+ART = os.path.join(os.path.dirname(__file__), "../artifacts/bench_model")
+
+BENCH_CFG = ModelConfig(
+    name="bench-lm", family="dense",
+    n_layers=4, d_model=128, n_heads=4, n_kv_heads=2, head_dim=32,
+    d_ff=384, vocab_size=512, max_seq_len=256, activation="swiglu",
+    dtype="float32", vocab_pad_multiple=64,
+)
+SEQ = 64
+TRAIN_STEPS = 500
+
+
+def get_model_and_params(retrain: bool = False):
+    model = model_zoo.build(BENCH_CFG)
+    path = os.path.join(ART, "params.npz")
+    if os.path.exists(path) and not retrain:
+        data = np.load(path)
+        shapes = model_zoo.abstract_params(model)
+        flat, treedef = jax.tree_util.tree_flatten(shapes)
+        leaves = [jnp.asarray(data[f"p{i}"]) for i in range(len(flat))]
+        return model, jax.tree.unflatten(treedef, leaves)
+    ocfg = opt.OptConfig(lr=3e-3, warmup_steps=20, total_steps=TRAIN_STEPS)
+    state = init_state(model, jax.random.PRNGKey(0), ocfg)
+    step = jax.jit(make_train_step(model, ocfg))
+    stream = SyntheticStream(BENCH_CFG.vocab_size, seq_len=SEQ,
+                             global_batch=32)
+    for i in range(TRAIN_STEPS):
+        state, m = step(state, {"tokens": stream.next()})
+    os.makedirs(ART, exist_ok=True)
+    flat = jax.tree.leaves(state.params)
+    np.savez(path, **{f"p{i}": np.asarray(x) for i, x in enumerate(flat)})
+    return model, state.params
+
+
+def calib_tokens(n=16, seq=SEQ, seed=9):
+    return sample_batch(jax.random.PRNGKey(seed), BENCH_CFG.vocab_size, seq, n)
+
+
+def heldout_tokens(n=32, seq=128):
+    return sample_batch(jax.random.PRNGKey(1234), BENCH_CFG.vocab_size, seq, n)
+
+
+def eval_ppl(model, params) -> float:
+    return perplexity(model, params, heldout_tokens())
+
+
+def bench_problem(r=128, c=512, seed=0):
+    """A weight matrix + Hessian from the trained model's first MLP layer,
+    padded/sliced to (r, c); falls back to synthetic when shapes differ."""
+    model, params = get_model_and_params()
+    W = np.asarray(params["layers"]["ffn"]["w_in"][0]).T  # (out,in)=(384,128)
+    key = jax.random.PRNGKey(seed)
+    if W.shape[0] < r or W.shape[1] < c:
+        reps = (int(np.ceil(r / W.shape[0])), int(np.ceil(c / W.shape[1])))
+        W = np.tile(W, reps)
+    W = jnp.asarray(W[:r, :c])
+    # layer-input Hessian from calibration activations through the embed
+    toks = calib_tokens(8)
+    emb = params["embed"][toks]  # (B,S,D)
+    X = emb.reshape(-1, emb.shape[-1])
+    if X.shape[-1] != c:
+        X = jax.random.normal(key, (2048, c)) @ (
+            jnp.eye(c) + 0.3 * jax.random.normal(jax.random.PRNGKey(1),
+                                                 (c, c)) / np.sqrt(c))
+    st = hes.accumulate(hes.init_hessian(c), X)
+    H = hes.finalize(st)
+    return W, H
+
+
+def timed(fn, *args, reps=1, **kw):
+    """(result, us_per_call) with a warmup call."""
+    r = fn(*args, **kw)
+    jax.block_until_ready(jax.tree.leaves(r)[0]) if jax.tree.leaves(r) else None
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = fn(*args, **kw)
+    leaves = jax.tree.leaves(r)
+    if leaves:
+        jax.block_until_ready(leaves[0])
+    dt = (time.perf_counter() - t0) / reps
+    return r, dt * 1e6
+
+
+def row(name: str, us: float, derived) -> str:
+    line = f"{name},{us:.1f},{derived}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,56 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Table mapping in DESIGN.md §7.
+Run: PYTHONPATH=src:. python -m benchmarks.run [--only tab2,fig2]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    sys.path.insert(0, ".")
+    from benchmarks import (fig2_sqnr, tab1_kmeans_vs_gptvq, tab2_main,
+                            tab3_transfer, tab6_em_init, tab7_em_iters,
+                            tab8_overhead, tab9_codebook_update,
+                            tab10_scale_bs, tab11_scaling)
+
+    suites = {
+        "fig2": fig2_sqnr.run,
+        "tab1": tab1_kmeans_vs_gptvq.run,
+        "tab2": tab2_main.run,
+        "tab3": tab3_transfer.run,
+        "tab6": tab6_em_init.run,
+        "tab7": tab7_em_iters.run,
+        "tab8": tab8_overhead.run,
+        "tab9": tab9_codebook_update.run,
+        "tab10": tab10_scale_bs.run,
+        "tab11": tab11_scaling.run,
+    }
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args, _ = ap.parse_known_args()
+    selected = [s for s in args.only.split(",") if s] or list(suites)
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name in selected:
+        t0 = time.time()
+        try:
+            suites[name]()
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            print(f"# {name} FAILED:", flush=True)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+    print("# all benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Table 10: blockwise-normalization scaling block size sweep."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import bench_problem, row, timed
+from repro.core import hessian as hes
+from repro.core.bpv import VQConfig
+from repro.core.gptvq import gptvq_quantize_matrix, layer_error
+
+
+def run():
+    W, H = bench_problem(r=128, c=512)
+    # inject realistic per-row magnitude spread (outlier rows)
+    import jax
+    scale = jnp.exp2(jax.random.randint(jax.random.PRNGKey(3),
+                                        (W.shape[0], 1), -3, 4).astype(jnp.float32))
+    W = W * scale
+    U = hes.inv_hessian_cholesky(H)
+    out = []
+    for ns in (0, 128, 64, 32, 16, 8):
+        cfg = VQConfig(d=2, bits_per_dim=3, group_size=8192, em_iters=30,
+                       scale_block=ns, codebook_update_iters=0)
+        res, us = timed(gptvq_quantize_matrix, W, U, cfg)
+        e = float(layer_error(W, res.arrays.Q, H))
+        tag = "none" if ns == 0 else str(ns)
+        out.append(row(f"tab10/scale_bs_{tag}", us, f"layer_err={e:.5f}"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

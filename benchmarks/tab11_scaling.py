@@ -1,0 +1,43 @@
+"""Table 11: blockwise normalization on/off at EQUAL total overhead (scaled
+variants double the group size to pay for the 4-bit scales)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_problem, row, timed
+from repro.core import hessian as hes
+from repro.core.bpv import VQConfig
+from repro.core.gptvq import gptvq_quantize_matrix, layer_error
+
+
+def run():
+    W, H = bench_problem(r=128, c=512)
+    scale = jnp.exp2(jax.random.randint(jax.random.PRNGKey(3),
+                                        (W.shape[0], 1), -3, 4).astype(jnp.float32))
+    W = W * scale
+    U = hes.inv_hessian_cholesky(H)
+    out = []
+    pairs = [
+        ("1d_2b", VQConfig(d=1, bits_per_dim=2, group_size=256),
+         VQConfig(d=1, bits_per_dim=2, group_size=512, scale_block=32)),
+        ("1d_3b", VQConfig(d=1, bits_per_dim=3, group_size=512),
+         VQConfig(d=1, bits_per_dim=3, group_size=1024, scale_block=32)),
+        ("2d_2b", VQConfig(d=2, bits_per_dim=2, group_size=2048),
+         VQConfig(d=2, bits_per_dim=2, group_size=4096, scale_block=32)),
+        ("2d_3b", VQConfig(d=2, bits_per_dim=3, group_size=8192),
+         VQConfig(d=2, bits_per_dim=3, group_size=16384, scale_block=32)),
+    ]
+    for tag, cfg_off, cfg_on in pairs:
+        for label, cfg in (("noscale", cfg_off), ("scale", cfg_on)):
+            cfg = type(cfg)(**{**cfg.__dict__, "em_iters": 30,
+                               "codebook_update_iters": 0})
+            res, us = timed(gptvq_quantize_matrix, W, U, cfg)
+            e = float(layer_error(W, res.arrays.Q, H))
+            out.append(row(f"tab11/{tag}_{label}", us,
+                           f"layer_err={e:.5f};bpv={cfg.bits_per_value:.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Table 1: k-Means VQ (data-free), k-Means + input data (EM w/ Hessian),
+and the full GPTVQ sweep, 2D VQ on the bench LM, perplexity.
+
+Paper claim ordering: kmeans > kmeans+data > GPTVQ (lower ppl better),
+with the gap exploding at 2 bits per dim.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import (calib_tokens, eval_ppl, get_model_and_params,
+                               row, timed)
+from repro.core.bpv import VQConfig
+from repro.core.pipeline import quantize_model
+
+
+def run():
+    model, params = get_model_and_params()
+    calib = calib_tokens()
+    out = [row("tab1/fp_baseline", 0.0, f"ppl={eval_ppl(model, params):.3f}")]
+    for b in (2, 3, 4):
+        cfg = VQConfig(d=2, bits_per_dim=b, group_size=2048, em_iters=25,
+                       codebook_update_iters=0)
+        for method, tag in (("kmeans", "kmeans"),
+                            ("kmeans_data", "kmeans+data"),
+                            ("gptvq", "gptvq")):
+            (qp, _), us = timed(
+                quantize_model, model, params, calib, method, cfg, chunk=16)
+            out.append(row(f"tab1/{tag}_2d_{b}b", us,
+                           f"ppl={eval_ppl(model, qp):.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Table 2 (+4): main result — RTN / GPTQ / GPTVQ-{1,2,4}D at matched bpv.
+
+Paper claim ordering at every bpv: RTN > GPTQ > VQ-1D > VQ-2D (> VQ-4D),
+lower perplexity better, with the gap largest at 2-bit settings.
+Zero-shot task suites are not reproducible offline; perplexity carries the
+comparison (DESIGN.md §6.3).
+"""
+from __future__ import annotations
+
+from benchmarks.common import (calib_tokens, eval_ppl, get_model_and_params,
+                               row, timed)
+from repro.core.bpv import PAPER_SETTINGS
+from repro.core.pipeline import quantize_model
+
+
+SETTINGS = {
+    "2.25bpv": {
+        "rtn": {"bits": 2, "group_size": 64},
+        "gptq": {"bits": 2, "group_size": 64},
+        "vq1d": PAPER_SETTINGS["2.25bpv_1d"],
+        "vq2d": PAPER_SETTINGS["2.25bpv_2d"],
+        "vq4d": PAPER_SETTINGS["2.25bpv_4d"],
+    },
+    "3.125bpv": {
+        "rtn": {"bits": 3, "group_size": 128},
+        "gptq": {"bits": 3, "group_size": 128},
+        "vq1d": PAPER_SETTINGS["3.125bpv_1d"],
+        "vq2d": PAPER_SETTINGS["3.125bpv_2d"],
+    },
+    "4.125bpv": {
+        "rtn": {"bits": 4, "group_size": 128},
+        "gptq": {"bits": 4, "group_size": 128},
+        "vq1d": PAPER_SETTINGS["4.125bpv_1d"],
+        "vq2d": PAPER_SETTINGS["4.125bpv_2d"],
+    },
+}
+
+
+def run(budgets=("2.25bpv", "3.125bpv", "4.125bpv")):
+    model, params = get_model_and_params()
+    calib = calib_tokens()
+    out = [row("tab2/fp16", 0.0, f"ppl={eval_ppl(model, params):.3f}")]
+    for budget in budgets:
+        for name, cfg in SETTINGS[budget].items():
+            method = ("rtn" if name == "rtn" else
+                      "gptq" if name == "gptq" else "gptvq")
+            vcfg = cfg
+            if method == "gptvq":
+                vcfg = type(cfg)(**{**cfg.__dict__, "em_iters": 25,
+                                    "codebook_update_iters": 10})
+            (qp, rep), us = timed(
+                quantize_model, model, params, calib, method, vcfg, chunk=16)
+            out.append(row(f"tab2/{budget}_{name}", us,
+                           f"ppl={eval_ppl(model, qp):.3f};bpv={rep.bits_per_value:.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

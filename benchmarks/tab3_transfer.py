@@ -1,0 +1,51 @@
+"""Table 3: footprint + decode latency of VQ vs integer formats.
+
+The paper measures an ARM TBL kernel on a Snapdragon CPU. Here (DESIGN §6.4)
+we report (a) the exact relative HBM footprint per format — the quantity
+that bounds weight-movement latency on TPU where decode is bandwidth-bound —
+and (b) host wall-clock of the fused dequant-matmul (XLA path) vs a dense
+matmul as a directional latency proxy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_problem, row, timed
+from repro.core import vq_linear as vql_mod
+from repro.core.bpv import VQConfig
+from repro.kernels import ops
+
+
+def run():
+    W, H = bench_problem(r=256, c=512)
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 512))
+    n = W.size
+    out = []
+
+    dense16 = jnp.asarray(W, jnp.bfloat16)
+    f_dense = jax.jit(lambda a, b: a.astype(jnp.bfloat16) @ b.T)
+    _, us16 = timed(f_dense, x, dense16, reps=20)
+    out.append(row("tab3/int16_dense", us16, "rel_footprint=1.00(vs int4=4.0)"))
+
+    base_bytes = n * 0.5  # int4 baseline footprint
+    for name, cfg in (
+        ("2d_2.5b@512", VQConfig(d=2, bits_per_dim=2.5, group_size=512)),
+        ("2d_2b@1024", VQConfig(d=2, bits_per_dim=2, group_size=1024)),
+        ("1d_3b@128", VQConfig(d=1, bits_per_dim=3, group_size=128)),
+    ):
+        vql = vql_mod.quantize_array(W, H, type(cfg)(
+            **{**cfg.__dict__, "em_iters": 10, "codebook_update_iters": 0}))
+        f_vq = jax.jit(lambda a, v=vql: ops.vql_matmul(
+            a, v, use_pallas=False))
+        _, us = timed(f_vq, x, reps=20)
+        rel_fp = vql.payload_bytes() / base_bytes
+        rel_bpv = cfg.bits_per_value / 4.0
+        out.append(row(f"tab3/vq_{name}", us,
+                       f"rel_footprint={rel_bpv:.2f};measured={rel_fp:.2f};"
+                       f"rel_latency_host={us / us16:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,24 @@
+"""Table 7: EM iteration count — error keeps improving slightly up to 100."""
+from __future__ import annotations
+
+from benchmarks.common import bench_problem, row, timed
+from repro.core import hessian as hes
+from repro.core.bpv import VQConfig
+from repro.core.gptvq import gptvq_quantize_matrix, layer_error
+
+
+def run():
+    W, H = bench_problem(r=128, c=512)
+    U = hes.inv_hessian_cholesky(H)
+    out = []
+    for iters in (10, 30, 50, 75, 100):
+        cfg = VQConfig(d=2, bits_per_dim=3, group_size=4096, em_iters=iters,
+                       codebook_update_iters=0)
+        res, us = timed(gptvq_quantize_matrix, W, U, cfg)
+        e = float(layer_error(W, res.arrays.Q, H))
+        out.append(row(f"tab7/em_iters_{iters}", us, f"layer_err={e:.5f}"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

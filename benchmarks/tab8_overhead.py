@@ -1,0 +1,46 @@
+"""Table 8: equal-bpv overhead routes — bigger groups w/ fp16 codebooks vs
+int8 codebook quantization w/ half group size vs SVD rank-reduction.
+Paper finding: int8 codebooks generally win slightly."""
+from __future__ import annotations
+
+from benchmarks.common import bench_problem, row, timed
+from repro.core import hessian as hes
+from repro.core.bpv import VQConfig
+from repro.core.codebook_compress import quantize_codebooks, svd_compress
+from repro.core.gptvq import gptvq_quantize_matrix, layer_error
+
+
+def _run_one(W, H, U, cfg, use_svd=False):
+    res = gptvq_quantize_matrix(W, U, cfg)
+    if use_svd:
+        res, _ = svd_compress(res, W, H)
+    elif cfg.codebook_bits < 16:
+        res = quantize_codebooks(res)
+    return res
+
+
+def run():
+    W, H = bench_problem(r=128, c=512)
+    U = hes.inv_hessian_cholesky(H)
+    out = []
+    cases = [
+        # (tag, d, b, gs, codebook_bits, svd)  — matched total bpv pairs
+        ("1d_2b_gs512_fp16", 1, 2, 512, 16, False),
+        ("1d_2b_gs256_int8", 1, 2, 256, 8, False),
+        ("1d_2b_gs256_svd", 1, 2, 256, 16, True),
+        ("2d_3b_gs16384_fp16", 2, 3, 16384, 16, False),
+        ("2d_3b_gs8192_int8", 2, 3, 8192, 8, False),
+    ]
+    for tag, d, b, gs, cb, svd in cases:
+        cfg = VQConfig(d=d, bits_per_dim=b, group_size=gs, codebook_bits=cb,
+                       em_iters=30, codebook_update_iters=0,
+                       svd_rank_frac=0.5 if svd else 0.0)
+        res, us = timed(_run_one, W, H, U, cfg, use_svd=svd)
+        e = float(layer_error(W, res.arrays.Q, H))
+        out.append(row(f"tab8/{tag}", us,
+                       f"layer_err={e:.5f};bpv={cfg.bits_per_value:.3f}"))
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Elastic re-mesh example: plan a production mesh, lose devices, re-plan,
+and reshard a parameter tree onto the degraded mesh (single-host demo of
+runtime/elastic.py using however many devices jax exposes).
+
+Run: PYTHONPATH=src python examples/elastic_remesh.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.runtime import elastic
+
+
+def main():
+    n = len(jax.devices())
+    print(f"devices available: {n}")
+    plan = elastic.plan_mesh(n, model_parallel=2, pods=1)
+    print(f"initial plan: {plan}")
+    mesh = elastic.build_mesh(plan)
+
+    params = {"w": jnp.arange(64.0).reshape(8, 8), "b": jnp.ones(8)}
+    specs = {"w": P("data", "model"), "b": P(None)}
+    sharded = elastic.reshard(params, specs, mesh)
+    print("initial sharding:", sharded["w"].sharding)
+
+    # lose 2 devices -> re-plan, rebuild, reshard (restore path would reload
+    # the latest checkpoint; here we reuse the live values)
+    plan2 = elastic.degrade_plan(plan, 2)
+    print(f"after losing 2 devices: {plan2} (spares={plan2.spares})")
+    mesh2 = elastic.build_mesh(plan2)
+    resharded = elastic.reshard(params, specs, mesh2)
+    print("new sharding:", resharded["w"].sharding)
+    assert jnp.allclose(resharded["w"], params["w"])
+    print("values preserved across re-mesh — elastic path OK.")
+
+
+if __name__ == "__main__":
+    main()

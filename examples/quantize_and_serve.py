@@ -1,0 +1,80 @@
+"""End-to-end driver (deliverable b): train a small LM, GPTVQ-quantize it
+post-training, and serve batched requests with the SAME engine for bf16 and
+VQ-compressed weights — the paper's deployment story in one script.
+
+Run: PYTHONPATH=src python examples/quantize_and_serve.py [--steps 200]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.bpv import VQConfig
+from repro.core.pipeline import quantize_model
+from repro.data.synthetic import SyntheticStream, sample_batch
+from repro.models import model_zoo
+from repro.serve.engine import Engine, Request
+from repro.train import optimizer as opt
+from repro.train.loss import perplexity
+from repro.train.train_step import init_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--d-model", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(
+        name="serve-demo", family="dense", n_layers=4, d_model=args.d_model,
+        n_heads=4, n_kv_heads=2, head_dim=args.d_model // 4, d_ff=args.d_model * 3,
+        vocab_size=2048, max_seq_len=256, dtype="float32",
+        vocab_pad_multiple=64)
+    model = model_zoo.build(cfg)
+
+    print(f"== training {model_zoo.count_params(model)/1e6:.1f}M param LM "
+          f"for {args.steps} steps ==")
+    ocfg = opt.OptConfig(lr=3e-3, warmup_steps=20, total_steps=args.steps)
+    state = init_state(model, jax.random.PRNGKey(0), ocfg)
+    step = jax.jit(make_train_step(model, ocfg))
+    stream = SyntheticStream(cfg.vocab_size, seq_len=64, global_batch=16)
+    for i in range(args.steps):
+        state, metrics = step(state, {"tokens": stream.next()})
+        if (i + 1) % 50 == 0:
+            print(f"  step {i+1}: loss={float(metrics['loss']):.3f}")
+
+    heldout = sample_batch(jax.random.PRNGKey(7), cfg.vocab_size, 64, 8)
+    ppl_fp = perplexity(model, state.params, heldout)
+    print(f"  fp32 perplexity: {ppl_fp:.2f}")
+
+    print("== GPTVQ post-training quantization (2D, 2.25 bpv) ==")
+    calib = sample_batch(jax.random.PRNGKey(9), cfg.vocab_size, 64, 16)
+    vq_cfg = VQConfig(d=2, bits_per_dim=2, group_size=1024, em_iters=30,
+                      codebook_update_iters=15)
+    t0 = time.time()
+    qparams, report = quantize_model(model, state.params, calib, "gptvq",
+                                     vq_cfg, pack=True)
+    print(f"  quantized in {time.time()-t0:.1f}s at "
+          f"{report.bits_per_value:.3f} bits/value")
+    ppl_vq = perplexity(model, qparams, heldout)
+    print(f"  VQ perplexity: {ppl_vq:.2f} (fp32 {ppl_fp:.2f})")
+
+    rng = np.random.RandomState(0)
+    prompts = [rng.randint(0, cfg.vocab_size, size=8 + i % 5) for i in range(6)]
+    for tag, params in (("bf16/fp32", state.params), ("gptvq-packed", qparams)):
+        print(f"== serving 6 batched requests [{tag}] ==")
+        eng = Engine(model, params, max_batch=4, max_len=128)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=16)
+                for i, p in enumerate(prompts)]
+        eng.run(reqs)
+        print(f"  {eng.stats['tokens']} tokens in {eng.stats['wall_s']:.2f}s "
+              f"({eng.stats['decode_ticks']} ticks); "
+              f"sample: {reqs[0].out_tokens[:8]}")
+    print("done — same engine, 7x smaller weight payload with VQ.")
+
+
+if __name__ == "__main__":
+    main()

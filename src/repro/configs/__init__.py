@@ -1,0 +1,30 @@
+"""Architecture registry: one module per assigned architecture."""
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES, shape_applicable
+
+from repro.configs import (
+    qwen3_1p7b, qwen2_72b, minitron_4b, yi_34b, xlstm_125m, dbrx_132b,
+    qwen3_moe_30b_a3b, phi3_vision_4p2b, whisper_small, zamba2_7b, llama2_7b,
+)
+
+ARCHS: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        qwen3_1p7b, qwen2_72b, minitron_4b, yi_34b, xlstm_125m, dbrx_132b,
+        qwen3_moe_30b_a3b, phi3_vision_4p2b, whisper_small, zamba2_7b,
+        llama2_7b,
+    )
+}
+
+SMOKE: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.SMOKE for m in (
+        qwen3_1p7b, qwen2_72b, minitron_4b, yi_34b, xlstm_125m, dbrx_132b,
+        qwen3_moe_30b_a3b, phi3_vision_4p2b, whisper_small, zamba2_7b,
+        llama2_7b,
+    )
+}
+
+ASSIGNED = [n for n in ARCHS if n != "llama2-7b"]
+
+
+def get(name: str) -> ModelConfig:
+    return ARCHS[name]

@@ -1,0 +1,127 @@
+"""Codebook initialization and Hessian-weighted EM (GPTVQ §3.2).
+
+Vectors are rows of ``X`` with shape (n, d); each vector carries a diagonal
+weight vector ``Hw`` of shape (n, d) (the per-coordinate Hessian importances,
+see :func:`repro.core.hessian.cholesky_diag_weights`). With ``Hw == 1`` the
+EM reduces exactly to k-Means, which is the paper's identity-Hessian remark.
+
+All functions are jit-compatible with static ``k``/iteration counts and are
+vmapped over groups by the GPTVQ sweep.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_distances(X: jax.Array, Hw: jax.Array, C: jax.Array) -> jax.Array:
+    """(n, k) matrix of sum_p Hw[i,p] * (X[i,p] - C[m,p])^2.
+
+    Expanded as  sum(Hw*X^2) - 2*(Hw*X)@C^T + Hw@ (C^2)^T  so the inner loops
+    are MXU matmuls rather than a materialized (n, k, d) tensor.
+    """
+    x2 = jnp.sum(Hw * X * X, axis=-1, keepdims=True)  # (n, 1)
+    cross = (Hw * X) @ C.T  # (n, k)
+    c2 = Hw @ (C * C).T  # (n, k)
+    return x2 - 2.0 * cross + c2
+
+
+def assign(X: jax.Array, Hw: jax.Array, C: jax.Array) -> jax.Array:
+    """E-step / Eq. 4: Hessian-weighted nearest-centroid assignment."""
+    return jnp.argmin(weighted_distances(X, Hw, C), axis=-1)
+
+
+def m_step(X: jax.Array, Hw: jax.Array, idx: jax.Array, C_prev: jax.Array) -> jax.Array:
+    """Closed-form weighted centroid update (diagonal-Hessian case).
+
+    c_m = (sum_{i in I_m} Hw_i)^+ (sum_{i in I_m} Hw_i * x_i), elementwise.
+    Empty clusters keep their previous centroid.
+    """
+    k = C_prev.shape[0]
+    onehot = jax.nn.one_hot(idx, k, dtype=X.dtype)  # (n, k)
+    num = onehot.T @ (Hw * X)  # (k, d)
+    den = onehot.T @ Hw  # (k, d)
+    new = num / jnp.maximum(den, 1e-12)
+    empty = (den <= 1e-12)
+    return jnp.where(empty, C_prev, new)
+
+
+def em_objective(X: jax.Array, Hw: jax.Array, C: jax.Array) -> jax.Array:
+    return jnp.sum(jnp.min(weighted_distances(X, Hw, C), axis=-1))
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def em(X: jax.Array, Hw: jax.Array, C0: jax.Array, iters: int = 100) -> jax.Array:
+    """Run ``iters`` E/M steps from seed centroids ``C0``; returns codebook."""
+
+    def body(_, C):
+        idx = assign(X, Hw, C)
+        return m_step(X, Hw, idx, C)
+
+    return jax.lax.fori_loop(0, iters, body, C0)
+
+
+# ---------------------------------------------------------------------------
+# Seeding methods (paper §4.3, Table 6)
+# ---------------------------------------------------------------------------
+
+
+def mahalanobis_init(X: jax.Array, k: int) -> jax.Array:
+    """Paper's 'Mahalanobis' seeding: sort points by Mahalanobis distance to
+    the mean and take k equally spaced points from the sorted list."""
+    n, d = X.shape
+    mu = jnp.mean(X, axis=0)
+    Xc = X - mu
+    cov = (Xc.T @ Xc) / n + 1e-6 * jnp.eye(d, dtype=X.dtype)
+    prec = jnp.linalg.inv(cov)
+    a = jnp.einsum("nd,de,ne->n", Xc, prec, Xc)
+    order = jnp.argsort(a)
+    pick = jnp.clip(jnp.round(jnp.linspace(0, n - 1, k)).astype(jnp.int32), 0, n - 1)
+    return X[order[pick]]
+
+
+def kmeanspp_init(X: jax.Array, Hw: jax.Array, k: int, key: jax.Array) -> jax.Array:
+    """k-means++ seeding with the Hessian-weighted distance (for Table 6)."""
+    n, d = X.shape
+
+    def body(carry, key_i):
+        C, i = carry
+        dist = weighted_distances(X, Hw, C)
+        # distance to nearest *already chosen* centroid (mask the unfilled)
+        valid = jnp.arange(C.shape[0]) < i
+        dmin = jnp.min(jnp.where(valid[None, :], dist, jnp.inf), axis=-1)
+        dmin = jnp.maximum(dmin, 0.0)
+        p = dmin / jnp.maximum(jnp.sum(dmin), 1e-12)
+        choice = jax.random.choice(key_i, n, p=p)
+        C = C.at[i].set(X[choice])
+        return (C, i + 1), None
+
+    key0, key = jax.random.split(key)
+    first = jax.random.randint(key0, (), 0, n)
+    C = jnp.zeros((k, d), X.dtype).at[0].set(X[first])
+    (C, _), _ = jax.lax.scan(body, (C, 1), jax.random.split(key, k - 1))
+    return C
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters", "method"))
+def init_codebook(
+    X: jax.Array,
+    Hw: jax.Array,
+    *,
+    k: int,
+    iters: int = 100,
+    method: str = "mahalanobis",
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Seed + EM refine a codebook for one weight group (Algorithm 1 l.11)."""
+    if method == "mahalanobis":
+        C0 = mahalanobis_init(X, k)
+    elif method == "kmeans++":
+        assert key is not None
+        C0 = kmeanspp_init(X, Hw, k, key)
+    else:
+        raise ValueError(f"unknown init method {method!r}")
+    return em(X, Hw, C0, iters=iters)

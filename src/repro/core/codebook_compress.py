@@ -1,0 +1,170 @@
+"""Codebook post-processing (GPTVQ §3.3).
+
+1. ``codebook_update``      — gradient descent on the convex layer objective
+                              ||W X - Q(C) X||_F^2 = tr(E H E^T) w.r.t. the
+                              codebook entries (assignments fixed).
+2. ``quantize_codebooks``   — symmetric int8 min-max quantization, one scale
+                              per codebook.
+3. ``svd_compress``         — rank reduction of the (N_G, k) codebook tensor
+                              for 1D VQ, with GD fine-tuning of the factors
+                              U'' and V' on the same layer objective.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gptvq import VQResult
+
+
+def _adam_run(loss_fn, params, iters: int, lr: float):
+    """Minimal Adam loop (pure JAX; optax is unavailable offline)."""
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    def step(carry, t):
+        params, m, v = carry
+        g = jax.grad(loss_fn)(params)
+        m = jax.tree.map(lambda m_, g_: b1 * m_ + (1 - b1) * g_, m, g)
+        v = jax.tree.map(lambda v_, g_: b2 * v_ + (1 - b2) * g_ * g_, v, g)
+        tf = t.astype(jnp.float32) + 1.0
+        mhat = jax.tree.map(lambda m_: m_ / (1 - b1**tf), m)
+        vhat = jax.tree.map(lambda v_: v_ / (1 - b2**tf), v)
+        params = jax.tree.map(
+            lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mhat, vhat
+        )
+        return (params, m, v), None
+
+    (params, _, _), _ = jax.lax.scan(step, (params, m, v), jnp.arange(iters))
+    return params
+
+
+def codebook_update(res: VQResult, W: jax.Array, H: jax.Array) -> VQResult:
+    """GD on ||WX - QX||^2 w.r.t. codebooks; assignments and scales fixed."""
+    iters = res.cfg.codebook_update_iters
+    if iters <= 0:
+        return res
+    Wf = W.astype(jnp.float32)
+    Hf = H.astype(jnp.float32)
+    # normalize the objective so a single lr works across layers
+    denom = jnp.maximum(jnp.sum(Wf * (Wf @ Hf)), 1e-12)
+    # lr is relative to typical centroid magnitude
+    scale = jnp.maximum(jnp.std(res.arrays.codebooks), 1e-8)
+
+    def loss(C):
+        E = Wf - res.reconstruct(C)
+        return jnp.sum(E * (E @ Hf)) / denom
+
+    C = _adam_run(
+        loss, res.arrays.codebooks, iters, res.cfg.codebook_update_lr * scale
+    )
+    arrays = res.arrays._replace(codebooks=C, Q=res.reconstruct(C))
+    return VQResult(
+        arrays=arrays, cfg=res.cfg, r=res.r, c=res.c,
+        group_cols=res.group_cols, rows_per_band=res.rows_per_band,
+        codebook_scale=res.codebook_scale,
+    )
+
+
+def quantize_codebooks(res: VQResult) -> VQResult:
+    """Symmetric min-max int8 (or cfg.codebook_bits) codebook quantization."""
+    bits = res.cfg.codebook_bits
+    if bits >= 16:
+        return res
+    C = res.arrays.codebooks  # (n_cg, n_bands, k, d)
+    qmax = 2 ** (bits - 1) - 1
+    absmax = jnp.max(jnp.abs(C), axis=(2, 3), keepdims=True)
+    s = jnp.where(absmax == 0, 1.0, absmax / qmax)
+    Cq = jnp.clip(jnp.round(C / s), -qmax - 1, qmax) * s
+    arrays = res.arrays._replace(codebooks=Cq, Q=res.reconstruct(Cq))
+    return VQResult(
+        arrays=arrays, cfg=res.cfg, r=res.r, c=res.c,
+        group_cols=res.group_cols, rows_per_band=res.rows_per_band,
+        codebook_scale=s[..., 0, 0],
+    )
+
+
+class SVDCodebooks(NamedTuple):
+    """Rank-reduced codebook tensor C-hat = U'' V'^T (1D VQ)."""
+
+    U: jax.Array      # (N_G, rho)   quantized at codebook_bits
+    V: jax.Array      # (k, rho)     kept in fp (negligible overhead)
+    perm: jax.Array   # (N_G, k) int32: per-codebook sort permutation applied
+
+
+def svd_compress(res: VQResult, W: jax.Array, H: jax.Array,
+                 rank_frac: float | None = None,
+                 gd_iters: int = 25) -> tuple[VQResult, SVDCodebooks]:
+    """Paper's SVD codebook compression (applied to 1D VQ only).
+
+    Sorts centroids within each codebook (reassigning indices), stacks the
+    (N_G, k) codebook matrix, takes a rank-rho SVD, fine-tunes the factors by
+    GD on the layer objective, and quantizes only U''.
+    """
+    assert res.cfg.d == 1, "SVD codebook compression is a 1D-VQ feature"
+    frac = res.cfg.svd_rank_frac if rank_frac is None else rank_frac
+    C = res.arrays.codebooks  # (n_cg, n_bands, k, 1)
+    n_cg, n_bands, k, _ = C.shape
+    N_G = n_cg * n_bands
+    flat = C.reshape(N_G, k)
+
+    # sort centroids per codebook, remap indices so gather stays valid
+    order = jnp.argsort(flat, axis=1)                  # (N_G, k) old idx at new pos
+    sorted_flat = jnp.take_along_axis(flat, order, axis=1)
+    rank_of_old = jnp.argsort(order, axis=1)           # new idx of old centroid
+
+    idx = res.arrays.indices  # (r, c/d)
+    rg, cg = res.rows_per_band, res.group_cols
+    idx4 = idx.reshape(n_bands, rg, n_cg, cg)          # d=1 -> spans_pg = cg
+    # flat index layout: C.reshape(N_G, k) flattens (n_cg, n_bands) row-major
+    flat_id = (
+        jnp.arange(n_cg)[None, None, :, None] * n_bands
+        + jnp.arange(n_bands)[:, None, None, None]
+    )
+    new_idx4 = rank_of_old[flat_id, idx4]
+    new_idx = new_idx4.reshape(res.r, res.c // res.cfg.d)
+
+    rho = max(1, int(round(frac * k)))
+    Um, s, Vt = jnp.linalg.svd(sorted_flat, full_matrices=False)
+    U2 = (Um * s[None, :])[:, :rho]          # (N_G, rho), Sigma folded in
+    V2 = Vt.T[:, :rho]                       # (k, rho)
+
+    Wf = W.astype(jnp.float32)
+    Hf = H.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(Wf * (Wf @ Hf)), 1e-12)
+
+    def rebuild(U2, V2):
+        Chat = U2 @ V2.T                      # (N_G, k)
+        return Chat.reshape(n_cg, n_bands, k, 1)
+
+    base = VQResult(
+        arrays=res.arrays._replace(indices=new_idx), cfg=res.cfg, r=res.r,
+        c=res.c, group_cols=res.group_cols, rows_per_band=res.rows_per_band,
+    )
+
+    def loss(params):
+        U2, V2 = params
+        E = Wf - base.reconstruct(rebuild(U2, V2))
+        return jnp.sum(E * (E @ Hf)) / denom
+
+    lr = 1e-3 * jnp.maximum(jnp.std(U2), 1e-8)
+    U2, V2 = _adam_run(loss, (U2, V2), gd_iters, lr)
+
+    # quantize only U'' (paper: V' overhead negligible)
+    bits = res.cfg.codebook_bits
+    qmax = 2 ** (bits - 1) - 1
+    absmax = jnp.maximum(jnp.max(jnp.abs(U2), axis=1, keepdims=True), 1e-12)
+    su = absmax / qmax
+    U2q = jnp.clip(jnp.round(U2 / su), -qmax - 1, qmax) * su
+
+    Cq = rebuild(U2q, V2)
+    arrays = base.arrays._replace(codebooks=Cq)
+    out = VQResult(
+        arrays=arrays._replace(Q=base.reconstruct(Cq)), cfg=res.cfg, r=res.r,
+        c=res.c, group_cols=res.group_cols, rows_per_band=res.rows_per_band,
+    )
+    return out, SVDCodebooks(U=U2q, V=V2, perm=order)

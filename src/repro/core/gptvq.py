@@ -1,0 +1,292 @@
+"""GPTVQ Algorithm 1: Hessian-compensated vector quantization of a matrix.
+
+Generalizes GPTQ's column-sequential sweep to d-dimensional VQ:
+
+  * columns are processed left to right in spans of ``d``;
+  * every ``group_cols`` columns a new *weight group* starts: blockwise
+    normalization scales are computed and per-row-band codebooks are
+    initialized with Hessian-weighted EM (codebook.py) from the *current*
+    (error-compensated) weights — Algorithm 1 lines 9-11;
+  * each d-span of each row is assigned to its band codebook with the
+    Hessian-weighted distance (Eq. 4);
+  * the quantization error is propagated into the not-yet-quantized columns
+    through the upper Cholesky factor U of H^{-1}.
+
+Joint d-column compensation (DESIGN.md §6.2)
+-------------------------------------------
+For a span P of d columns quantized jointly with raw error E = W_P - Q_P,
+the optimal update to the remaining columns R is
+
+    delta_R = - E (H~^{-1}_PP)^{-1} H~^{-1}_{P,R}
+            = - (E U_PP^{-1}) U[P, R]
+
+where H~ is the Hessian conditioned on all already-quantized columns and
+U_PP = U[P, P].  We therefore scale the raw error by U_PP^{-1} once
+(``exact_span_solve=True``; a triangular d x d solve) and reuse GPTQ's
+row-broadcast update.  With ``exact_span_solve=False`` the paper's literal
+per-column reading E_p / U[p,p] is used (identical for d=1).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codebook as cb
+from repro.core import normalization as norm
+from repro.core.bpv import VQConfig
+from repro.core.hessian import cholesky_diag_weights
+
+
+class VQArrays(NamedTuple):
+    """Jit-friendly array outputs of the sweep (static layout in VQResult)."""
+
+    Q: jax.Array          # (r, c) fake-quantized weights (float codebooks)
+    indices: jax.Array    # (r, c // d) int32 centroid ids
+    codebooks: jax.Array  # (n_cg, n_bands, k, d) float32, normalized space
+    scale_sint: jax.Array # (n_cg, r, cg // Ns) int32 log-domain scale codes
+    scale_a: jax.Array    # (n_cg,) log-grid step per group
+    scale_z: jax.Array    # (n_cg,) log offset per group
+
+
+@dataclasses.dataclass
+class VQResult:
+    """GPTVQ output for one weight matrix."""
+
+    arrays: VQArrays
+    cfg: VQConfig
+    r: int
+    c: int
+    group_cols: int   # cg actually used (divides c)
+    rows_per_band: int
+    # post-processing state (filled by codebook_compress)
+    codebook_scale: jax.Array | None = None  # (n_cg, n_bands) int8 cb scales
+
+    @property
+    def n_col_groups(self) -> int:
+        return self.c // self.group_cols
+
+    @property
+    def n_bands(self) -> int:
+        return self.r // self.rows_per_band
+
+    @property
+    def scale_block(self) -> int:
+        return self.cfg.scale_block if self.cfg.scale_block > 0 else self.group_cols
+
+    def expanded_scales(self) -> jax.Array:
+        """Per-element normalization scales, (r, c)."""
+        a = self.arrays
+        if self.cfg.scale_block <= 0:
+            return jnp.ones((self.r, self.c), jnp.float32)
+        s = jnp.exp2(
+            a.scale_a[:, None, None] * a.scale_sint.astype(jnp.float32)
+            + a.scale_z[:, None, None]
+        )  # (n_cg, r, cg//Ns)
+        s = jnp.repeat(s, self.scale_block, axis=2)  # (n_cg, r, cg)
+        return s.transpose(1, 0, 2).reshape(self.r, self.c)
+
+    def reconstruct(self, codebooks: jax.Array | None = None) -> jax.Array:
+        """Differentiable dequantization Q = S * codebooks[indices]."""
+        C = self.arrays.codebooks if codebooks is None else codebooks
+        Qn = gather_codebooks(
+            C, self.arrays.indices, self.group_cols, self.rows_per_band,
+            self.cfg.d,
+        )
+        return Qn * self.expanded_scales()
+
+
+def gather_codebooks(
+    codebooks: jax.Array, indices: jax.Array, group_cols: int,
+    rows_per_band: int, d: int,
+) -> jax.Array:
+    """Reconstruct normalized weights from (n_cg, n_bands, k, d) codebooks."""
+    n_cg, n_bands, k, _ = codebooks.shape
+    r, nspans = indices.shape
+    rg = rows_per_band
+    spans_pg = group_cols // d
+    idx4 = indices.reshape(n_bands, rg, n_cg, spans_pg)
+    g_ix = jnp.arange(n_cg)[None, None, :, None]
+    b_ix = jnp.arange(n_bands)[:, None, None, None]
+    Qn = codebooks[g_ix, b_ix, idx4]  # (n_bands, rg, n_cg, spans_pg, d)
+    return Qn.reshape(n_bands, rg, n_cg, group_cols).reshape(r, n_cg * group_cols)
+
+
+def _pick_divisor(n: int, target: int, multiple_of: int = 1) -> int:
+    """Largest divisor of n that is <= target and a multiple of
+    ``multiple_of`` (falls back to multiple_of itself)."""
+    best = multiple_of
+    for cand in range(multiple_of, min(n, target) + 1, multiple_of):
+        if n % cand == 0:
+            best = cand
+    return best
+
+
+def plan_groups(r: int, c: int, cfg: VQConfig) -> tuple[int, int]:
+    """Resolve (group_cols, rows_per_band) for a (r, c) matrix.
+
+    A group holds cfg.group_size weights spanning at most cfg.group_cols
+    columns (paper §4.1: 'each weight group spans (at most) 256 columns,
+    e.g. a group of 1024 weights is 4 rows x 256 columns')."""
+    cg = _pick_divisor(c, min(cfg.group_cols, cfg.group_size),
+                       multiple_of=cfg.d)
+    assert c % cg == 0 and cg % cfg.d == 0, (c, cg, cfg.d)
+    rg_target = max(1, cfg.group_size // cg)
+    rg = _pick_divisor(r, rg_target)
+    return cg, rg
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "group_cols", "rows_per_band"),
+)
+def _sweep(
+    W: jax.Array,
+    U: jax.Array,
+    key: jax.Array,
+    *,
+    cfg: VQConfig,
+    group_cols: int,
+    rows_per_band: int,
+) -> VQArrays:
+    r, c = W.shape
+    d, k = cfg.d, cfg.k
+    cg, rg = group_cols, rows_per_band
+    n_cg = c // cg
+    n_bands = r // rg
+    spans_pg = cg // d
+    Ns = cfg.scale_block if cfg.scale_block > 0 else cg
+    use_scales = cfg.scale_block > 0
+
+    W = W.astype(jnp.float32)
+    U = U.astype(jnp.float32)
+    wgt_all = cholesky_diag_weights(U)  # (c,), 1/U_qq^2
+
+    Q0 = jnp.zeros((r, c), jnp.float32)
+    idx0 = jnp.zeros((r, c // d), jnp.int32)
+    cb0 = jnp.zeros((n_cg, n_bands, k, d), jnp.float32)
+    sint0 = jnp.zeros((n_cg, r, cg // Ns), jnp.int32)
+    a0 = jnp.zeros((n_cg,), jnp.float32)
+    z0 = jnp.zeros((n_cg,), jnp.float32)
+    group_keys = jax.random.split(key, n_cg * n_bands).reshape(n_cg, n_bands, 2)
+
+    def group_body(g, carry):
+        W, Q, idx_all, cb_all, sint, a_all, z_all = carry
+        gstart = g * cg
+        Wg = jax.lax.dynamic_slice(W, (0, gstart), (r, cg))
+
+        # ---- blockwise data normalization (group entry) ------------------
+        if use_scales:
+            bs = norm.compute_block_scales(Wg, block=Ns, bits=cfg.scale_bits)
+            Sg = bs.expand(cg)  # (r, cg)
+            sint = jax.lax.dynamic_update_slice(sint, bs.s_int[None], (g, 0, 0))
+            a_all = a_all.at[g].set(bs.a)
+            z_all = z_all.at[g].set(bs.z)
+        else:
+            Sg = jnp.ones((r, cg), jnp.float32)
+
+        # ---- codebook init (Hessian-weighted EM), per row band -----------
+        wgt_g = jax.lax.dynamic_slice(wgt_all, (gstart,), (cg,))
+        Wn = Wg / Sg
+        Xb = Wn.reshape(n_bands, rg, spans_pg, d).reshape(n_bands, rg * spans_pg, d)
+        Hw1 = jnp.tile(wgt_g.reshape(1, spans_pg, d), (rg, 1, 1)).reshape(
+            rg * spans_pg, d
+        )
+
+        def init_one(Xband, key_b):
+            return cb.init_codebook(
+                Xband, Hw1, k=k, iters=cfg.em_iters, method=cfg.em_seed,
+                key=key_b,
+            )
+
+        Cg = jax.vmap(init_one)(Xb, group_keys[g])  # (n_bands, k, d)
+        cb_all = jax.lax.dynamic_update_slice(cb_all, Cg[None], (g, 0, 0, 0))
+
+        # ---- d-span sweep with error feedback ----------------------------
+        def span_body(j, inner):
+            Wg, Qg, idxg, Eg = inner
+            col = j * d
+            x = jax.lax.dynamic_slice(Wg, (0, col), (r, d))
+            S_span = jax.lax.dynamic_slice(Sg, (0, col), (r, d))
+            xn = x / S_span
+            wgt_span = jax.lax.dynamic_slice(wgt_g, (col,), (d,))
+
+            xb = xn.reshape(n_bands, rg, d)
+            Hw = jnp.tile(wgt_span[None], (rg, 1))
+
+            def assign_band(Xband, Cband):
+                return cb.assign(Xband, Hw, Cband)
+
+            ab = jax.vmap(assign_band)(xb, Cg)  # (n_bands, rg)
+            # gather centroids: Cg (n_bands, k, d), ab (n_bands, rg)
+            qn = jax.vmap(lambda Cb, ib: Cb[ib])(Cg, ab)  # (n_bands, rg, d)
+            q = (qn.reshape(r, d)) * S_span
+
+            E_raw = x - q
+            U_PP = jax.lax.dynamic_slice(U, (gstart + col, gstart + col), (d, d))
+            if cfg.exact_span_solve and d > 1:
+                # Etilde = E_raw @ U_PP^{-1}
+                Et = jax.scipy.linalg.solve_triangular(
+                    U_PP.T, E_raw.T, lower=True
+                ).T
+            else:
+                Et = E_raw / jnp.diagonal(U_PP)[None, :]
+
+            # update remaining columns within this group
+            Urow = jax.lax.dynamic_slice(U, (gstart + col, gstart), (d, cg))
+            mask = (jnp.arange(cg) >= col + d).astype(jnp.float32)
+            Wg = Wg - Et @ (Urow * mask[None, :])
+
+            Qg = jax.lax.dynamic_update_slice(Qg, q, (0, col))
+            idxg = jax.lax.dynamic_update_slice(
+                idxg, ab.reshape(r, 1).astype(jnp.int32), (0, j)
+            )
+            Eg = jax.lax.dynamic_update_slice(Eg, Et, (0, col))
+            return Wg, Qg, idxg, Eg
+
+        Qg0 = jnp.zeros((r, cg), jnp.float32)
+        idxg0 = jnp.zeros((r, spans_pg), jnp.int32)
+        Eg0 = jnp.zeros((r, cg), jnp.float32)
+        Wg, Qg, idxg, Eg = jax.lax.fori_loop(
+            0, spans_pg, span_body, (Wg, Qg0, idxg0, Eg0)
+        )
+
+        # ---- lazy tail update beyond the group ---------------------------
+        Urows = jax.lax.dynamic_slice(U, (gstart, 0), (cg, c))
+        tail_mask = (jnp.arange(c) >= gstart + cg).astype(jnp.float32)
+        W = W - Eg @ (Urows * tail_mask[None, :])
+        W = jax.lax.dynamic_update_slice(W, Wg, (0, gstart))
+        Q = jax.lax.dynamic_update_slice(Q, Qg, (0, gstart))
+        idx_all = jax.lax.dynamic_update_slice(idx_all, idxg, (0, g * spans_pg))
+        return W, Q, idx_all, cb_all, sint, a_all, z_all
+
+    carry = (W, Q0, idx0, cb0, sint0, a0, z0)
+    W, Q, idx_all, cb_all, sint, a_all, z_all = jax.lax.fori_loop(
+        0, n_cg, group_body, carry
+    )
+    return VQArrays(Q, idx_all, cb_all, sint, a_all, z_all)
+
+
+def gptvq_quantize_matrix(
+    W: jax.Array,
+    U: jax.Array,
+    cfg: VQConfig,
+    key: jax.Array | None = None,
+) -> VQResult:
+    """Run Algorithm 1 on one weight matrix. ``U`` from inv_hessian_cholesky."""
+    r, c = W.shape
+    cg, rg = plan_groups(r, c, cfg)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    arrays = _sweep(W, U, key, cfg=cfg, group_cols=cg, rows_per_band=rg)
+    return VQResult(arrays=arrays, cfg=cfg, r=r, c=c, group_cols=cg,
+                    rows_per_band=rg)
+
+
+def layer_error(W: jax.Array, Q: jax.Array, H: jax.Array) -> jax.Array:
+    """Hessian-weighted output reconstruction error tr(E H E^T) (Eq. 1)."""
+    E = (W - Q).astype(jnp.float32)
+    return jnp.sum(E * (E @ H))

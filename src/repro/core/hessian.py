@@ -1,0 +1,78 @@
+"""Layer-Hessian utilities for GPTQ/GPTVQ.
+
+The per-layer objective Hessian of ``||W X - Ŵ X||_F^2`` w.r.t. a row of W is
+``H = X X^T`` (shape (c, c), c = in_features), shared across rows.
+
+In the distributed quantization pipeline each data-parallel worker
+accumulates a partial Hessian over its calibration shard; partials are summed
+with a single ``psum`` (see core/pipeline.py). Everything downstream of the
+accumulated H is per-layer-local.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class HessianState(NamedTuple):
+    H: jax.Array  # (c, c) running sum of X X^T
+    n: jax.Array  # scalar: number of accumulated tokens
+
+
+def init_hessian(c: int, dtype=jnp.float32) -> HessianState:
+    return HessianState(jnp.zeros((c, c), dtype), jnp.zeros((), jnp.int32))
+
+
+@jax.jit
+def accumulate(state: HessianState, x: jax.Array) -> HessianState:
+    """Accumulate inputs ``x`` of shape (..., c) into the Hessian."""
+    c = state.H.shape[0]
+    xf = x.reshape(-1, c).astype(state.H.dtype)
+    return HessianState(state.H + xf.T @ xf, state.n + xf.shape[0])
+
+
+def finalize(state: HessianState) -> jax.Array:
+    """Mean Hessian (scale-invariant for the argmin, but keeps damping sane)."""
+    n = jnp.maximum(state.n, 1).astype(state.H.dtype)
+    return state.H / n
+
+
+@functools.partial(jax.jit, static_argnames=("percdamp",))
+def inv_hessian_cholesky(H: jax.Array, percdamp: float = 0.01) -> jax.Array:
+    """Return upper-triangular U with ``H^{-1} = U^T U`` (GPTQ formulation).
+
+    Dead columns (zero diagonal — inputs never active, e.g. unrouted MoE
+    expert dims) are given unit diagonal so they quantize round-to-nearest
+    with no error feedback, matching the GPTQ reference treatment.
+    """
+    c = H.shape[0]
+    diag = jnp.diagonal(H)
+    dead = diag == 0
+    H = H + jnp.diag(jnp.where(dead, 1.0, 0.0))
+    damp = percdamp * jnp.mean(jnp.where(dead, 0.0, diag))
+    damp = jnp.where(damp <= 0, 1e-8, damp)
+    H = H + damp * jnp.eye(c, dtype=H.dtype)
+    # H^{-1} via Cholesky solves (stable), then Cholesky of the inverse.
+    L = jnp.linalg.cholesky(H)
+    eye = jnp.eye(c, dtype=H.dtype)
+    Linv = jax.scipy.linalg.solve_triangular(L, eye, lower=True)
+    Hinv = Linv.T @ Linv
+    # unique lower factor of Hinv, transposed -> upper U with Hinv = U^T U
+    U = jnp.linalg.cholesky(Hinv).T
+    return U
+
+
+def cholesky_diag_weights(U: jax.Array) -> jax.Array:
+    """Per-column error importance ``1 / U[q,q]^2``.
+
+    ``U[q,q]^2`` is the q-th diagonal of the *conditioned* inverse Hessian
+    (the Schur complement given all previous columns are already fixed), so
+    ``1/U[q,q]^2`` is exactly the weight GPTQ's Eq. (2) assigns to the
+    quantization error of column q. Used as the diagonal H-weights of the
+    VQ assignment / EM distance (DESIGN.md §6.1).
+    """
+    d = jnp.diagonal(U)
+    return 1.0 / jnp.maximum(d * d, 1e-20)

@@ -1,0 +1,79 @@
+"""Blockwise data normalization (GPTVQ §3.2).
+
+Before codebook initialization, each sub-row block of ``Ns`` weights is
+divided by its absmax scale. Scales are quantized to ``scale_bits`` (default
+4) integers *in log2 domain*, with a per-column-group floating point offset
+``z`` so that unit scaling is exactly representable:
+
+    s_int = round((log2(s) - z) / a) ,  clipped to the integer grid
+    s_hat = 2^(a * s_int + z)
+
+The quantized-scale grid step ``a`` is shared over the weight group.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BlockScales(NamedTuple):
+    s_int: jax.Array   # (r, n_blocks) int32 codes
+    a: jax.Array       # scalar grid step (per group)
+    z: jax.Array       # scalar log2 offset (per group)
+    block: int
+    bits: int
+
+    def dequant(self) -> jax.Array:
+        """Per-block scales, shape (r, n_blocks)."""
+        return jnp.exp2(self.a * self.s_int.astype(jnp.float32) + self.z)
+
+    def expand(self, c: int) -> jax.Array:
+        """Per-element scales, shape (r, c)."""
+        s = self.dequant()
+        return jnp.repeat(s, self.block, axis=1)[:, :c]
+
+
+def compute_block_scales(W: jax.Array, block: int = 32, bits: int = 4) -> BlockScales:
+    # NOTE: deliberately not jitted — callers jit around this, and the int
+    # fields of BlockScales must stay concrete (static) under tracing.
+    """Compute quantized log-domain absmax scales for sub-row blocks of W."""
+    r, c = W.shape
+    assert c % block == 0, f"{c} % {block} != 0"
+    wb = W.reshape(r, c // block, block)
+    s = jnp.max(jnp.abs(wb), axis=-1)
+    s = jnp.where(s == 0, 1.0, s)
+    logs = jnp.log2(s)
+    # offset z: make the *median* scale exactly representable and center the
+    # 4-bit grid on the observed range of log-scales.
+    lo = jnp.min(logs)
+    hi = jnp.max(logs)
+    z = lo
+    nlevels = 2**bits - 1
+    a = jnp.maximum((hi - lo) / jnp.maximum(nlevels, 1), 1e-8)
+    s_int = jnp.clip(jnp.round((logs - z) / a), 0, nlevels).astype(jnp.int32)
+    return BlockScales(s_int, a, z, block, bits)
+
+
+def normalize(W: jax.Array, scales: BlockScales) -> jax.Array:
+    """W ./ expanded scales (applied before codebook init / assignment)."""
+    return W / scales.expand(W.shape[1])
+
+
+def denormalize(Wn: jax.Array, scales: BlockScales) -> jax.Array:
+    return Wn * scales.expand(Wn.shape[1])
+
+
+def identity_scales(W: jax.Array, block: int = 32) -> BlockScales:
+    """Unit scales (normalization disabled) with the same static structure."""
+    r, c = W.shape
+    nb = c // block
+    return BlockScales(
+        jnp.zeros((r, nb), jnp.int32),
+        jnp.zeros(()),
+        jnp.zeros(()),
+        block,
+        4,
+    )

@@ -1,0 +1,46 @@
+"""Bit-packing of VQ index tensors for storage / HBM transfer.
+
+Indices are ``log2(k)``-bit codes; we pack them into uint32 words (TPU has no
+uint8 arithmetic advantage, and 32-bit words keep the unpack shift/mask fully
+vectorizable on the VPU). Packing is exact for any bit-width that divides 32
+(1,2,4,8,16); other widths (e.g. 3/5/6-bit codes) use the smallest container
+that divides 32 and we account the true entropy separately in bpv.py —
+matching the paper, which also stores ceil(log2 k)-bit indices.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def container_bits(code_bits: int) -> int:
+    """Smallest b in {1,2,4,8,16,32} with b >= code_bits."""
+    for b in (1, 2, 4, 8, 16, 32):
+        if b >= code_bits:
+            return b
+    raise ValueError(code_bits)
+
+
+@functools.partial(jax.jit, static_argnames=("code_bits",))
+def pack(idx: jax.Array, code_bits: int) -> jax.Array:
+    """Pack int32 codes (flat, multiple of per-word lanes) into uint32 words."""
+    bits = container_bits(code_bits)
+    lanes = 32 // bits
+    flat = idx.reshape(-1)
+    assert flat.shape[0] % lanes == 0, (flat.shape, lanes)
+    w = flat.reshape(-1, lanes).astype(jnp.uint32)
+    shifts = (jnp.arange(lanes, dtype=jnp.uint32) * bits).astype(jnp.uint32)
+    return jnp.bitwise_or.reduce(w << shifts[None, :], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("code_bits", "n"))
+def unpack(words: jax.Array, code_bits: int, n: int) -> jax.Array:
+    """Unpack uint32 words back into ``n`` int32 codes."""
+    bits = container_bits(code_bits)
+    lanes = 32 // bits
+    mask = jnp.uint32(2**bits - 1)
+    shifts = (jnp.arange(lanes, dtype=jnp.uint32) * bits).astype(jnp.uint32)
+    codes = (words[:, None] >> shifts[None, :]) & mask
+    return codes.reshape(-1)[:n].astype(jnp.int32)

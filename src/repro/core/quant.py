@@ -1,0 +1,200 @@
+"""Uniform scalar quantization primitives (RTN baseline + GPTQ building blocks).
+
+Conventions (GPTQ-style):
+  * A weight matrix ``W`` has shape ``(r, c)`` = (out_features, in_features).
+  * The layer computes ``y = x @ W.T`` for ``x`` of shape ``(..., c)``.
+  * The layer Hessian is ``H = X X^T`` over inputs, shape ``(c, c)``.
+  * Quantization groups run along the *input* (column) dimension.
+
+All math is float32 on host; these functions are jit-compatible.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class UniformQParams(NamedTuple):
+    """Per-group affine quantization parameters.
+
+    ``scale``/``zero`` have shape (r, n_groups); group g covers columns
+    [g*group_size, (g+1)*group_size).
+    """
+
+    scale: jax.Array
+    zero: jax.Array
+    bits: int
+    group_size: int
+    symmetric: bool
+
+
+def _minmax_scale_zero(w: jax.Array, bits: int, symmetric: bool):
+    """Min/max affine params for the last axis of ``w``."""
+    qmax = 2**bits - 1
+    if symmetric:
+        absmax = jnp.max(jnp.abs(w), axis=-1)
+        # symmetric signed grid: [-2^{b-1}, 2^{b-1}-1]
+        scale = absmax / (2 ** (bits - 1) - 1 + 1e-12)
+        scale = jnp.where(scale == 0, 1.0, scale)
+        zero = jnp.zeros_like(scale)
+        return scale, zero
+    lo = jnp.min(w, axis=-1)
+    hi = jnp.max(w, axis=-1)
+    lo = jnp.minimum(lo, 0.0)
+    hi = jnp.maximum(hi, 0.0)
+    scale = (hi - lo) / qmax
+    scale = jnp.where(scale == 0, 1.0, scale)
+    zero = jnp.round(-lo / scale)
+    return scale, zero
+
+
+def compute_qparams(
+    W: jax.Array, bits: int, group_size: int = -1, symmetric: bool = False
+) -> UniformQParams:
+    """Compute per-(row, column-group) affine quantization parameters."""
+    r, c = W.shape
+    gs = c if group_size in (-1, None) else min(group_size, c)
+    while c % gs != 0:  # fall back to the largest divisor <= requested
+        gs -= 1
+    wg = W.reshape(r, c // gs, gs)
+    scale, zero = _minmax_scale_zero(wg, bits, symmetric)
+    return UniformQParams(scale, zero, bits, gs, symmetric)
+
+
+def quantize_column(w: jax.Array, scale: jax.Array, zero: jax.Array, bits: int,
+                    symmetric: bool) -> jax.Array:
+    """Fake-quantize a column (or any array broadcastable with scale/zero)."""
+    if symmetric:
+        lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+        q = jnp.clip(jnp.round(w / scale), lo, hi)
+        return q * scale
+    q = jnp.clip(jnp.round(w / scale) + zero, 0, 2**bits - 1)
+    return (q - zero) * scale
+
+
+def rtn_quantize(
+    W: jax.Array, bits: int, group_size: int = -1, symmetric: bool = False
+) -> jax.Array:
+    """Round-to-nearest baseline: fake-quantized copy of ``W``."""
+    r, c = W.shape
+    p = compute_qparams(W, bits, group_size, symmetric)
+    wg = W.reshape(r, c // p.group_size, p.group_size)
+    qg = quantize_column(wg, p.scale[..., None], p.zero[..., None], bits, symmetric)
+    return qg.reshape(r, c)
+
+
+def rtn_int_weights(
+    W: jax.Array, bits: int, group_size: int = -1, symmetric: bool = False
+):
+    """RTN returning integer codes + params (for packing / serving)."""
+    r, c = W.shape
+    p = compute_qparams(W, bits, group_size, symmetric)
+    wg = W.reshape(r, c // p.group_size, p.group_size)
+    if symmetric:
+        lo, hi = -(2 ** (bits - 1)), 2 ** (bits - 1) - 1
+        q = jnp.clip(jnp.round(wg / p.scale[..., None]), lo, hi)
+    else:
+        q = jnp.clip(jnp.round(wg / p.scale[..., None]) + p.zero[..., None], 0, 2**bits - 1)
+    return q.reshape(r, c).astype(jnp.int32), p
+
+
+def dequantize_int(q: jax.Array, p: UniformQParams):
+    r, c = q.shape
+    qg = q.reshape(r, c // p.group_size, p.group_size).astype(jnp.float32)
+    if p.symmetric:
+        return (qg * p.scale[..., None]).reshape(r, c)
+    return ((qg - p.zero[..., None]) * p.scale[..., None]).reshape(r, c)
+
+
+# ---------------------------------------------------------------------------
+# GPTQ: column-sequential uniform quantization with Hessian error feedback.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "group_size", "block_size", "symmetric")
+)
+def gptq_quantize(
+    W: jax.Array,
+    U: jax.Array,
+    *,
+    bits: int,
+    group_size: int = 128,
+    block_size: int = 128,
+    symmetric: bool = False,
+) -> jax.Array:
+    """GPTQ (Frantar et al. 2022) with the Cholesky formulation.
+
+    Args:
+      W: (r, c) weights.
+      U: upper-triangular Cholesky factor of ``H^{-1}`` (``H^{-1} = U^T U``),
+         from :func:`repro.core.hessian.inv_hessian_cholesky`.
+      bits/group_size: quantization grid (group along columns).
+      block_size: lazy-update block B; errors inside a block are propagated
+        eagerly, the tail update is applied once per block.
+
+    Returns the fake-quantized weight matrix (same shape/dtype as W).
+    """
+    r, c = W.shape
+    gs = c if group_size in (-1, None) else min(group_size, c)
+    while c % gs != 0:
+        gs -= 1
+    B = min(block_size, c, gs if gs >= 16 else c)
+    while c % B != 0 or not (gs % B == 0 or B % gs == 0):
+        B -= 1
+    W = W.astype(jnp.float32)
+    U = U.astype(jnp.float32)
+    Q = jnp.zeros_like(W)
+
+    n_blocks = c // B
+
+    def block_body(b, carry):
+        W, Q = carry
+        start = b * B
+        Wb = jax.lax.dynamic_slice(W, (0, start), (r, B))
+        Ub = jax.lax.dynamic_slice(U, (start, start), (B, B))  # within-block rows
+
+        def col_body(j, inner):
+            Wb, Qb, E = inner
+            col = start + j
+            w = jax.lax.dynamic_slice(Wb, (0, j), (r, 1))[:, 0]
+            # group params computed from the *current* (error-compensated)
+            # weights at each group boundary, matching the GPTQ reference.
+            gstart_in_b = (j // min(gs, B)) * min(gs, B) if gs <= B else 0
+            if gs <= B:
+                wgrp = jax.lax.dynamic_slice(Wb, (0, gstart_in_b), (r, gs))
+            else:
+                # group spans multiple blocks: slice from W at the group start
+                gcol = (col // gs) * gs
+                wgrp = jax.lax.dynamic_slice(W, (0, gcol), (r, gs))
+            scale, zero = _minmax_scale_zero(wgrp, bits, symmetric)
+            q = quantize_column(w, scale, zero, bits, symmetric)
+            d = Ub[j, j]
+            err = (w - q) / d
+            # propagate into remaining columns of the block
+            row = Ub[j]  # (B,)
+            mask = (jnp.arange(B) > j).astype(W.dtype)
+            Wb = Wb - err[:, None] * (row * mask)[None, :]
+            Qb = jax.lax.dynamic_update_slice(Qb, q[:, None], (0, j))
+            E = jax.lax.dynamic_update_slice(E, err[:, None], (0, j))
+            return Wb, Qb, E
+
+        Qb0 = jnp.zeros((r, B), W.dtype)
+        E0 = jnp.zeros((r, B), W.dtype)
+        Wb, Qb, E = jax.lax.fori_loop(0, B, col_body, (Wb, Qb0, E0))
+        Q = jax.lax.dynamic_update_slice(Q, Qb, (0, start))
+        # lazy tail update: W[:, start+B:] -= E @ U[start:start+B, start+B:]
+        Urows = jax.lax.dynamic_slice(U, (start, 0), (B, c))
+        tail_mask = (jnp.arange(c) >= start + B).astype(W.dtype)
+        delta = E @ (Urows * tail_mask[None, :])
+        W = W - delta
+        # also write back the processed block so group-boundary slices that
+        # span blocks see compensated values
+        W = jax.lax.dynamic_update_slice(W, Wb, (0, start))
+        return W, Q
+
+    W, Q = jax.lax.fori_loop(0, n_blocks, block_body, (W, Q))
+    return Q

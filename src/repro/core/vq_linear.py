@@ -1,0 +1,202 @@
+"""VQ-compressed linear layers: the serving-side representation.
+
+A quantized linear stores, per weight matrix W (r=out, c=in):
+
+  * ``words``      — bit-packed centroid indices (uint32), the HBM payload:
+                     ``log2(k)``-bit codes, ``c/d`` codes per row.
+  * ``codebooks``  — int8 centroids (n_cg, n_bands, k, d) + per-codebook
+                     fp32 scale (n_cg, n_bands). Tiny; lives in VMEM on TPU.
+  * ``scale_sint`` — optional 4-bit log-domain blockwise normalization codes
+                     (packed as int8 here; 2 codes/byte in the bpv math).
+
+Two execution paths:
+  * XLA path (``dequantize`` + matmul): portable, used by the multi-pod
+    dry-run. XLA materializes the dequantized tile; the fused Pallas kernel
+    (kernels/vq_dequant_matmul.py) avoids that HBM round-trip on real TPUs.
+  * Pallas path: fused unpack+lookup+scale+matmul per VMEM tile.
+
+Sharding: indices shard along rows together with ``n_bands`` (row bands) and
+along columns together with ``n_cg`` (column groups); both group boundaries
+are multiples of 128/256 so TP shard edges always align.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.bpv import VQConfig
+from repro.core.gptvq import VQResult
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class VQLinear:
+    """Pytree holding one VQ-compressed weight matrix."""
+
+    words: jax.Array        # (r, c/d*code_bits/32) uint32 packed indices
+    codebooks: jax.Array    # (n_cg, n_bands, k, d) int8
+    cb_scale: jax.Array     # (n_cg, n_bands) f32
+    scale_sint: jax.Array   # (n_cg, r, cg/Ns) int8 (zeros if normalization off)
+    scale_a: jax.Array      # (n_cg,) f32
+    scale_z: jax.Array      # (n_cg,) f32
+    # -- static metadata --
+    r: int = dataclasses.field(metadata=dict(static=True), default=0)
+    c: int = dataclasses.field(metadata=dict(static=True), default=0)
+    d: int = dataclasses.field(metadata=dict(static=True), default=1)
+    k: int = dataclasses.field(metadata=dict(static=True), default=2)
+    group_cols: int = dataclasses.field(metadata=dict(static=True), default=256)
+    rows_per_band: int = dataclasses.field(metadata=dict(static=True), default=1)
+    scale_block: int = dataclasses.field(metadata=dict(static=True), default=0)
+
+    @property
+    def code_bits(self) -> int:
+        return max(1, (self.k - 1).bit_length())
+
+    @property
+    def n_cg(self) -> int:
+        return self.c // self.group_cols
+
+    @property
+    def n_bands(self) -> int:
+        return self.r // self.rows_per_band
+
+    def payload_bytes(self) -> int:
+        """True HBM footprint of the compressed layer."""
+        return (
+            self.words.size * 4
+            + self.codebooks.size
+            + self.cb_scale.size * 4
+            + (self.scale_sint.size // 2 if self.scale_block else 0)
+            + self.scale_a.size * 4
+            + self.scale_z.size * 4
+        )
+
+
+def from_vq_result(res: VQResult) -> VQLinear:
+    """Pack a quantizer output into the serving format."""
+    cfg = res.cfg
+    idx = res.arrays.indices  # (r, c/d)
+    code_bits = max(1, (cfg.k - 1).bit_length())
+    cbits = packing.container_bits(code_bits)
+    lanes = 32 // cbits
+    r, nspans = idx.shape
+    # pack per row so row-sharding stays trivial
+    assert nspans % lanes == 0 or (nspans * r) % lanes == 0
+    if nspans % lanes == 0:
+        words = jax.vmap(lambda row: packing.pack(row, code_bits))(idx)
+    else:
+        words = packing.pack(idx.reshape(-1), code_bits).reshape(r, -1)
+
+    C = res.arrays.codebooks
+    if res.codebook_scale is not None:
+        s = res.codebook_scale
+    else:
+        qmax = 2 ** (cfg.codebook_bits - 1) - 1
+        absmax = jnp.max(jnp.abs(C), axis=(2, 3))
+        s = jnp.where(absmax == 0, 1.0, absmax / qmax)
+    Cq = jnp.clip(jnp.round(C / s[..., None, None]), -128, 127).astype(jnp.int8)
+
+    return VQLinear(
+        words=words,
+        codebooks=Cq,
+        cb_scale=s.astype(jnp.float32),
+        scale_sint=res.arrays.scale_sint.astype(jnp.int8),
+        scale_a=res.arrays.scale_a,
+        scale_z=res.arrays.scale_z,
+        r=res.r,
+        c=res.c,
+        d=cfg.d,
+        k=cfg.k,
+        group_cols=res.group_cols,
+        rows_per_band=res.rows_per_band,
+        scale_block=cfg.scale_block,
+    )
+
+
+def unpack_indices(vql: VQLinear) -> jax.Array:
+    """(r, c/d) int32 codes from the packed words (in-graph shifts/masks)."""
+    nspans = vql.c // vql.d
+    code_bits = vql.code_bits
+    cbits = packing.container_bits(code_bits)
+    lanes = 32 // cbits
+    if nspans % lanes == 0:
+        return jax.vmap(lambda row: packing.unpack(row, code_bits, nspans))(
+            vql.words
+        )
+    return packing.unpack(vql.words.reshape(-1), code_bits, vql.r * nspans).reshape(
+        vql.r, nspans
+    )
+
+
+def dequantize(vql: VQLinear, dtype=jnp.bfloat16) -> jax.Array:
+    """Reconstruct W (r, c) — the XLA (non-fused) path."""
+    idx = unpack_indices(vql)
+    n_cg, n_bands = vql.n_cg, vql.n_bands
+    rg, cg, d = vql.rows_per_band, vql.group_cols, vql.d
+    spans_pg = cg // d
+    C = vql.codebooks.astype(jnp.float32) * vql.cb_scale[..., None, None]
+    idx4 = idx.reshape(n_bands, rg, n_cg, spans_pg)
+    g_ix = jnp.arange(n_cg)[None, None, :, None]
+    b_ix = jnp.arange(n_bands)[:, None, None, None]
+    Wn = C[g_ix, b_ix, idx4].reshape(n_bands, rg, n_cg, cg).reshape(vql.r, vql.c)
+    if vql.scale_block:
+        s = jnp.exp2(
+            vql.scale_a[:, None, None] * vql.scale_sint.astype(jnp.float32)
+            + vql.scale_z[:, None, None]
+        )
+        s = jnp.repeat(s, vql.scale_block, axis=2).transpose(1, 0, 2).reshape(
+            vql.r, vql.c
+        )
+        Wn = Wn * s
+    return Wn.astype(dtype)
+
+
+def apply(vql: VQLinear, x: jax.Array, *, dtype=jnp.bfloat16) -> jax.Array:
+    """y = x @ W^T with on-the-fly dequantization (XLA path)."""
+    W = dequantize(vql, dtype)
+    return x.astype(dtype) @ W.T
+
+
+def dequant_tree(tree, dtype=jnp.bfloat16):
+    """Replace any VQLinear leaves with dense (in, out) weight arrays.
+
+    Called by the model assemblies on each *layer slice* inside their layer
+    scan, so only one layer's weights are ever dense at a time; everything
+    else streams through HBM bit-packed. No-op for plain parameter trees.
+    """
+    def f(x):
+        if not isinstance(x, VQLinear):
+            return x
+        # leading batch dims (e.g. MoE expert stacks (E, ...)) vmap away
+        deq = lambda v: dequantize(v, dtype).T
+        for _ in range(x.words.ndim - 2):
+            deq = jax.vmap(deq)
+        return deq(x)
+
+    return jax.tree.map(f, tree, is_leaf=lambda x: isinstance(x, VQLinear))
+
+
+def tree_has_vq(tree) -> bool:
+    return any(isinstance(x, VQLinear) for x in jax.tree.leaves(
+        tree, is_leaf=lambda x: isinstance(x, VQLinear)))
+
+
+def quantize_array(
+    W: jax.Array, H: jax.Array | None, cfg: VQConfig, key=None
+) -> VQLinear:
+    """Convenience: full GPTVQ pipeline on one matrix -> serving format."""
+    from repro.core import hessian as hes
+    from repro.core.codebook_compress import codebook_update, quantize_codebooks
+    from repro.core.gptvq import gptvq_quantize_matrix
+
+    if H is None:
+        H = jnp.eye(W.shape[1], dtype=jnp.float32)
+    U = hes.inv_hessian_cholesky(H, cfg.percdamp)
+    res = gptvq_quantize_matrix(W, U, cfg, key)
+    res = codebook_update(res, W, H)
+    res = quantize_codebooks(res)
+    return from_vq_result(res)

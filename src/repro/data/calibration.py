@@ -1,0 +1,39 @@
+"""Calibration dataset for post-training quantization.
+
+The paper samples 128 sequences of 2048 tokens from the WikiText-2 training
+set; we mirror the shape with the synthetic corpus (or user token files via
+``from_token_file``), and shard sequences across data-parallel quantization
+workers (each worker accumulates partial Hessians; one psum merges them).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import sample_batch
+
+
+def calibration_tokens(vocab: int, n_sequences: int = 128,
+                       seq_len: int = 2048, seed: int = 1234) -> jax.Array:
+    """(n_sequences, seq_len) int32, deterministic."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    bs = min(16, n_sequences)
+    for i in range(0, n_sequences, bs):
+        out.append(sample_batch(jax.random.fold_in(key, i), vocab, seq_len, bs))
+    return jnp.concatenate(out, axis=0)[:n_sequences]
+
+
+def from_token_file(path: str, n_sequences: int, seq_len: int) -> jax.Array:
+    """Load a flat .npy int token file and window it into sequences."""
+    toks = np.load(path).astype(np.int32).reshape(-1)
+    need = n_sequences * seq_len
+    assert toks.size >= need, f"token file too small: {toks.size} < {need}"
+    return jnp.asarray(toks[:need].reshape(n_sequences, seq_len))
+
+
+def shard_for_worker(tokens: jax.Array, worker: int, n_workers: int):
+    n = tokens.shape[0]
+    per = n // n_workers
+    return tokens[worker * per : (worker + 1) * per]

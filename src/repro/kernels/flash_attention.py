@@ -1,0 +1,104 @@
+"""Flash attention Pallas TPU kernel (online-softmax, GQA-aware).
+
+Grid (B*H, n_q_blocks, n_kv_blocks); running max/sum/accumulator live in
+VMEM scratch across the kv dimension, the output tile is written once on
+the last kv step. GQA is handled in the k/v BlockSpec index maps (query
+head h reads kv head h // group) — no materialized head expansion.
+
+Used as the TPU fast path for models/attention.flash_attention (the
+pure-JAX two-level scan remains the portable/XLA path and the oracle).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            causal, scale, nk, block_q, block_k):
+    qi = pl.program_id(1)
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)   # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)   # (bk, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        rows = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0)
+        cols = kk * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(cols <= rows, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(kk == nk - 1)
+    def _done():
+        o_ref[0] = (acc_scr[...] /
+                    jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention_tpu(q, k, v, *, causal: bool = True, block_q: int = 128,
+                        block_k: int = 128, interpret: bool = False):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd) -> (B, Sq, H, hd)."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    nq, nk = Sq // block_q, Sk // block_k
+    scale = 1.0 / (hd ** 0.5)
+
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, hd)
+
+    def kv_index(b, qi, kk):
+        # query head -> its GQA kv head: b = batch*H + h; kv row =
+        # batch*KV + h // G
+        return (b // H) * KV + (b % H) // G, kk, 0
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, causal=causal, scale=scale, nk=nk,
+                          block_q=block_q, block_k=block_k),
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, qi, kk: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+            pl.BlockSpec((1, block_k, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, qi, kk: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)

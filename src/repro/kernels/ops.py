@@ -1,0 +1,49 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``use_pallas`` selects the execution path:
+  * True  — pl.pallas_call (TPU target; interpret=True on CPU for tests)
+  * False — the pure-XLA fallback (used by the multi-pod dry-run: Pallas TPU
+            lowering is unavailable on the host-CPU dry-run platform).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.vq_linear import VQLinear
+from repro.kernels import ref
+from repro.kernels.vq_assign import vq_assign
+from repro.kernels.vq_dequant_matmul import vq_dequant_matmul
+
+
+def vql_matmul(x: jax.Array, vql: VQLinear, *, use_pallas: bool = True,
+               interpret: bool = True, tile_m: int = 128, tile_n: int = 128,
+               tile_k: int = 256) -> jax.Array:
+    """y = x @ W^T for a VQLinear (scale_block=0 layouts), fused on TPU."""
+    assert vql.scale_block == 0, "fold blockwise scales before the kernel"
+    C = vql.codebooks.astype(jnp.float32) * vql.cb_scale[..., None, None]
+    kw = dict(
+        d=vql.d, k_c=vql.k, code_bits=vql.code_bits,
+        container_bits=packing.container_bits(vql.code_bits),
+        rows_per_band=vql.rows_per_band, group_cols=vql.group_cols,
+    )
+    if use_pallas:
+        return vq_dequant_matmul(
+            x, vql.words, C, tile_m=tile_m,
+            tile_n=min(tile_n, vql.r), tile_k=min(tile_k, vql.c),
+            interpret=interpret, **kw)
+    return ref.vq_dequant_matmul_ref(
+        x, vql.words, C, d=vql.d, code_bits=vql.code_bits,
+        rows_per_band=vql.rows_per_band, group_cols=vql.group_cols)
+
+
+def assign(x, hw, codebook, *, use_pallas: bool = True,
+           interpret: bool = True, tile_n: int = 1024):
+    if use_pallas:
+        n = x.shape[0]
+        t = min(tile_n, n)
+        while n % t != 0:
+            t -= 1
+        return vq_assign(x, hw, codebook, tile_n=t, interpret=interpret)
+    return ref.vq_assign_ref(x, hw, codebook)

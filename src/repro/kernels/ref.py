@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose vs these)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+
+def vq_dequant_matmul_ref(x, words, codebooks, *, d, code_bits,
+                          rows_per_band, group_cols):
+    """Oracle: unpack -> gather -> dense matmul."""
+    M, K = x.shape
+    N = words.shape[0]
+    n_cg, n_bands, k_c, _ = codebooks.shape
+    nspans = K // d
+    codes = jax.vmap(lambda row: packing.unpack(row, code_bits, nspans))(words)
+    spans_pg = group_cols // d
+    idx4 = codes.reshape(n_bands, rows_per_band, n_cg, spans_pg)
+    g_ix = jnp.arange(n_cg)[None, None, :, None]
+    b_ix = jnp.arange(n_bands)[:, None, None, None]
+    W = codebooks[g_ix, b_ix, idx4].reshape(n_bands, rows_per_band,
+                                            n_cg, group_cols).reshape(N, K)
+    return x.astype(jnp.float32) @ W.T
+
+
+def vq_assign_ref(x, hw, codebook):
+    """Oracle: explicit (n, k, d) broadcast distance + argmin."""
+    diff = x[:, None, :] - codebook[None, :, :]
+    dist = jnp.sum(hw[:, None, :] * diff * diff, axis=-1)
+    return jnp.argmin(dist, axis=-1).astype(jnp.int32)

@@ -1,0 +1,56 @@
+"""Hessian-weighted nearest-centroid assignment Pallas kernel (Eq. 4).
+
+The quantization-time hot spot: every d-span of every row computes a
+weighted distance to all k centroids. The expanded form
+
+    dist = sum(Hw x^2) - 2 (Hw x) @ C^T + Hw @ (C^2)^T
+
+turns the (n, k, d) broadcast into two (n, d)x(d, k) MXU matmuls; the kernel
+tiles n and keeps the codebook resident in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, hw_ref, c_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)    # (tn, d)
+    hw = hw_ref[...].astype(jnp.float32)  # (tn, d)
+    C = c_ref[...].astype(jnp.float32)    # (k, d)
+    hx2 = jnp.sum(hw * x * x, axis=-1, keepdims=True)
+    cross = jax.lax.dot_general(
+        hw * x, C, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    c2 = jax.lax.dot_general(
+        hw, C * C, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    dist = hx2 - 2.0 * cross + c2         # (tn, k)
+    o_ref[...] = jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_n", "interpret"))
+def vq_assign(x: jax.Array, hw: jax.Array, codebook: jax.Array,
+              *, tile_n: int = 1024, interpret: bool = False) -> jax.Array:
+    """x, hw: (n, d); codebook: (k, d) -> (n,) int32 assignments."""
+    n, d = x.shape
+    k = codebook.shape[0]
+    tile_n = min(tile_n, n)
+    assert n % tile_n == 0, (n, tile_n)
+    grid = (n // tile_n,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(x, hw, codebook)

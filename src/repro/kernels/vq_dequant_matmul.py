@@ -1,0 +1,133 @@
+"""Fused VQ-decode + matmul Pallas TPU kernel — the serving hot-spot.
+
+TPU adaptation of the paper's ARM-TBL decode kernel (DESIGN.md §3): the
+bit-packed index matrix is the HBM payload (2-4.5 bits/weight); codebooks
+live in VMEM; decode happens on-chip and the reconstructed tile feeds the
+MXU directly, so the dense weight matrix never round-trips through HBM.
+
+Centroid lookup uses the one-hot-matmul trick (``one_hot(codes) @ codebook``)
+instead of a gather: TPU gathers serialize on the scalar unit, whereas the
+one-hot contraction runs on the MXU at full tile throughput — this is the
+core 'rethink the GPU/CPU algorithm for the TPU memory hierarchy' decision.
+
+Layout contract (matches core/vq_linear.VQLinear):
+  x          (M, K)                      activations
+  words      (N, K/d * bits / 32)        packed uint32 codes, row-major
+  codebooks  (n_cg, n_bands, k_c, d)     fp32 (int8 codebook * scale folded)
+with N = n_bands * rows_per_band, K = n_cg * group_cols.
+Tile sizes must align: tile_k % group_cols == 0 (or group_cols % tile_k == 0
+with tile_k % d == 0), tile_n % rows_per_band == 0.
+Blockwise normalization scales are folded by ops.py (scale_block=0 path) or
+applied via the optional scales ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, c_ref, o_ref, *, d, k_c, code_bits, container_bits,
+            rows_per_band, n_k_tiles):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]            # (tm, tk)
+    words = w_ref[...]        # (tn, wk) uint32
+    C = c_ref[...]            # (gk, bands_t, k_c, d) fp32
+
+    tn, wk = words.shape
+    tm, tk = x.shape
+    lanes = 32 // container_bits
+    spans = tk // d           # codes per row in this k-tile
+    bands_t = tn // rows_per_band
+
+    # unpack: (tn, wk) -> (tn, wk, lanes) -> (tn, spans)
+    shifts = (jnp.arange(lanes, dtype=jnp.uint32) * container_bits)
+    mask = jnp.uint32(2**container_bits - 1)
+    codes = ((words[:, :, None] >> shifts[None, None, :]) & mask)
+    codes = codes.reshape(tn, spans).astype(jnp.int32)
+
+    # decode via one-hot matmul per row-band (MXU-friendly; no gathers)
+    gk = C.shape[0]           # column-groups covered by this k-tile
+    spans_pg = spans // gk
+    codes_b = codes.reshape(bands_t, rows_per_band, gk, spans_pg)
+    onehot = (codes_b[..., None] ==
+              jnp.arange(k_c, dtype=jnp.int32)).astype(jnp.float32)
+    # (bands_t, rg, gk, spans_pg, k_c) x (gk, bands_t, k_c, d)
+    w_dec = jax.lax.dot_general(
+        onehot.transpose(2, 0, 1, 3, 4).reshape(gk, bands_t, -1, k_c),
+        C,
+        dimension_numbers=(((3,), (2,)), ((0, 1), (0, 1))),
+    )  # (gk, bands_t, rg*spans_pg, d)
+    w_tile = (
+        w_dec.reshape(gk, bands_t, rows_per_band, spans_pg, d)
+        .transpose(1, 2, 0, 3, 4)
+        .reshape(tn, tk)
+    )
+
+    o_ref[...] += jax.lax.dot_general(
+        x.astype(jnp.float32), w_tile,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("d", "k_c", "code_bits", "container_bits",
+                     "rows_per_band", "group_cols", "tile_m", "tile_n",
+                     "tile_k", "interpret"),
+)
+def vq_dequant_matmul(
+    x: jax.Array,
+    words: jax.Array,
+    codebooks: jax.Array,
+    *,
+    d: int,
+    k_c: int,
+    code_bits: int,
+    container_bits: int,
+    rows_per_band: int,
+    group_cols: int,
+    tile_m: int = 128,
+    tile_n: int = 128,
+    tile_k: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = x @ dequant(words, codebooks).T ; returns (M, N) fp32."""
+    M, K = x.shape
+    N = words.shape[0]
+    n_cg, n_bands = codebooks.shape[0], codebooks.shape[1]
+    tile_m = min(tile_m, M)
+    tile_n = min(tile_n, N)
+    tile_k = min(tile_k, K)
+    assert K % tile_k == 0 and N % tile_n == 0 and M % tile_m == 0
+    assert tile_k % group_cols == 0, (tile_k, group_cols)
+    assert tile_n % rows_per_band == 0
+    lanes = 32 // container_bits
+    wk = tile_k // d // lanes  # words per row per k-tile
+    gk = tile_k // group_cols
+    bands_t = tile_n // rows_per_band
+    grid = (M // tile_m, N // tile_n, K // tile_k)
+
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, d=d, k_c=k_c, code_bits=code_bits,
+            container_bits=container_bits, rows_per_band=rows_per_band,
+            n_k_tiles=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_n, wk), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((gk, bands_t, k_c, d), lambda i, j, kk: (kk, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(x, words, codebooks)

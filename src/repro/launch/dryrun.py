@@ -1,0 +1,499 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input-shape) cell against the production meshes and record
+memory / cost / collective statistics for the roofline analysis.
+
+Run:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod-only]
+
+Outputs one JSON per cell under artifacts/dryrun/.
+"""
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, SHAPES, shape_applicable
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import packing
+from repro.core.bpv import VQConfig
+from repro.core.vq_linear import VQLinear
+from repro.core.gptvq import plan_groups
+from repro.launch import roofline as rl
+from repro.launch.mesh import HARDWARE, make_production_mesh
+from repro.models import common as cm, model_zoo, transformer
+from repro.serve.serve_step import make_decode, make_prefill
+from repro.train import optimizer as opt
+from repro.train.train_step import TrainState, init_state, make_train_step
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "../../../artifacts/dryrun")
+
+# serving VQ setting used for the quantized-serving dry-run variants:
+# paper's 2.25 bpv (W2@g64-equivalent) 2D configuration (Table 2)
+SERVE_VQ = VQConfig(d=2, bits_per_dim=2, group_size=1024, codebook_bits=8)
+
+
+def dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def widen_fsdp(specs, mesh: Mesh):
+    """On multi-pod meshes, FSDP shards over ('pod','data') — the pod axis
+    would otherwise be pure replication for parameters/optimizer state."""
+    if "pod" not in mesh.axis_names:
+        return specs
+
+    def fix(s):
+        if not isinstance(s, P):
+            return s
+        return P(*[("pod", "data") if ax == "data" else ax for ax in s])
+
+    return jax.tree.map(fix, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def ns_tree(mesh: Mesh, shapes, specs):
+    specs = cm.sanitize_specs(shapes, widen_fsdp(specs, mesh), mesh)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def batch_sharding(mesh: Mesh, batch_shapes):
+    dp = dp_axes(mesh)
+    dpn = math.prod(mesh.devices.shape[: len(dp)])
+
+    def spec(x):
+        b = x.shape[0]
+        lead = dp if (b % dpn == 0) else None
+        return NamedSharding(mesh, P(lead, *([None] * (len(x.shape) - 1))))
+
+    return jax.tree.map(spec, batch_shapes)
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs per cell
+# ---------------------------------------------------------------------------
+
+def abstract_batch(cfg: ModelConfig, shape: ShapeConfig, kind: str):
+    B = shape.global_batch
+    S = shape.seq_len
+    tok = jnp.int32
+    if kind == "decode":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, 1), tok)}
+        return batch
+    n_img = cfg.n_image_tokens if cfg.family == "vlm" else 0
+    batch = {"tokens": jax.ShapeDtypeStruct((B, S - n_img), tok)}
+    if cfg.family == "vlm":
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (B, n_img, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def abstract_cache(model, B: int, max_len: int, kv_dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: model.init_cache(B, max_len, dtype=kv_dtype))
+
+
+def cache_shardings(model, mesh, cache_shapes, *, seq_shard=False):
+    """Attention-cache sharding policy (EXPERIMENTS §Dry-run):
+
+    stacked KV caches are (L, B, S, KV, hd). Batch shards over the DP axes.
+    When KV divides the TP axis, heads shard over 'model'; otherwise (GQA
+    with kv < 16) the *sequence* shards over 'model' — flash-decode style:
+    each chip attends over its cache slice, XLA inserts the small
+    max/sum/PV collectives. For batch=1 long-context cells the sequence
+    additionally takes the 'data' axis.
+    """
+    cfg = model.cfg
+    tp = mesh.devices.shape[-1]
+    if cfg.family == "hybrid":
+        specs = model.cache_specs(seq_shard=seq_shard)
+        return ns_tree(mesh, cache_shapes, specs)
+    dp = dp_axes(mesh)
+
+    dpn = math.prod(mesh.devices.shape[: len(dp)])
+
+    def kv_policy(leaf_shape):
+        dims = leaf_shape.shape
+        if len(dims) != 5:  # recurrent state (xlstm): batch-first leaves
+            lead = dp if dims and dims[0] % dpn == 0 else None
+            return P(lead, *([None] * (len(dims) - 1)))
+        L, B, S, KV, hd = dims
+        batch_ax = dp if B % dpn == 0 else None
+        if B == 1:
+            # single-sequence long context: seq over data AND model
+            return P(None, None, ("data", "model"), None, None)
+        if KV % tp == 0:
+            return P(None, batch_ax, None, "model", None)
+        return P(None, batch_ax, "model", None, None)
+
+    specs = jax.tree.map(kv_policy, cache_shapes)
+    return ns_tree(mesh, cache_shapes, specs)
+
+
+# ---------------------------------------------------------------------------
+# VQ-compressed abstract parameters (quantized-serving variants)
+# ---------------------------------------------------------------------------
+
+_VQ_TARGET_KEYS = ("wq", "wk", "wv", "wo", "w_in", "w_gate", "w_out", "up",
+                   "up_gate", "down", "in_proj", "out_proj", "w_z", "w_i",
+                   "w_f", "w_o")
+
+
+def vq_abstract_params(model, vq_cfg: VQConfig):
+    """Replace weight leaves with abstract VQLinear pytrees (+ specs)."""
+    shapes = model_zoo.abstract_params(model)
+    specs = model.param_specs()
+
+    def convert(path, leaf, spec):
+        keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        name = keys[-1] if keys else ""
+        inside_layers = any(k in ("layers", "mamba", "enc_layers",
+                                  "dec_layers", "shared") for k in keys)
+        if (name not in _VQ_TARGET_KEYS or not inside_layers
+                or leaf.ndim < 2 or leaf.shape[-1] < 64
+                or leaf.shape[-2] < 64):
+            if leaf.dtype == jnp.float32:
+                leaf = jax.ShapeDtypeStruct(leaf.shape, jnp.bfloat16)
+            return leaf, spec
+        lead = leaf.shape[:-2]
+        d_in, d_out = leaf.shape[-2], leaf.shape[-1]
+        r, c = d_out, d_in  # VQ layout is (out, in)
+        cg, rg = plan_groups(r, c, vq_cfg)
+        n_cg, n_bands = c // cg, r // rg
+        code_bits = max(1, (vq_cfg.k - 1).bit_length())
+        lanes = 32 // packing.container_bits(code_bits)
+        words = (c // vq_cfg.d) // lanes
+        sds = jax.ShapeDtypeStruct
+        vql = VQLinear(
+            words=sds((*lead, r, words), jnp.uint32),
+            codebooks=sds((*lead, n_cg, n_bands, vq_cfg.k, vq_cfg.d), jnp.int8),
+            cb_scale=sds((*lead, n_cg, n_bands), jnp.float32),
+            scale_sint=sds((*lead, n_cg, r, 1), jnp.int8),
+            scale_a=sds((*lead, n_cg), jnp.float32),
+            scale_z=sds((*lead, n_cg), jnp.float32),
+            r=r, c=c, d=vq_cfg.d, k=vq_cfg.k, group_cols=cg,
+            rows_per_band=rg, scale_block=0,
+        )
+        # shardings: rows (out) follow the original out axis, column groups
+        # follow the original in axis
+        nlead = len(lead)
+        in_ax = spec[-2] if len(spec) >= 2 else None
+        out_ax = spec[-1] if len(spec) >= 1 else None
+        lead_sp = list(spec[:nlead]) if len(spec) >= nlead + 2 else [None] * nlead
+        vspec = VQLinear(
+            words=P(*lead_sp, out_ax, in_ax),
+            codebooks=P(*lead_sp, in_ax, out_ax, None, None),
+            cb_scale=P(*lead_sp, in_ax, out_ax),
+            scale_sint=P(*lead_sp, in_ax, out_ax, None),
+            scale_a=P(*lead_sp, in_ax),
+            scale_z=P(*lead_sp, in_ax),
+            r=r, c=c, d=vq_cfg.d, k=vq_cfg.k, group_cols=cg,
+            rows_per_band=rg, scale_block=0,
+        )
+        return vql, vspec
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    spec_leaves = treedef.flatten_up_to(specs)
+    out_shapes, out_specs = [], []
+    for (path, leaf), spec in zip(flat, spec_leaves):
+        s, sp = convert(path, leaf, spec)
+        out_shapes.append(s)
+        out_specs.append(sp)
+    new_shapes = jax.tree.unflatten(treedef, out_shapes)
+    new_specs = jax.tree.unflatten(treedef, out_specs)
+    return new_shapes, new_specs
+
+
+def vq_param_bytes(shapes) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(
+            shapes, is_leaf=lambda x: isinstance(x, VQLinear)):
+        if isinstance(leaf, VQLinear):
+            total += sum(
+                math.prod(a.shape) * a.dtype.itemsize
+                for a in jax.tree.leaves(leaf))
+        else:
+            total += math.prod(leaf.shape) * leaf.dtype.itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# per-cell builders
+# ---------------------------------------------------------------------------
+
+def active_param_counts(model) -> tuple[int, int]:
+    """(total_non_embed, active_non_embed) for MODEL_FLOPS."""
+    cfg = model.cfg
+    shapes = model_zoo.abstract_params(model)
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes)
+    total = active = 0
+    for path, leaf in flat:
+        keys = [str(getattr(k, "key", getattr(k, "name", ""))) for k in path]
+        n = math.prod(leaf.shape)
+        if "embed" in keys or "pos_enc" in keys or "pos_dec" in keys:
+            continue
+        total += n
+        if cfg.family == "moe" and "ffn" in keys and leaf.ndim == 4:
+            active += n * cfg.n_experts_active // cfg.n_experts
+        else:
+            active += n
+    return total, active
+
+
+def plan_microbatches(cfg: ModelConfig, shape: ShapeConfig, mesh) -> int:
+    dp = dp_axes(mesh)
+    dpn = math.prod(mesh.devices.shape[: len(dp)])
+    per_dev = max(1, shape.global_batch // dpn)
+    # target one sequence per device per microbatch for >=7B models
+    big = cfg.d_model >= 3000 or cfg.n_layers >= 40
+    return per_dev if big else max(1, per_dev // 4)
+
+
+def build_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               vq: bool = False, kv8: bool = False):
+    """Returns (jitted_fn, example_args, meta) ready to lower."""
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model = model_zoo.build(cfg)
+    pshapes = model_zoo.abstract_params(model)
+    pspecs = model.param_specs()
+
+    total_p, active_p = active_param_counts(model)
+    meta = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "multi_pod": multi_pod, "vq": vq,
+        "chips": int(math.prod(mesh.devices.shape)),
+        "params_total": total_p, "params_active": active_p,
+    }
+
+    if shape.kind == "train":
+        assert not vq
+        # >=30B models store Adam moments in bf16 (§Perf iteration 6)
+        big = cfg.d_model * cfg.n_layers >= 8192 * 24 or cfg.family == "moe"
+        ocfg = opt.OptConfig(
+            moment_dtype="bfloat16" if big else "float32",
+            grad_accum_dtype="bfloat16" if big else "float32")
+        mb = plan_microbatches(cfg, shape, mesh)
+        meta["moment_dtype"] = ocfg.moment_dtype
+        meta["microbatches"] = mb
+        state_shapes = jax.eval_shape(
+            lambda k: init_state(model, k, ocfg), jax.random.PRNGKey(0))
+        state_sh = TrainState(
+            params=ns_tree(mesh, state_shapes.params, pspecs),
+            opt=opt.AdamWState(
+                step=NamedSharding(mesh, P()),
+                m=ns_tree(mesh, state_shapes.opt.m, pspecs),
+                v=ns_tree(mesh, state_shapes.opt.v, pspecs),
+                master=ns_tree(mesh, state_shapes.opt.master, pspecs),
+            ))
+        batch_shapes = abstract_batch(cfg, shape, "train")
+        batch_sh = batch_sharding(mesh, batch_shapes)
+        fn = make_train_step(model, ocfg, microbatches=mb)
+        # donate the train state: params/opt buffers update in place
+        jfn = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                      donate_argnums=(0,))
+        args = (state_shapes, batch_shapes)
+        model_flops = rl.model_flops_train(
+            active_p, shape.global_batch * shape.seq_len) * 1.33  # + remat
+        meta["model_flops_note"] = "6*N_active*tokens * 1.33 remat"
+    else:
+        if vq:
+            pshapes, pspecs = vq_abstract_params(model, SERVE_VQ)
+            meta["vq_param_bytes"] = vq_param_bytes(pshapes)
+        else:
+            pshapes = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+                if s.dtype == jnp.float32 and s.ndim >= 1 else s, pshapes)
+        params_sh = ns_tree(mesh, pshapes, pspecs)
+        max_len = shape.seq_len
+        kv_dtype = jnp.float8_e4m3fn if kv8 else jnp.bfloat16
+        meta["kv_dtype"] = "fp8" if kv8 else "bf16"
+        cache_shapes = abstract_cache(model, shape.global_batch, max_len,
+                                      kv_dtype)
+        seq_shard = shape.name == "long_500k" or (
+            shape.kind == "decode" and shape.global_batch <
+            math.prod(mesh.devices.shape[: len(dp_axes(mesh))]))
+        cache_sh = cache_shardings(model, mesh, cache_shapes,
+                                   seq_shard=seq_shard)
+        meta["seq_sharded_cache"] = bool(seq_shard)
+        if shape.kind == "prefill":
+            batch_shapes = abstract_batch(cfg, shape, "prefill")
+            batch_sh = batch_sharding(mesh, batch_shapes)
+            fn = make_prefill(model, last_only=True)
+            # donate the cache: prefill fills it in place
+            jfn = jax.jit(fn, in_shardings=(params_sh, batch_sh, cache_sh),
+                          donate_argnums=(2,))
+            args = (pshapes, batch_shapes, cache_shapes)
+            model_flops = rl.model_flops_train(
+                active_p, shape.global_batch * shape.seq_len) / 3.0
+            meta["model_flops_note"] = "2*N_active*tokens (fwd only)"
+        else:  # decode
+            batch_shapes = abstract_batch(cfg, shape, "decode")
+            tok_sh = batch_sharding(mesh, batch_shapes)["tokens"]
+            fn = make_decode(model)
+            jfn = jax.jit(
+                fn,
+                in_shardings=(params_sh, tok_sh, cache_sh,
+                              NamedSharding(mesh, P())),
+                donate_argnums=(2,),  # cache updates in place
+            )
+            args = (pshapes, batch_shapes["tokens"], cache_shapes,
+                    jax.ShapeDtypeStruct((), jnp.int32))
+            model_flops = rl.model_flops_decode(active_p, shape.global_batch)
+            meta["model_flops_note"] = "2*N_active*batch (per token)"
+    meta["model_flops"] = float(model_flops)
+    return jfn, args, mesh, meta
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, vq: bool = False,
+             kv8: bool = False, save: bool = True,
+             hlo_dump: bool = False) -> dict:
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    cell_id = f"{arch}__{shape_name}__{'pod2' if multi_pod else 'pod1'}" + (
+        "__vq" if vq else "") + ("__kv8" if kv8 else "")
+    if not ok:
+        result = {"cell": cell_id, "status": "skipped", "reason": reason}
+        if save:
+            _save(cell_id, result)
+        return result
+    if vq and shape.kind == "train":
+        return {"cell": cell_id, "status": "skipped", "reason": "vq is serve-only"}
+
+    t0 = time.time()
+    try:
+        jfn, args, mesh, meta = build_cell(arch, shape_name,
+                                           multi_pod=multi_pod, vq=vq,
+                                           kv8=kv8)
+    except Exception as e:
+        result = {"cell": cell_id, "status": "FAILED",
+                  "error": repr(e)[:2000]}
+        if save:
+            _save(cell_id, result)
+        return result
+    try:
+        with mesh:
+            lowered = jfn.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+    except Exception as e:  # a failed cell is a bug — surface it loudly
+        result = {"cell": cell_id, "status": "FAILED", "error": repr(e)[:2000],
+                  **meta}
+        if save:
+            _save(cell_id, result)
+        return result
+
+    coll = rl.collective_bytes(hlo)
+    trips = rl.while_trip_counts(hlo)
+    roof = rl.analyze(cost, coll, chips=meta["chips"],
+                      model_flops=meta["model_flops"])
+    dp = math.prod(mesh.devices.shape[: len(dp_axes(mesh))])
+    tp = mesh.devices.shape[-1]
+    # embedding params (bf16 even under VQ) included in the weight payload
+    emb = ARCHS[arch].padded_vocab * ARCHS[arch].d_model * (
+        1 if ARCHS[arch].tie_embeddings else 2)
+    payload = (meta["vq_param_bytes"] if vq and "vq_param_bytes" in meta
+               else (meta["params_total"] + emb) * 2)
+    analytic = rl.analytic_cell(
+        ARCHS[arch], shape, chips=meta["chips"], dp=dp, tp=tp,
+        n_total=meta["params_total"], n_active=meta["params_active"],
+        microbatches=meta.get("microbatches", 1),
+        weight_payload_bytes=payload,
+        kv_bytes=1.0 if kv8 else 2.0)
+    mem_d = {
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+    }
+    args_b = mem_d["argument_bytes"] or 0
+    tmp_b = mem_d["temp_bytes"] or 0
+    fits = (args_b + tmp_b) <= (HARDWARE["hbm_bytes"]
+                                - HARDWARE["hbm_reserve"])
+    result = {
+        "cell": cell_id, "status": "ok", **meta,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem_d, "fits_16GB": bool(fits),
+        "cost": {k: float(v) for k, v in cost.items()
+                 if isinstance(v, (int, float))},
+        "collectives": coll,
+        "while_trip_counts": trips[:32],
+        "roofline_hlo_raw": roof.as_dict(),  # cost_analysis counts loop
+        # bodies once (see while_trip_counts) — cross-check only
+        "roofline": analytic,
+    }
+    if hlo_dump:
+        os.makedirs(ART_DIR, exist_ok=True)
+        with open(os.path.join(ART_DIR, cell_id + ".hlo"), "w") as f:
+            f.write(hlo)
+    if save:
+        _save(cell_id, result)
+    return result
+
+
+def _save(cell_id: str, result: dict):
+    os.makedirs(ART_DIR, exist_ok=True)
+    with open(os.path.join(ART_DIR, cell_id + ".json"), "w") as f:
+        json.dump(result, f, indent=1, default=str)
+
+
+def all_cells(vq_variants: bool = True):
+    cells = []
+    for arch in ARCHS:
+        if arch == "llama2-7b":
+            continue
+        for shape in SHAPES:
+            for mp in (False, True):
+                cells.append((arch, shape, mp, False))
+            if vq_variants and SHAPES[shape].kind == "decode":
+                cells.append((arch, shape, False, True))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--vq", action="store_true")
+    ap.add_argument("--kv8", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--hlo-dump", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        for arch, shape, mp, vq in all_cells():
+            cid = f"{arch}/{shape}/{'pod2' if mp else 'pod1'}{'/vq' if vq else ''}"
+            t0 = time.time()
+            r = run_cell(arch, shape, multi_pod=mp, vq=vq)
+            print(f"[{time.strftime('%H:%M:%S')}] {cid}: {r['status']} "
+                  f"({time.time()-t0:.0f}s) "
+                  + (r.get("reason", "") if r["status"] != "ok" else
+                     f"dom={r['roofline']['dominant']}"), flush=True)
+        return
+    r = run_cell(args.arch, args.shape, multi_pod=args.multipod, vq=args.vq,
+                 kv8=args.kv8, hlo_dump=args.hlo_dump)
+    print(json.dumps(r, indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

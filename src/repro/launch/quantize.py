@@ -1,0 +1,81 @@
+"""Quantization launcher: run the GPTVQ pipeline over a model and save the
+packed checkpoint.
+
+Distribution note (DESIGN.md §3): calibration Hessian accumulation is
+data-parallel (each worker processes a shard of the calibration set; a psum
+merges per-layer Hessians), and layers are embarrassingly parallel across
+workers afterwards. On the single-process container worker_count=1 runs the
+identical code path.
+
+  PYTHONPATH=src python -m repro.launch.quantize --arch llama2-7b --smoke \
+      --setting 2.25bpv_2d --out /tmp/vq_ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import ARCHS, SMOKE
+from repro.core.bpv import PAPER_SETTINGS, VQConfig
+from repro.core.pipeline import quantize_model
+from repro.data.calibration import calibration_tokens, shard_for_worker
+from repro.models import model_zoo
+from repro.train.loss import perplexity
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--setting", default="2.25bpv_2d",
+                    choices=sorted(PAPER_SETTINGS))
+    ap.add_argument("--sequences", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--em-iters", type=int, default=25)
+    ap.add_argument("--update-iters", type=int, default=10)
+    ap.add_argument("--out", default="/tmp/repro_vq_ckpt")
+    ap.add_argument("--worker", type=int, default=0)
+    ap.add_argument("--n-workers", type=int, default=1)
+    args = ap.parse_args()
+
+    cfg = (SMOKE if args.smoke else ARCHS)[args.arch]
+    if args.smoke:
+        cfg = cfg.scaled(dtype="float32")
+    model = model_zoo.build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+
+    calib = calibration_tokens(cfg.vocab_size, n_sequences=args.sequences,
+                               seq_len=args.seq_len)
+    calib = shard_for_worker(calib, args.worker, args.n_workers)
+    heldout = calibration_tokens(cfg.vocab_size, n_sequences=8,
+                                 seq_len=args.seq_len, seed=777)
+
+    base = PAPER_SETTINGS[args.setting]
+    vq_cfg = VQConfig(**{**base.__dict__, "em_iters": args.em_iters,
+                         "codebook_update_iters": args.update_iters})
+    print(f"arch={cfg.name} setting={args.setting} "
+          f"({vq_cfg.bits_per_value:.3f} bpv) calib={calib.shape}")
+
+    ppl_fp = perplexity(model, params, heldout)
+    t0 = time.time()
+    qparams, rep = quantize_model(
+        model, params, calib, "gptvq", vq_cfg, pack=True,
+        progress=lambda msg: print(f"  {msg}", flush=True))
+    dt = time.time() - t0
+    ppl_vq = perplexity(model, qparams, heldout)
+    print(f"quantized in {dt:.1f}s | ppl fp={ppl_fp:.3f} vq={ppl_vq:.3f}")
+
+    ck = Checkpointer(args.out, keep=1)
+    ck.save(0, qparams, metadata={
+        "arch": cfg.name, "setting": args.setting,
+        "bits_per_value": rep.bits_per_value, "ppl_fp": float(ppl_fp),
+        "ppl_vq": float(ppl_vq), "seconds": dt,
+    })
+    print(f"packed checkpoint written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,208 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh) cell, in seconds (EXPERIMENTS §Roofline):
+
+  compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+  memory     = HLO_bytes / (chips * HBM_bw)
+  collective = collective_bytes / (chips * ICI_bw)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (per-partition
+under SPMD -> multiplied back to whole-job by chips where needed; we report
+per-chip directly). collective_bytes is parsed from the post-SPMD HLO text:
+the sum of output-shape bytes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op (output-size is an upper
+bound within 2x of true link traffic for ring implementations; methodology
+note in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass
+
+from repro.launch.mesh import HARDWARE
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]+|pred)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes per collective kind from (post-SPMD) HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s*([a-z\-]+)\(", line)
+        if not m:
+            continue
+        op = m.group(2)
+        if op in _COLLECTIVES:
+            out[op] += _shape_bytes(m.group(1))
+            counts[op] += 1
+        elif op == "while":
+            pass  # loop bodies appear as separate computations; their
+            # collectives are counted when their lines appear below
+    out["_counts"] = counts
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def while_trip_counts(hlo_text: str) -> list[int]:
+    """Trip counts of while loops (scan over layers / microbatches / attn
+    chunks). Evidence that cost_analysis counts each loop body ONCE — which
+    is why the roofline table is driven by the analytic model below, with
+    cost_analysis reported raw as a cross-check (EXPERIMENTS §Roofline)."""
+    trips = []
+    for m in re.finditer(r'known_trip_count"?\s*[:=]\s*\{"?n"?[:=]+"?(\d+)"?\}',
+                         hlo_text):
+        trips.append(int(m.group(1)))
+    return trips
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    model_flops: float
+    dominant: str
+    useful_flops_ratio: float
+
+    def as_dict(self):
+        return self.__dict__.copy()
+
+
+def analyze(cost: dict, coll: dict, *, chips: int, model_flops: float,
+            loop_scale: float = 1.0) -> Roofline:
+    """cost: compiled.cost_analysis() dict (per-partition on SPMD)."""
+    flops = float(cost.get("flops", 0.0)) * loop_scale
+    raw_bytes = float(cost.get("bytes accessed", 0.0)) * loop_scale
+    cbytes = float(coll.get("total", 0)) * loop_scale
+    compute_s = flops / HARDWARE["peak_flops_bf16"]
+    memory_s = raw_bytes / HARDWARE["hbm_bw"]
+    # per-chip collective bytes over ~3 usable ICI links on a v5e torus
+    collective_s = cbytes / (3 * HARDWARE["ici_bw"])
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    per_chip_model_flops = model_flops / chips
+    ratio = per_chip_model_flops / flops if flops else 0.0
+    return Roofline(compute_s, memory_s, collective_s, flops, raw_bytes,
+                    cbytes, per_chip_model_flops, dominant, ratio)
+
+
+def model_flops_train(n_params_active: float, tokens: float) -> float:
+    return 6.0 * n_params_active * tokens
+
+
+def model_flops_decode(n_params_active: float, batch: float) -> float:
+    return 2.0 * n_params_active * batch
+
+
+# ---------------------------------------------------------------------------
+# Analytic cost model — exact from config shapes; drives the §Roofline table
+# ---------------------------------------------------------------------------
+
+def analytic_cell(cfg, shape, *, chips: int, dp: int, tp: int,
+                  n_total: int, n_active: int, microbatches: int = 1,
+                  vq_bytes_per_param: float | None = None,
+                  weight_payload_bytes: float | None = None,
+                  kv_bytes: float = 2.0) -> dict:
+    """Per-chip per-step FLOPs / HBM bytes / collective bytes.
+
+    Derivation notes inline; all terms are per chip. ``vq_bytes_per_param``
+    replaces the dense bf16 weight payload for VQ serving cells.
+    """
+    B, S, kind = shape.global_batch, shape.seq_len, shape.kind
+    L = cfg.n_layers + cfg.n_encoder_layers
+    D = cfg.d_model
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    Bdp = max(1, B // dp)  # rows per data shard
+    w_bytes = (vq_bytes_per_param if vq_bytes_per_param is not None else 2.0)
+    P_bytes = (weight_payload_bytes if weight_payload_bytes is not None
+               else n_total * w_bytes)
+    attn_free = cfg.attention_free
+
+    if kind == "train":
+        T = B * S
+        flops = 6.0 * n_active * T * 1.33 / chips           # +remat refwd
+        if not attn_free:
+            # fwd 4*B*S^2*H*hd per layer (QK^T + PV), causal /2; bwd 2x; +remat
+            flops += 16.0 * B * S * S * H * hd * L / 2 / chips
+        # params: streamed per microbatch (FSDP all-gather) + grad/opt traffic
+        bytes_ = (microbatches * n_total * 2 + 36.0 * n_total) / chips
+        # activations: ~12 R/W of (B,S,D) bf16 per layer incl. recompute
+        bytes_ += 12.0 * Bdp * S * D * L * 2 / tp  # act work split over TP
+        # collectives: grad ring all-reduce (f32) + 2 TP all-reduces/layer.
+        # MoE uses the shard_map EP schedule (models/moe.py): dispatch is
+        # local (tokens already TP-replicated), combine is ONE psum of the
+        # (Bdp, S, D) output per layer — same cost as the dense TP
+        # all-reduce, so no extra term (before §Perf it.3 this was a
+        # token all-to-all of K copies: +4*Bdp*S*K*D*2*L).
+        coll = 8.0 * n_total * 4 / chips
+        coll += 4.0 * L * Bdp * S * D * 2 * microbatches / microbatches
+    elif kind == "prefill":
+        T = B * S
+        flops = 2.0 * n_active * T / chips
+        if not attn_free:
+            flops += 4.0 * B * S * S * H * hd * L / 2 / chips
+        bytes_ = P_bytes / chips
+        bytes_ += 10.0 * Bdp * S * D * L * 2 / tp
+        bytes_ += 2.0 * Bdp * S * KV * hd * 2 * L / tp  # KV cache write
+        coll = 4.0 * L * Bdp * S * D * 2  # MoE combine folded in (see above)
+    else:  # decode: one token for every sequence in the batch
+        flops = 2.0 * n_active * B / chips
+        if not attn_free:
+            flops += 4.0 * B * H * hd * S * L / chips       # attend to cache
+        bytes_ = P_bytes / chips                            # weights, once
+        if not attn_free:
+            bytes_ += 2.0 * B * S * KV * hd * kv_bytes * L / chips  # KV read
+        if cfg.family in ("ssm", "hybrid"):
+            d_inner = cfg.ssm_expand * D
+            bytes_ += 2.0 * B * d_inner * cfg.ssm_state * 4 * L / chips
+        coll = 4.0 * L * Bdp * 1 * D * 2                    # TP all-reduces
+        coll += 2.0 * Bdp * cfg.padded_vocab * 4 / tp       # logits reduce
+
+    compute_s = flops / HARDWARE["peak_flops_bf16"]
+    memory_s = bytes_ / HARDWARE["hbm_bw"]
+    collective_s = coll / (3 * HARDWARE["ici_bw"])
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful_s = (model_flops_train(n_active, B * S) / chips
+                if kind == "train" else
+                (2.0 * n_active * (B * S if kind == "prefill" else B) / chips)
+                ) / HARDWARE["peak_flops_bf16"]
+    bound = max(terms.values())
+    return {
+        "flops": flops, "hbm_bytes": bytes_, "coll_bytes": coll,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "dominant": dominant,
+        "step_lower_bound_s": bound,
+        "useful_compute_s": useful_s,
+        "roofline_fraction": useful_s / bound if bound > 0 else 0.0,
+    }

@@ -1,0 +1,120 @@
+"""Training launcher: mesh setup, sharded state, supervised fault-tolerant
+loop with checkpointing and straggler monitoring.
+
+On the CPU container this runs tiny smoke configs end-to-end; on a real
+TPU/TRN deployment the same entrypoint runs per-host under the cluster
+scheduler (jax.distributed.initialize is called when COORDINATOR_ADDRESS is
+set) with the production mesh from launch/mesh.py.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+      --steps 50 --global-batch 8 --seq-len 64 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import ARCHS, SMOKE
+from repro.data.synthetic import SyntheticStream
+from repro.models import common as cm, model_zoo
+from repro.runtime import fault_tolerance as ft
+from repro.runtime.elastic import build_mesh, plan_mesh
+from repro.runtime.straggler import StragglerMonitor
+from repro.train import optimizer as opt
+from repro.train.train_step import TrainState, init_state, make_train_step
+
+
+def maybe_init_distributed():
+    if os.environ.get("COORDINATOR_ADDRESS"):
+        jax.distributed.initialize()
+
+
+def shardings_for(mesh, model, state_shapes):
+    pspecs = model.param_specs()
+
+    def ns(shapes, specs):
+        specs = cm.sanitize_specs(shapes, specs, mesh)
+        return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+    return TrainState(
+        params=ns(state_shapes.params, pspecs),
+        opt=opt.AdamWState(
+            step=NamedSharding(mesh, P()),
+            m=ns(state_shapes.opt.m, pspecs),
+            v=ns(state_shapes.opt.v, pspecs),
+            master=ns(state_shapes.opt.master, pspecs),
+        ))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama2-7b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=25)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    args = ap.parse_args()
+
+    maybe_init_distributed()
+    cfg = (SMOKE if args.smoke else ARCHS)[args.arch]
+    if args.smoke:
+        cfg = cfg.scaled(dtype="float32")
+    model = model_zoo.build(cfg)
+    print(f"arch={cfg.name} params={model_zoo.count_params(model)/1e6:.1f}M "
+          f"devices={len(jax.devices())}")
+
+    plan = plan_mesh(len(jax.devices()), model_parallel=args.model_parallel)
+    mesh = build_mesh(plan)
+    ocfg = opt.OptConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                         total_steps=args.steps)
+    state_shapes = jax.eval_shape(
+        lambda k: init_state(model, k, ocfg), jax.random.PRNGKey(0))
+    state_sh = shardings_for(mesh, model, state_shapes)
+
+    with mesh:
+        state = jax.jit(
+            lambda k: init_state(model, k, ocfg),
+            out_shardings=state_sh)(jax.random.PRNGKey(0))
+        step_fn_jit = jax.jit(
+            make_train_step(model, ocfg, microbatches=args.microbatches),
+            donate_argnums=(0,))
+
+        stream = SyntheticStream(cfg.vocab_size, seq_len=args.seq_len,
+                                 global_batch=args.global_batch)
+        ckpt = Checkpointer(args.ckpt_dir, keep=3, async_save=True)
+        monitor = StragglerMonitor()
+
+        def one_step(state, i):
+            t0 = time.perf_counter()
+            batch = {"tokens": stream.next()}
+            state, metrics = step_fn_jit(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            rep = monitor.record(i, time.perf_counter() - t0)
+            if i % 10 == 0:
+                print(f"step {i}: loss={float(metrics['loss']):.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"{'STRAGGLER' if rep.is_straggler else ''}", flush=True)
+            return state
+
+        res = ft.supervise(
+            state=state, step_fn=one_step, ckpt=ckpt,
+            total_steps=args.steps, checkpoint_every=args.checkpoint_every,
+            heartbeat_path=os.path.join(args.ckpt_dir, "heartbeat.json"))
+        print(f"done: {res.steps_done} steps, {res.restarts} restarts, "
+              f"{res.straggler_flags} straggler flags")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,260 @@
+"""GQA attention: init/specs/apply, flash-style chunked softmax, KV cache.
+
+Layout convention: activations (B, S, D); q/k/v (B, S, H, hd).
+The chunked path (two-level scan with online softmax) keeps the score tile
+at (B, KV, G, Tq, Ts) so 32k-token prefill fits VMEM-scale working sets —
+the pure-JAX analogue of flash attention; a Pallas version is a §Perf item.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+NEG_INF = -1e30
+
+# Flash-attention backend: "xla" (portable two-level scan, the default and
+# the dry-run path) or "pallas" (kernels/flash_attention.py — the TPU fast
+# path; runs in interpret mode off-TPU). Set via set_flash_impl().
+_FLASH_IMPL = {"impl": "xla"}
+
+
+def set_flash_impl(impl: str):
+    assert impl in ("xla", "pallas")
+    _FLASH_IMPL["impl"] = impl
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32, d_in: int | None = None):
+    D = d_in or cfg.d_model
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": cm.dense_init(ks[0], D, H * hd, dtype=dtype),
+        "wk": cm.dense_init(ks[1], D, KV * hd, dtype=dtype),
+        "wv": cm.dense_init(ks[2], D, KV * hd, dtype=dtype),
+        "wo": cm.dense_init(ks[3], H * hd, cfg.d_model, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def specs(cfg: ModelConfig):
+    s = {
+        "wq": P("data", "model"),
+        "wk": P("data", "model"),
+        "wv": P("data", "model"),
+        "wo": P("model", "data"),
+    }
+    if cfg.qkv_bias:
+        s.update({"bq": P("model"), "bk": P("model"), "bv": P("model")})
+    if cfg.qk_norm:
+        s.update({"q_norm": P(None), "k_norm": P(None)})
+    return s
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, KV, hd)
+    v: jax.Array
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+# ---------------------------------------------------------------------------
+# softmax attention cores
+# ---------------------------------------------------------------------------
+
+def _plain_attention(q, k, v, mask):
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,hd), mask broadcastable (B,1,1,Sq,Sk).
+
+    Inputs stay in their storage dtype (bf16 caches are NOT up-cast — a
+    32k-seq cache slice in f32 would double decode HBM); accumulation is
+    f32 via preferred_element_type.
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qh = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qh, k,
+                   preferred_element_type=jnp.float32)
+    s = s / jnp.sqrt(hd).astype(jnp.float32)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool, q_offset=0,
+                    q_chunk: int = 512, kv_chunk: int = 1024):
+    """Two-level chunked attention with online softmax (memory O(tile))."""
+    if _FLASH_IMPL["impl"] == "pallas" and q_offset == 0:
+        from repro.kernels.flash_attention import flash_attention_tpu
+        on_tpu = jax.default_backend() == "tpu"
+        return flash_attention_tpu(q, k, v, causal=causal,
+                                   interpret=not on_tpu)
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    Tq = min(q_chunk, Sq)
+    Ts = min(kv_chunk, Sk)
+    assert Sq % Tq == 0 and Sk % Ts == 0
+    nq, nk = Sq // Tq, Sk // Ts
+    scale = 1.0 / jnp.sqrt(hd).astype(jnp.float32)
+
+    qh = q.reshape(B, nq, Tq, KV, G, hd).transpose(1, 0, 3, 4, 2, 5)
+    # (nq, B, KV, G, Tq, hd)
+    kh = k.reshape(B, nk, Ts, KV, hd).transpose(1, 0, 3, 2, 4)  # (nk,B,KV,Ts,hd)
+    vh = v.reshape(B, nk, Ts, KV, hd).transpose(1, 0, 3, 2, 4)
+
+    k_pos = jnp.arange(Sk).reshape(nk, Ts)
+
+    def q_block(args):
+        qi, qb = args  # qb: (B, KV, G, Tq, hd)
+        q_pos = q_offset + qi * Tq + jnp.arange(Tq)
+
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            kb, vb, kp = xs
+
+            def compute(carry):
+                m, l, acc = carry
+                s = jnp.einsum("bkgqh,bksh->bkgqs", qb.astype(jnp.float32),
+                               kb.astype(jnp.float32)) * scale
+                if causal:
+                    msk = kp[None, :] <= q_pos[:, None]  # (Tq, Ts)
+                    s = jnp.where(msk[None, None, None], s, NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                alpha = jnp.exp(m - m_new)
+                p = jnp.exp(s - m_new[..., None])
+                l2 = l * alpha + jnp.sum(p, axis=-1)
+                acc2 = acc * alpha[..., None] + jnp.einsum(
+                    "bkgqs,bksh->bkgqh", p, vb.astype(jnp.float32))
+                return m_new, l2, acc2
+
+            if causal and nk >= 8:
+                # causal chunk skip: kv chunks strictly after this q block
+                # are fully masked — lax.cond skips their compute at run
+                # time, halving long-context attention FLOPs (§Perf it.7).
+                # Gated to nk >= 8: at short seq the cond's extra backward
+                # residuals cost ~1 GiB while attention is <0.1% of step
+                # FLOPs (dbrx train_4k measurement).
+                needed = kp[0] <= q_pos[-1]
+                carry = jax.lax.cond(needed, compute, lambda c: c, carry)
+            else:
+                carry = compute(carry)
+            return carry, None
+
+        m0 = jnp.full((B, KV, G, Tq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, Tq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, Tq, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (kh, vh, k_pos))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(q_block, (jnp.arange(nq), qh))  # (nq,B,KV,G,Tq,hd)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full layer apply
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p, cfg: ModelConfig, x, kv_x=None):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    kv_x = x if kv_x is None else kv_x
+    Skv = kv_x.shape[1]
+    q = x @ p["wq"]
+    k = kv_x @ p["wk"]
+    v = kv_x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, Skv, KV, hd)
+    v = v.reshape(B, Skv, KV, hd)
+    if cfg.qk_norm:
+        q = cm.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = cm.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def apply(
+    p,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    pos: jax.Array | int = 0,
+    cache: KVCache | None = None,
+    causal: bool = True,
+    use_rope: bool = True,
+    flash_threshold: int = 2048,
+):
+    """Self-attention. Returns (y, new_cache).
+
+    * prefill/train: x is (B, S, D); if a cache is given the fresh K/V are
+      written at positions [pos, pos+S).
+    * decode: x is (B, 1, D); attends over cache[:pos+1].
+    """
+    B, S, D = x.shape
+    q, k, v = _project_qkv(p, cfg, x)
+    pos_arr = (jnp.asarray(pos) + jnp.arange(S))[None, :]  # (1, S)
+    if use_rope:
+        q = cm.apply_rope(q, jnp.broadcast_to(pos_arr, (B, S)), cfg.rope_theta)
+        k = cm.apply_rope(k, jnp.broadcast_to(pos_arr, (B, S)), cfg.rope_theta)
+
+    if cache is not None:
+        ck = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, jnp.asarray(pos), 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, jnp.asarray(pos), 0, 0))
+        new_cache = KVCache(ck, cv)
+        if S == 1:
+            # decode: attend over the whole cache with a length mask
+            Sk = ck.shape[1]
+            valid = (jnp.arange(Sk) <= jnp.asarray(pos))[None, None, None, None, :]
+            o = _plain_attention(q, ck, cv, valid)
+            return (o.reshape(B, S, -1) @ p["wo"]).astype(x.dtype), new_cache
+        k, v = ck[:, : S + 0], cv[:, : S + 0]  # prefill from position 0
+    else:
+        new_cache = None
+
+    if S > flash_threshold:
+        o = flash_attention(q, k, v, causal=causal)
+    else:
+        Sk = k.shape[1]
+        if causal:
+            msk = (jnp.arange(Sk)[None, :] <= jnp.arange(S)[:, None])
+            msk = msk[None, None, None]
+        else:
+            msk = jnp.ones((1, 1, 1, S, Sk), bool)
+        o = _plain_attention(q, k, v, msk)
+    y = o.reshape(B, S, -1) @ p["wo"]
+    return y.astype(x.dtype), new_cache
+
+
+def cross_apply(p, cfg: ModelConfig, x, memory, *, flash_threshold=2048):
+    """Cross-attention (whisper decoder): keys/values from encoder memory."""
+    B, S, D = x.shape
+    q, k, v = _project_qkv(p, cfg, x, kv_x=memory)
+    Sk = memory.shape[1]
+    if max(S, Sk) > flash_threshold:
+        o = flash_attention(q, k, v, causal=False)
+    else:
+        msk = jnp.ones((1, 1, 1, S, Sk), bool)
+        o = _plain_attention(q, k, v, msk)
+    return (o.reshape(B, S, -1) @ p["wo"]).astype(x.dtype)

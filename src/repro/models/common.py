@@ -1,0 +1,141 @@
+"""Shared neural-net primitives: norms, RoPE, dense init, partition helpers.
+
+Parameter convention: plain nested dicts of jax arrays. For every init
+function there is a parallel ``*_specs`` function returning the same tree of
+``jax.sharding.PartitionSpec`` leaves; tests assert the treedefs match for
+every architecture, and ``sanitize_specs`` downgrades any axis that does not
+divide the mesh (e.g. 8 GQA kv-head dims on a 16-way model axis) to
+replicated, so every config compiles on every mesh.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+Params = dict
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, scale: float | None = None,
+               dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); pos: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = pos[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# activations
+# ---------------------------------------------------------------------------
+
+def act_fn(name: str):
+    if name in ("swiglu", "geglu"):
+        # gate nonlinearity used by gated MLPs
+        return jax.nn.silu if name == "swiglu" else jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    if name == "gelu":
+        return jax.nn.gelu
+    raise ValueError(name)
+
+
+def is_gated(name: str) -> bool:
+    return name in ("swiglu", "geglu")
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+def sanitize_specs(shapes: Any, specs: Any, mesh: Mesh) -> Any:
+    """Drop mesh axes from any spec dim that does not divide the dim size.
+
+    Production note: this is how the framework stays mesh-portable — GQA
+    kv-projections, odd vocab sizes, small expert counts etc. silently fall
+    back to replication on meshes they do not divide.
+    """
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(shape, spec):
+        dims = shape.shape if hasattr(shape, "shape") else shape
+        if spec is None:
+            return P()
+        out = []
+        for i, names in enumerate(spec):
+            if names is None:
+                out.append(None)
+                continue
+            tup = names if isinstance(names, tuple) else (names,)
+            # drop axes absent from this mesh (e.g. 'pod' on single-pod)
+            tup = tuple(n for n in tup if n in axis_size)
+            if not tup:
+                out.append(None)
+                continue
+            total = 1
+            for n in tup:
+                total *= axis_size[n]
+            if i < len(dims) and dims[i] % total == 0:
+                out.append(tup if len(tup) > 1 else tup[0])
+            else:
+                out.append(None)
+        return P(*out)
+
+    return jax.tree.map(fix, shapes, specs)
+
+
+def tree_size_bytes(tree: Any) -> int:
+    return sum(
+        x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)
+        if hasattr(x, "size")
+    )

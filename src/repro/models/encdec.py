@@ -1,0 +1,213 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, encoder_seq, d_model). Learned absolute
+positional embeddings (whisper uses sinusoidal-enc/learned-dec; we use
+learned for both — backbone-equivalent), GELU MLPs, biased QKV, pre-norm.
+
+Cache layout: per-decoder-layer self-attention KV (stacked) + cross K/V
+computed once from the encoder memory at prefill.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common as cm, mlp
+
+
+class EncDecCache(NamedTuple):
+    self_kv: attention.KVCache      # stacked (L, B, S, KV, hd)
+    cross_k: jax.Array              # (L, B, S_enc, KV, hd)
+    cross_v: jax.Array
+
+
+def _enc_block_init(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attention.init(k1, cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "ffn": mlp.init(k2, cfg, dtype),
+    }
+
+
+def _dec_block_init(key, cfg, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "self_attn": attention.init(k1, cfg, dtype),
+        "norm_x": jnp.ones((cfg.d_model,), dtype),
+        "cross_attn": attention.init(k2, cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+        "ffn": mlp.init(k3, cfg, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = cm.DTYPES[cfg.dtype]
+    ks = jax.random.split(key, 6)
+    L_enc, L_dec = cfg.n_encoder_layers, cfg.n_layers
+    return {
+        "embed": cm.embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dtype),
+        "pos_enc": cm.embed_init(ks[1], cfg.encoder_seq, cfg.d_model, dtype),
+        "pos_dec": cm.embed_init(ks[2], cfg.max_seq_len, cfg.d_model, dtype),
+        "enc_layers": jax.vmap(lambda k: _enc_block_init(k, cfg, dtype))(
+            jax.random.split(ks[3], L_enc)),
+        "dec_layers": jax.vmap(lambda k: _dec_block_init(k, cfg, dtype))(
+            jax.random.split(ks[4], L_dec)),
+        "enc_norm": jnp.ones((cfg.d_model,), dtype),
+        "final_norm": jnp.ones((cfg.d_model,), dtype),
+    }  # lm head tied with embed (whisper)
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    enc_one = {"norm1": P(None), "attn": attention.specs(cfg),
+               "norm2": P(None), "ffn": mlp.specs(cfg)}
+    dec_one = {"norm1": P(None), "self_attn": attention.specs(cfg),
+               "norm_x": P(None), "cross_attn": attention.specs(cfg),
+               "norm2": P(None), "ffn": mlp.specs(cfg)}
+    stack = lambda t: jax.tree.map(lambda s: P(None, *s), t,
+                                   is_leaf=lambda x: isinstance(x, P))
+    return {
+        "embed": P("model", "data"),
+        "pos_enc": P(None, "data"),
+        "pos_dec": P(None, "data"),
+        "enc_layers": stack(enc_one),
+        "dec_layers": stack(dec_one),
+        "enc_norm": P(None),
+        "final_norm": P(None),
+    }
+
+
+def encode(params, cfg: ModelConfig, frames: jax.Array, remat=True):
+    """frames: (B, S_enc, D) precomputed embeddings (conv frontend stub)."""
+    x = frames + params["pos_enc"][None, : frames.shape[1]].astype(frames.dtype)
+
+    def body(h, layer_p):
+        from repro.core import vq_linear as vql_mod
+        layer_p = vql_mod.dequant_tree(layer_p, cm.DTYPES[cfg.dtype])
+        a, _ = attention.apply(
+            layer_p["attn"], cfg, cm.rmsnorm(h, layer_p["norm1"], cfg.norm_eps),
+            causal=False, use_rope=False)
+        h = h + a
+        f = mlp.apply(layer_p["ffn"], cfg,
+                      cm.rmsnorm(h, layer_p["norm2"], cfg.norm_eps))
+        return h + f, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return cm.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    L = cfg.n_layers
+    kv1 = attention.init_cache(cfg, batch, max_len, dtype)
+    stack = lambda x: jnp.broadcast_to(x[None], (L, *x.shape))
+    cross_shape = (L, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd)
+    return EncDecCache(
+        self_kv=jax.tree.map(stack, kv1),
+        cross_k=jnp.zeros(cross_shape, dtype),
+        cross_v=jnp.zeros(cross_shape, dtype),
+    )
+
+
+def cache_specs(cfg: ModelConfig):
+    kv = attention.KVCache(
+        k=P(None, ("pod", "data"), None, "model", None),
+        v=P(None, ("pod", "data"), None, "model", None))
+    cross = P(None, ("pod", "data"), None, "model", None)
+    return EncDecCache(self_kv=kv, cross_k=cross, cross_v=cross)
+
+
+def _cross_kv(layer_p, cfg, memory):
+    B, S, _ = memory.shape
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    k = (memory @ layer_p["wk"]).reshape(B, S, KV, hd)
+    v = (memory @ layer_p["wv"]).reshape(B, S, KV, hd)
+    if cfg.qkv_bias:
+        k = k + layer_p["bk"].reshape(KV, hd)
+        v = v + layer_p["bv"].reshape(KV, hd)
+    return k, v
+
+
+def _cross_attend(layer_p, cfg, x, ck, cv):
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = (x @ layer_p["wq"]).reshape(B, S, H, hd)
+    if cfg.qkv_bias:
+        q = q + layer_p["bq"].reshape(H, hd)
+    msk = jnp.ones((1, 1, 1, S, ck.shape[1]), bool)
+    o = attention._plain_attention(q, ck, cv, msk)
+    return (o.reshape(B, S, H * hd) @ layer_p["wo"]).astype(x.dtype)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, frames=None, memory=None,
+            pos=0, cache=None, remat: bool = True, last_only: bool = False):
+    """Decoder forward. Provide ``frames`` (prefill/train; encoder runs) or a
+    cache whose cross K/V were filled by a previous prefill."""
+    from repro.core import vq_linear as vql_mod
+    assert frames is not None or cache is not None
+    top = {k: v for k, v in params.items()
+           if k not in ("enc_layers", "dec_layers")}
+    params = {**params, **vql_mod.dequant_tree(top, cm.DTYPES[cfg.dtype])}
+    if frames is not None:
+        memory = encode(params, cfg, frames, remat)
+
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    pos_ids = jnp.asarray(pos) + jnp.arange(S)
+    x = x + params["pos_dec"][pos_ids][None].astype(x.dtype)
+    from repro.models.transformer import _axes_size, _dp_axes
+    dp = _dp_axes()
+    if dp and B % _axes_size(dp) == 0:  # see hybrid.py — avoid replication
+        x = jax.lax.with_sharding_constraint(x, P(dp, None, None))
+        if memory is not None:
+            memory = jax.lax.with_sharding_constraint(
+                memory, P(dp, None, None))
+
+    fill_cross = cache is not None and memory is not None
+
+    def body(h, xs):
+        from repro.core import vq_linear as vql_mod
+        layer_p, self_c, ck_in, cv_in = xs
+        layer_p = vql_mod.dequant_tree(layer_p, cm.DTYPES[cfg.dtype])
+        a, new_kv = attention.apply(
+            layer_p["self_attn"], cfg,
+            cm.rmsnorm(h, layer_p["norm1"], cfg.norm_eps),
+            pos=pos, cache=self_c, use_rope=False)
+        h = h + a
+        if memory is not None:
+            ck, cv = _cross_kv(layer_p["cross_attn"], cfg, memory)
+        else:
+            ck, cv = ck_in, cv_in
+        c = _cross_attend(layer_p["cross_attn"], cfg,
+                          cm.rmsnorm(h, layer_p["norm_x"], cfg.norm_eps),
+                          ck.astype(h.dtype), cv.astype(h.dtype))
+        h = h + c
+        f = mlp.apply(layer_p["ffn"], cfg,
+                      cm.rmsnorm(h, layer_p["norm2"], cfg.norm_eps))
+        new_ck = ck if fill_cross else ck_in
+        new_cv = cv if fill_cross else cv_in
+        return h + f, (new_kv, new_ck, new_cv)
+
+    body_fn = jax.checkpoint(body) if remat else body
+    if cache is not None:
+        xs = (params["dec_layers"], cache.self_kv, cache.cross_k, cache.cross_v)
+    else:
+        L = cfg.n_layers
+        dummy = jnp.zeros((L, B, 1, cfg.n_kv_heads, cfg.hd), x.dtype)
+        xs = (params["dec_layers"], None, dummy, dummy)
+    x, (new_kv, new_ck, new_cv) = jax.lax.scan(body_fn, x, xs)
+
+    if last_only:
+        x = x[:, -1:]
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["embed"].T).astype(jnp.float32)
+    new_cache = (EncDecCache(new_kv, new_ck, new_cv)
+                 if cache is not None else None)
+    return logits, new_cache, jnp.zeros((), jnp.float32)

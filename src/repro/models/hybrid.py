@@ -1,0 +1,176 @@
+"""Zamba2-style hybrid: Mamba2 trunk + one *shared* attention block applied
+every ``shared_attn_every`` layers with per-invocation LoRA deltas.
+
+The shared block consumes concat(hidden, initial_embedding) (2*d_model) as in
+Zamba, projects back to d_model, and its weights are stored once — each of
+the ``n_groups`` invocations adds its own low-rank (LoRA) delta to the QKV
+projections. The trunk is scanned two-level: outer scan over groups, inner
+scan over the group's mamba layers, so HLO stays O(1) in depth.
+
+n_layers is the mamba-layer count and must be divisible by
+``shared_attn_every`` (configs round 81 -> 78; DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common as cm, ssm
+
+
+def _groups(cfg: ModelConfig) -> tuple[int, int]:
+    per = cfg.shared_attn_every
+    assert per > 0 and cfg.n_layers % per == 0, (cfg.n_layers, per)
+    return cfg.n_layers // per, per
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = cm.DTYPES[cfg.dtype]
+    n_groups, per = _groups(cfg)
+    D, H, KV, hd, r = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                       cfg.shared_attn_lora_rank)
+    ks = jax.random.split(key, 6)
+    layer_keys = jax.random.split(ks[0], cfg.n_layers).reshape(n_groups, per, 2)
+    params = {
+        "embed": cm.embed_init(ks[1], cfg.padded_vocab, D, dtype),
+        "final_norm": jnp.ones((D,), dtype),
+        "lm_head": cm.dense_init(ks[2], D, cfg.padded_vocab, dtype=dtype),
+        # trunk: (n_groups, per, ...) stacked mamba layers
+        "mamba": jax.vmap(jax.vmap(
+            lambda k: {"norm": jnp.ones((D,), dtype),
+                       "mixer": ssm.init(k, cfg, dtype)}))(layer_keys),
+        # shared attention block over concat(h, emb0) = 2D input
+        "shared": {
+            "norm": jnp.ones((2 * D,), dtype),
+            "attn": attention.init(ks[3], cfg, dtype, d_in=2 * D),
+        },
+        # per-invocation LoRA on q/k/v
+        "lora": {
+            name: {
+                "A": (jax.random.normal(ks[4], (n_groups, 2 * D, r)) * 0.02
+                      ).astype(dtype),
+                "B": jnp.zeros((n_groups, r, dim), dtype),
+            }
+            for name, dim in (("q", H * hd), ("k", KV * hd), ("v", KV * hd))
+        },
+    }
+    return params
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    n_groups, per = _groups(cfg)
+    mamba_one = {"norm": P(None), "mixer": ssm.specs(cfg)}
+    return {
+        "embed": P("model", "data"),
+        "final_norm": P(None),
+        "lm_head": P("data", "model"),
+        "mamba": jax.tree.map(lambda s: P(None, None, *s), mamba_one,
+                              is_leaf=lambda x: isinstance(x, P)),
+        "shared": {"norm": P(None), "attn": attention.specs(cfg)},
+        "lora": {
+            name: {"A": P(None, "data", None), "B": P(None, None, "model")}
+            for name in ("q", "k", "v")
+        },
+    }
+
+
+class HybridCache(NamedTuple):
+    mamba: Any        # SSMCache stacked (n_groups, per, ...)
+    attn: Any         # KVCache stacked (n_groups, ...)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    n_groups, per = _groups(cfg)
+    m1 = ssm.init_cache(cfg, batch)
+    a1 = attention.init_cache(cfg, batch, max_len, dtype)
+    return HybridCache(
+        mamba=jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None, None], (n_groups, per, *x.shape)),
+            m1),
+        attn=jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_groups, *x.shape)), a1),
+    )
+
+
+def cache_specs(cfg: ModelConfig, seq_shard: bool = False):
+    # mamba state: (n_groups, per, B, P, hd, N); conv: (n_groups, per, B, w-1, ch)
+    m = ssm.SSMCache(
+        h=P(None, None, ("pod", "data"), "model", None, None),
+        conv=P(None, None, ("pod", "data"), None, "model"),
+    )
+    seq_axis = "data" if seq_shard else None
+    batch_axes = ("pod",) if seq_shard else ("pod", "data")
+    a = attention.KVCache(
+        k=P(None, batch_axes, seq_axis, "model", None),
+        v=P(None, batch_axes, seq_axis, "model", None),
+    )
+    return HybridCache(mamba=m, attn=a)
+
+
+def _shared_attn(p, lora_g, cfg: ModelConfig, h, emb0, *, pos, kv_cache):
+    """One invocation of the shared block with this group's LoRA delta."""
+    xin = jnp.concatenate([h, emb0], axis=-1)
+    xin = cm.rmsnorm(xin, p["norm"], cfg.norm_eps)
+    attn_p = dict(p["attn"])
+    for name, wname in (("q", "wq"), ("k", "wk"), ("v", "wv")):
+        A, B = lora_g[name]["A"], lora_g[name]["B"]
+        attn_p[wname] = attn_p[wname] + A @ B
+    y, new_kv = attention.apply(attn_p, cfg, xin, pos=pos, cache=kv_cache)
+    return y, new_kv
+
+
+def forward(params, cfg: ModelConfig, tokens, *, pos=0, cache=None,
+            extra_embeds=None, remat: bool = True, last_only: bool = False):
+    from repro.core import vq_linear as vql_mod
+    n_groups, per = _groups(cfg)
+    top = {k: v for k, v in params.items() if k not in ("mamba",)}
+    params = {**params, **vql_mod.dequant_tree(top, cm.DTYPES[cfg.dtype])}
+    x = params["embed"][tokens]
+    # pin batch sharding after the embedding gather — GSPMD otherwise falls
+    # back to replication ("involuntary full rematerialization"), blowing
+    # per-device activations up by the DP degree (§Perf iteration 5)
+    from repro.models.transformer import _axes_size, _dp_axes
+    dp = _dp_axes()
+    if dp and tokens.shape[0] % _axes_size(dp) == 0:
+        x = jax.lax.with_sharding_constraint(x, P(dp, None, None))
+    emb0 = x  # original embedding, re-fed to every shared-block invocation
+
+    cache_in = cache if cache is not None else HybridCache(
+        mamba=jax.tree.map(
+            lambda s: jnp.zeros((n_groups, per, *s.shape[2:]), s.dtype),
+            init_cache(cfg, tokens.shape[0], 8).mamba),
+        attn=None,
+    )
+
+    def group_body(h, xs):
+        from repro.core import vq_linear as vql_mod
+        group_p, lora_g, m_cache, a_cache = xs
+        ha, new_kv = _shared_attn(
+            params["shared"], lora_g, cfg, h, emb0, pos=pos, kv_cache=a_cache)
+        h = h + ha
+
+        def layer_body(hh, layer_xs):
+            lp, lc = layer_xs
+            lp = vql_mod.dequant_tree(lp, cm.DTYPES[cfg.dtype])
+            y, new_c = ssm.apply(lp["mixer"], cfg,
+                                 cm.rmsnorm(hh, lp["norm"], cfg.norm_eps), lc)
+            return hh + y, new_c
+
+        h, new_m = jax.lax.scan(layer_body, h, (group_p, m_cache))
+        return h, (new_m, new_kv)
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    x, (new_m, new_kv) = jax.lax.scan(
+        body, x, (params["mamba"], params["lora"],
+                  cache_in.mamba,
+                  cache_in.attn if cache is not None else None))
+    if last_only:
+        x = x[:, -1:]
+    x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    new_cache = HybridCache(mamba=new_m, attn=new_kv) if cache is not None else None
+    return logits, new_cache, jnp.zeros((), jnp.float32)

@@ -1,0 +1,38 @@
+"""Dense MLP blocks (gated SwiGLU/GeGLU, relu^2, gelu)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32, d_ff: int | None = None):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": cm.dense_init(ks[0], D, F, dtype=dtype),
+        "w_out": cm.dense_init(ks[1], F, D, dtype=dtype),
+    }
+    if cm.is_gated(cfg.activation):
+        p["w_gate"] = cm.dense_init(ks[2], D, F, dtype=dtype)
+    return p
+
+
+def specs(cfg: ModelConfig):
+    s = {"w_in": P("data", "model"), "w_out": P("model", "data")}
+    if cm.is_gated(cfg.activation):
+        s["w_gate"] = P("data", "model")
+    return s
+
+
+def apply(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    act = cm.act_fn(cfg.activation)
+    h = x @ p["w_in"]
+    if cm.is_gated(cfg.activation):
+        h = act(x @ p["w_gate"]) * h
+    else:
+        h = act(h)
+    return (h @ p["w_out"]).astype(x.dtype)

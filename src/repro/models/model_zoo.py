@@ -1,0 +1,78 @@
+"""Unified model API: build(cfg) -> Model with init/specs/forward/cache.
+
+``forward(params, batch, cache=None, pos=0)`` where batch is a dict:
+  tokens  : (B, S) int32            — always present
+  frames  : (B, S_enc, D)           — audio family (conv-frontend stub)
+  patches : (B, n_image_tokens, D)  — vlm family (CLIP stub)
+Returns (logits, new_cache, aux_loss).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, transformer, vlm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_params: Callable[[jax.Array], Any]
+    param_specs: Callable[[], Any]
+    forward: Callable[..., tuple]
+    init_cache: Callable[..., Any]
+    cache_specs: Callable[..., Any]
+
+
+def build(cfg: ModelConfig) -> Model:
+    if cfg.family == "audio":
+        def fwd(params, batch, cache=None, pos=0, remat=True, **kw):
+            return encdec.forward(
+                params, cfg, batch["tokens"], frames=batch.get("frames"),
+                pos=pos, cache=cache, remat=remat, **kw)
+        return Model(cfg, lambda k: encdec.init_params(cfg, k),
+                     lambda: encdec.param_specs(cfg), fwd,
+                     lambda b, s, dtype=jnp.bfloat16: encdec.init_cache(cfg, b, s, dtype),
+                     lambda **kw: encdec.cache_specs(cfg))
+    if cfg.family == "hybrid":
+        def fwd(params, batch, cache=None, pos=0, remat=True, **kw):
+            return hybrid.forward(params, cfg, batch["tokens"], pos=pos,
+                                  cache=cache, remat=remat, **kw)
+        return Model(cfg, lambda k: hybrid.init_params(cfg, k),
+                     lambda: hybrid.param_specs(cfg), fwd,
+                     lambda b, s, dtype=jnp.bfloat16: hybrid.init_cache(cfg, b, s, dtype),
+                     lambda **kw: hybrid.cache_specs(cfg, **kw))
+    if cfg.family == "vlm":
+        def fwd(params, batch, cache=None, pos=0, remat=True, **kw):
+            return vlm.forward(params, cfg, batch["tokens"],
+                               patches=batch.get("patches"), pos=pos,
+                               cache=cache, remat=remat, **kw)
+        return Model(cfg, lambda k: vlm.init_params(cfg, k),
+                     lambda: vlm.param_specs(cfg), fwd,
+                     lambda b, s, dtype=jnp.bfloat16: vlm.init_cache(cfg, b, s, dtype),
+                     lambda **kw: vlm.cache_specs(cfg))
+
+    # dense / moe / ssm(xlstm)
+    def fwd(params, batch, cache=None, pos=0, remat=True, **kw):
+        return transformer.forward(params, cfg, batch["tokens"], pos=pos,
+                                   cache=cache, remat=remat, **kw)
+    return Model(cfg, lambda k: transformer.init_params(cfg, k),
+                 lambda: transformer.param_specs(cfg), fwd,
+                 lambda b, s, dtype=jnp.bfloat16: transformer.init_cache(cfg, b, s, dtype),
+                 lambda **kw: transformer.cache_specs(cfg))
+
+
+def abstract_params(model: Model, key=None):
+    """ShapeDtypeStruct tree of the parameters (no allocation)."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(model.init_params, key)
+
+
+def count_params(model: Model) -> int:
+    import math
+    shapes = abstract_params(model)
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(shapes))

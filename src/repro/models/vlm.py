@@ -1,0 +1,42 @@
+"""Phi-3-vision style VLM: transformer LM backbone + stubbed CLIP frontend.
+
+Per the assignment, the vision tower is a STUB: ``input_specs`` provides
+precomputed patch embeddings (B, n_image_tokens, d_model) which are simply
+prepended to the text embedding sequence (the projector is folded into the
+stub). Decode steps operate on the text tail with the usual KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+
+
+def init_params(cfg: ModelConfig, key):
+    return transformer.init_params(cfg, key)
+
+
+def param_specs(cfg: ModelConfig):
+    return transformer.param_specs(cfg)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return transformer.init_cache(cfg, batch, max_len, dtype)
+
+
+def cache_specs(cfg: ModelConfig):
+    return transformer.cache_specs(cfg)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, patches=None, pos=0,
+            cache=None, remat: bool = True, **kw):
+    """tokens: (B, S_text); patches: (B, n_image_tokens, D) or None (decode).
+
+    Returns logits over the full (image + text) sequence at prefill; callers
+    slice off the image positions for loss/sampling.
+    """
+    return transformer.forward(
+        params, cfg, tokens, pos=pos, cache=cache, extra_embeds=patches,
+        remat=remat, **kw)

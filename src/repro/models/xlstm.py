@@ -1,0 +1,256 @@
+"""xLSTM blocks (Beck et al. 2024): mLSTM (matrix memory) and sLSTM (scalar
+memory), with stabilized exponential gating.
+
+Faithful-but-minimal reading of the paper's block diagrams (DESIGN.md §5):
+  * mLSTM block: x + down( mLSTM_core(up(x)) * silu(up_gate(x)) ), where the
+    core keeps a per-head matrix state C (hd x hd), normalizer n and
+    stabilizer m, updated sequentially (lax.scan over time).
+  * sLSTM block: x + core(norm(x)) followed by x + gated_ffn(norm(x)); the
+    core has block-diagonal (per-head) recurrent connections.
+
+Sequential scans are the correctness reference; a chunk-parallel mLSTM is a
+§Perf item (the mLSTM update is the same algebra as linear attention).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+class MLSTMCache(NamedTuple):
+    C: jax.Array  # (B, H, hd, hd)
+    n: jax.Array  # (B, H, hd)
+    m: jax.Array  # (B, H)
+
+
+def _mlstm_dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    H = cfg.n_heads
+    hd = d_inner // H
+    return d_inner, H, hd
+
+
+def mlstm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    D = cfg.d_model
+    d_inner, H, hd = _mlstm_dims(cfg)
+    ks = jax.random.split(key, 9)
+    return {
+        "up": cm.dense_init(ks[0], D, d_inner, dtype=dtype),
+        "up_gate": cm.dense_init(ks[1], D, d_inner, dtype=dtype),
+        "wq": cm.dense_init(ks[2], d_inner, d_inner, dtype=dtype),
+        "wk": cm.dense_init(ks[3], d_inner, d_inner, dtype=dtype),
+        "wv": cm.dense_init(ks[4], d_inner, d_inner, dtype=dtype),
+        "w_i": cm.dense_init(ks[5], d_inner, H, scale=0.02, dtype=jnp.float32),
+        "w_f": cm.dense_init(ks[6], d_inner, H, scale=0.02, dtype=jnp.float32),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        "b_f": jnp.full((H,), 3.0, jnp.float32),  # open forget gates at init
+        "w_o": cm.dense_init(ks[7], d_inner, d_inner, dtype=dtype),
+        "down": cm.dense_init(ks[8], d_inner, D, dtype=dtype),
+    }
+
+
+def mlstm_specs(cfg: ModelConfig):
+    return {
+        "up": P("data", "model"), "up_gate": P("data", "model"),
+        "wq": P("data", "model"), "wk": P("data", "model"),
+        "wv": P("data", "model"),
+        "w_i": P("data", None), "w_f": P("data", None),
+        "b_i": P(None), "b_f": P(None),
+        "w_o": P("data", "model"),
+        "down": P("model", "data"),
+    }
+
+
+def mlstm_cache(cfg: ModelConfig, batch: int) -> MLSTMCache:
+    _, H, hd = _mlstm_dims(cfg)
+    return MLSTMCache(
+        C=jnp.zeros((batch, H, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, H, hd), jnp.float32),
+        m=jnp.full((batch, H), -1e30, jnp.float32),
+    )
+
+
+def _mlstm_core(q, k, v, i_raw, f_raw, state: MLSTMCache):
+    """Sequential stabilized mLSTM. q/k/v: (B,S,H,hd); gates: (B,S,H)."""
+    B, S, H, hd = q.shape
+    k = k / jnp.sqrt(hd)
+    f_log = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, ft = xs  # (B,H,hd) x3, (B,H) x2
+        m_new = jnp.maximum(ft + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + m - m_new)
+        C = f_p[..., None, None] * C + i_p[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :])  # (B,H,hd_v,hd_k)
+        n = f_p[..., None] * n + i_p[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt)), 1.0)
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    xs = (
+        q.transpose(1, 0, 2, 3).astype(jnp.float32),
+        k.transpose(1, 0, 2, 3).astype(jnp.float32),
+        v.transpose(1, 0, 2, 3).astype(jnp.float32),
+        i_raw.transpose(1, 0, 2).astype(jnp.float32),
+        f_log.transpose(1, 0, 2),
+    )
+    # two-level chunked scan: BPTT over a flat scan stores the (hd x hd)
+    # matrix state for EVERY step (~78 GB/device at train_4k); checkpointing
+    # chunk boundaries bounds residuals to S/chunk states (§Perf iteration 4)
+    Q = 64
+    if S % Q == 0 and S > Q:
+        def chunk_body(carry, chunk_xs):
+            c2, hs2 = jax.lax.scan(step, carry, chunk_xs)
+            return c2, hs2
+
+        chunk_fn = jax.checkpoint(chunk_body)
+        xs_c = jax.tree.map(
+            lambda t: t.reshape(S // Q, Q, *t.shape[1:]), xs)
+        (C, n, m), hs = jax.lax.scan(chunk_fn, (state.C, state.n, state.m),
+                                     xs_c)
+        hs = hs.reshape(S, *hs.shape[2:])
+    else:
+        (C, n, m), hs = jax.lax.scan(step, (state.C, state.n, state.m), xs)
+    return hs.transpose(1, 0, 2, 3), MLSTMCache(C, n, m)  # (B,S,H,hd)
+
+
+def mlstm_apply(p, cfg: ModelConfig, x, cache: MLSTMCache | None = None):
+    B, S, D = x.shape
+    d_inner, H, hd = _mlstm_dims(cfg)
+    u = x @ p["up"]
+    g = x @ p["up_gate"]
+    q = (u @ p["wq"]).reshape(B, S, H, hd)
+    k = (u @ p["wk"]).reshape(B, S, H, hd)
+    v = (u @ p["wv"]).reshape(B, S, H, hd)
+    i_raw = u.astype(jnp.float32) @ p["w_i"] + p["b_i"]
+    f_raw = u.astype(jnp.float32) @ p["w_f"] + p["b_f"]
+    state = cache if cache is not None else mlstm_cache(cfg, B)
+    h, new_state = _mlstm_core(q, k, v, i_raw, f_raw, state)
+    o = jax.nn.sigmoid(u @ p["w_o"])
+    h = (h.reshape(B, S, d_inner).astype(x.dtype) * o) * jax.nn.silu(g)
+    y = h @ p["down"]
+    return y.astype(x.dtype), (new_state if cache is not None else None)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+class SLSTMCache(NamedTuple):
+    c: jax.Array  # (B, D)
+    n: jax.Array  # (B, D)
+    h: jax.Array  # (B, D)
+    m: jax.Array  # (B, D)
+
+
+def slstm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    D, H = cfg.d_model, cfg.n_heads
+    hd = D // H
+    ks = jax.random.split(key, 9)
+    ff = cm.dense_init  # alias
+    p = {
+        "w_z": ff(ks[0], D, D, dtype=dtype), "w_i": ff(ks[1], D, D, dtype=dtype),
+        "w_f": ff(ks[2], D, D, dtype=dtype), "w_o": ff(ks[3], D, D, dtype=dtype),
+        # block-diagonal recurrent mats, per head
+        "r_z": (jax.random.normal(ks[4], (H, hd, hd)) / jnp.sqrt(hd)).astype(dtype),
+        "r_i": (jax.random.normal(ks[5], (H, hd, hd)) / jnp.sqrt(hd)).astype(dtype),
+        "r_f": (jax.random.normal(ks[6], (H, hd, hd)) / jnp.sqrt(hd)).astype(dtype),
+        "r_o": (jax.random.normal(ks[7], (H, hd, hd)) / jnp.sqrt(hd)).astype(dtype),
+        "b_z": jnp.zeros((D,), dtype), "b_i": jnp.zeros((D,), dtype),
+        "b_f": jnp.full((D,), 3.0, dtype), "b_o": jnp.zeros((D,), dtype),
+    }
+    # gated FFN of the sLSTM block (proj factor 4/3, gated)
+    ffdim = max(128, int(round(cfg.d_model * 4 / 3 / 128)) * 128)
+    p["ffn"] = {
+        "w_in": ff(ks[8], D, ffdim, dtype=dtype),
+        "w_gate": ff(jax.random.fold_in(ks[8], 1), D, ffdim, dtype=dtype),
+        "w_out": ff(jax.random.fold_in(ks[8], 2), ffdim, D, dtype=dtype),
+    }
+    p["ffn_norm"] = jnp.ones((D,), dtype)
+    return p
+
+
+def slstm_specs(cfg: ModelConfig):
+    return {
+        "w_z": P("data", "model"), "w_i": P("data", "model"),
+        "w_f": P("data", "model"), "w_o": P("data", "model"),
+        "r_z": P("model", None, None), "r_i": P("model", None, None),
+        "r_f": P("model", None, None), "r_o": P("model", None, None),
+        "b_z": P("model"), "b_i": P("model"), "b_f": P("model"),
+        "b_o": P("model"),
+        "ffn": {"w_in": P("data", "model"), "w_gate": P("data", "model"),
+                "w_out": P("model", "data")},
+        "ffn_norm": P(None),
+    }
+
+
+def slstm_cache(cfg: ModelConfig, batch: int) -> SLSTMCache:
+    D = cfg.d_model
+    z = jnp.zeros((batch, D), jnp.float32)
+    return SLSTMCache(c=z, n=z, h=z, m=jnp.full((batch, D), -1e30, jnp.float32))
+
+
+def _blockdiag(h, R):
+    """h: (B, D) -> per-head matmul with R: (H, hd, hd)."""
+    B = h.shape[0]
+    H, hd, _ = R.shape
+    return jnp.einsum("bhi,hij->bhj", h.reshape(B, H, hd),
+                      R.astype(h.dtype)).reshape(B, H * hd)
+
+
+def slstm_apply(p, cfg: ModelConfig, x, cache: SLSTMCache | None = None):
+    B, S, D = x.shape
+    wz = x @ p["w_z"] + p["b_z"]
+    wi = x @ p["w_i"] + p["b_i"]
+    wf = x @ p["w_f"] + p["b_f"]
+    wo = x @ p["w_o"] + p["b_o"]
+    state = cache if cache is not None else slstm_cache(cfg, B)
+
+    def step(carry, xs):
+        c, n, h, m = carry
+        z_x, i_x, f_x, o_x = xs  # (B, D) each
+        z = jnp.tanh(z_x.astype(jnp.float32) + _blockdiag(h, p["r_z"]))
+        it = i_x.astype(jnp.float32) + _blockdiag(h, p["r_i"])
+        ft = jax.nn.log_sigmoid(f_x.astype(jnp.float32) + _blockdiag(h, p["r_f"]))
+        ot = jax.nn.sigmoid(o_x.astype(jnp.float32) + _blockdiag(h, p["r_o"]))
+        m_new = jnp.maximum(ft + m, it)
+        i_p = jnp.exp(it - m_new)
+        f_p = jnp.exp(ft + m - m_new)
+        c = f_p * c + i_p * z
+        n = f_p * n + i_p
+        h = ot * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    xs = tuple(t.transpose(1, 0, 2) for t in (wz, wi, wf, wo))
+    Q = 64
+    if S % Q == 0 and S > Q:  # chunked BPTT, same rationale as mLSTM
+        def chunk_body(carry, chunk_xs):
+            return jax.lax.scan(step, carry, chunk_xs)
+
+        xs_c = jax.tree.map(lambda t: t.reshape(S // Q, Q, *t.shape[1:]), xs)
+        (c, n, h, m), hs = jax.lax.scan(
+            jax.checkpoint(chunk_body), tuple(state), xs_c)
+        hs = hs.reshape(S, *hs.shape[2:])
+    else:
+        (c, n, h, m), hs = jax.lax.scan(step, tuple(state), xs)
+    y = hs.transpose(1, 0, 2).astype(x.dtype)  # (B,S,D)
+    new_cache = SLSTMCache(c, n, h, m) if cache is not None else None
+    return y, new_cache
+
+
+def slstm_ffn(p, cfg: ModelConfig, x):
+    h = jax.nn.silu(x @ p["ffn"]["w_gate"]) * (x @ p["ffn"]["w_in"])
+    return (h @ p["ffn"]["w_out"]).astype(x.dtype)

@@ -1,0 +1,71 @@
+"""Elastic re-meshing: recompute the device mesh after capacity changes.
+
+Policy: keep the model (TP) axis fixed at the largest power-of-two that the
+architecture's head/ffn dims divide (TP changes invalidate too much - layout,
+collectives, kernel tuning), absorb capacity changes into the data axis, and
+drop remainder devices into a hot-spare pool. Parameters re-enter through
+``reshard`` (device_put with the new NamedSharding) after a checkpoint
+restore — the checkpoint layout is mesh-agnostic (full logical arrays).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    pod: int
+    data: int
+    model: int
+    spares: int
+
+    @property
+    def used(self) -> int:
+        return self.pod * self.data * self.model
+
+
+def plan_mesh(n_devices: int, *, model_parallel: int = 16,
+              pods: int = 1) -> MeshPlan:
+    """Largest (pod, data, model) grid fitting n_devices with fixed TP."""
+    assert n_devices >= model_parallel * pods
+    per_pod = n_devices // pods
+    data = per_pod // model_parallel
+    used = pods * data * model_parallel
+    return MeshPlan(pod=pods, data=data, model=model_parallel,
+                    spares=n_devices - used)
+
+
+def degrade_plan(plan: MeshPlan, lost_devices: int) -> MeshPlan:
+    """Re-plan after losing devices; spares absorb losses first."""
+    remaining = plan.used + plan.spares - lost_devices
+    return plan_mesh(remaining, model_parallel=plan.model, pods=plan.pod)
+
+
+def build_mesh(plan: MeshPlan, devices=None) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    used = devices[: plan.used]
+    import numpy as np
+    arr = np.array(used).reshape(plan.pod, plan.data, plan.model)
+    if plan.pod == 1:
+        return Mesh(arr[0], ("data", "model"))
+    return Mesh(arr, ("pod", "data", "model"))
+
+
+def reshard(tree, specs, mesh: Mesh):
+    """Move a (restored) tree onto a new mesh.
+
+    Specs are sanitized against the new mesh first: any dim a degraded mesh
+    no longer divides falls back to replication rather than failing the
+    restart (the same portability rule as models/common.sanitize_specs).
+    """
+    from repro.models.common import sanitize_specs
+
+    specs = sanitize_specs(tree, specs, mesh)
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, tree, specs)

@@ -1,0 +1,35 @@
+"""Prefill / decode step builders.
+
+Parameter trees may contain ``VQLinear`` leaves (bit-packed GPTVQ weights);
+the model assemblies dequantize them per layer-slice inside their layer scan
+(core/vq_linear.dequant_tree), so these steps are agnostic to whether the
+model is dense bf16 or VQ-compressed — the paper's technique is a drop-in
+serving format.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import Model
+
+
+def make_prefill(model: Model, last_only: bool = False):
+    """last_only=True returns only next-token logits — required at 32k+
+    sequence lengths where full (B, S, V) logits would dominate memory."""
+    def prefill(params, batch, cache):
+        logits, cache, _ = model.forward(params, batch, cache=cache, pos=0,
+                                         last_only=last_only)
+        return logits, cache
+
+    return prefill
+
+
+def make_decode(model: Model):
+    def decode(params, tokens, cache, pos):
+        """tokens: (B, 1); pos: scalar position of the new token."""
+        logits, cache, _ = model.forward(
+            params, {"tokens": tokens}, cache=cache, pos=pos)
+        return logits, cache
+
+    return decode

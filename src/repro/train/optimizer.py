@@ -1,0 +1,119 @@
+"""AdamW with fp32 master weights, global-norm clipping, cosine schedule.
+
+Pure JAX (optax is unavailable offline). State layout is FSDP-friendly:
+``m``/``v``/``master`` mirror the parameter tree, so the parameter partition
+specs apply leaf-for-leaf (launch/dryrun.py relies on this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+    master: Any  # fp32 master copy of (possibly bf16) params
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    # storage dtype for the m/v moment buffers: "float32" (default) or
+    # "bfloat16" (halves optimizer HBM at >100B scale; math stays f32 —
+    # §Perf iteration 6, dbrx-132b train_4k)
+    moment_dtype: str = "float32"
+    # dtype of the microbatch gradient accumulator (the updates themselves
+    # are f32 in the optimizer); bf16 halves a params-sized temp buffer
+    grad_accum_dtype: str = "float32"
+
+
+def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+        1 + jnp.cos(math.pi * prog))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params, cfg: OptConfig | None = None) -> AdamWState:
+    mdt = jnp.dtype((cfg.moment_dtype if cfg else "float32"))
+    f32 = lambda p: p.astype(jnp.float32)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        master=jax.tree.map(f32, params),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(tree)))
+
+
+def update(cfg: OptConfig, grads, state: AdamWState, param_dtype=None):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    b1, b2 = cfg.b1, cfg.b2
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1**t
+    bc2 = 1 - b2**t
+
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_f = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v_f = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        u = (m_f / bc1) / (jnp.sqrt(v_f / bc2) + cfg.eps)
+        # decoupled weight decay on non-1D params (skip norms/biases)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        p = p - lr * (u + wd * p)
+        return m_f.astype(mdt), v_f.astype(mdt), p
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_p = treedef.flatten_up_to(state.master)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_m = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_master = jax.tree.unflatten(treedef, [o[2] for o in out])
+    dt = param_dtype
+    new_params = jax.tree.map(
+        lambda p: p if dt is None else p.astype(dt), new_master)
+    new_state = AdamWState(step=step, m=new_m, v=new_v, master=new_master)
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+def state_specs(param_specs) -> AdamWState:
+    """Partition specs for the optimizer state (mirrors the params)."""
+    from jax.sharding import PartitionSpec as P
+    return AdamWState(
+        step=P(),
+        m=param_specs,
+        v=param_specs,
+        master=param_specs,
+    )

@@ -1,0 +1,134 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import codebook as cb
+from repro.core import packing
+from repro.core.bpv import VQConfig, group_size_for_overhead
+from repro.core.gptvq import gptvq_quantize_matrix, plan_groups
+from repro.core.quant import rtn_quantize
+from repro.models.common import sanitize_specs
+from repro.runtime.straggler import StragglerMonitor
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+class TestPackingProps:
+    @settings(**SETTINGS)
+    @given(bits=st.sampled_from([1, 2, 3, 4, 5, 8]),
+           n_words=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+    def test_roundtrip_any_codes(self, bits, n_words, seed):
+        lanes = 32 // packing.container_bits(bits)
+        n = n_words * lanes
+        rng = np.random.RandomState(seed)
+        codes = rng.randint(0, 2**bits, size=n).astype(np.int32)
+        back = packing.unpack(packing.pack(jnp.asarray(codes), bits), bits, n)
+        np.testing.assert_array_equal(np.asarray(back), codes)
+
+
+class TestQuantProps:
+    @settings(**SETTINGS)
+    @given(bits=st.sampled_from([2, 3, 4, 8]),
+           gs=st.sampled_from([16, 32, 64]),
+           seed=st.integers(0, 1000))
+    def test_rtn_elementwise_error_bound(self, bits, gs, seed):
+        W = jax.random.normal(jax.random.PRNGKey(seed), (8, 64)) * 3.0
+        Q = rtn_quantize(W, bits, gs)
+        wg = W.reshape(8, 64 // gs, gs)
+        hi = jnp.maximum(wg.max(-1), 0.0)
+        lo = jnp.minimum(wg.min(-1), 0.0)
+        step = (hi - lo) / (2**bits - 1)
+        err = jnp.abs(W - Q).reshape(8, 64 // gs, gs).max(-1)
+        assert bool(jnp.all(err <= step * 0.5 + 1e-5))
+
+    @settings(**SETTINGS)
+    @given(d=st.sampled_from([1, 2, 4]), b=st.sampled_from([2, 3]),
+           target=st.sampled_from([0.125, 0.25, 0.5]))
+    def test_overhead_target_met(self, d, b, target):
+        gs = group_size_for_overhead(d, b, target, 8)
+        cfg = VQConfig(d=d, bits_per_dim=b, group_size=gs)
+        assert cfg.codebook_bits_per_value <= target + 1e-9
+
+    @settings(**SETTINGS)
+    @given(r=st.sampled_from([16, 32, 64]), c=st.sampled_from([128, 256, 384]),
+           d=st.sampled_from([1, 2, 4]),
+           gs=st.sampled_from([256, 1024, 4096]))
+    def test_plan_groups_invariants(self, r, c, d, gs):
+        cfg = VQConfig(d=d, bits_per_dim=2, group_size=gs)
+        cg, rg = plan_groups(r, c, cfg)
+        assert c % cg == 0 and cg % d == 0 and r % rg == 0
+
+
+class TestEMProps:
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 1000), k=st.sampled_from([4, 8, 16]))
+    def test_em_objective_monotone(self, seed, k):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+        X = jax.random.normal(ks[0], (128, 2))
+        Hw = jnp.abs(jax.random.normal(ks[1], (128, 2))) + 0.05
+        C = cb.mahalanobis_init(X, k)
+        prev = float(cb.em_objective(X, Hw, C))
+        for _ in range(3):
+            C = cb.em(X, Hw, C, iters=1)
+            cur = float(cb.em_objective(X, Hw, C))
+            assert cur <= prev + 1e-4 * abs(prev) + 1e-6
+            prev = cur
+
+    @settings(**SETTINGS)
+    @given(seed=st.integers(0, 500))
+    def test_assignment_is_argmin(self, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        X = jax.random.normal(ks[0], (64, 2))
+        Hw = jnp.abs(jax.random.normal(ks[1], (64, 2))) + 0.1
+        C = jax.random.normal(ks[2], (8, 2))
+        idx = cb.assign(X, Hw, C)
+        dist = cb.weighted_distances(X, Hw, C)
+        chosen = jnp.take_along_axis(dist, idx[:, None], 1)[:, 0]
+        assert bool(jnp.all(chosen <= dist.min(-1) + 1e-5))
+
+
+class TestGPTVQProps:
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 100), d=st.sampled_from([1, 2]),
+           b=st.sampled_from([2, 3]))
+    def test_indices_in_range_and_reconstruction_consistent(self, seed, d, b):
+        key = jax.random.PRNGKey(seed)
+        W = jax.random.normal(key, (16, 128))
+        cfg = VQConfig(d=d, bits_per_dim=b, group_size=1024, em_iters=5,
+                       codebook_update_iters=0)
+        res = gptvq_quantize_matrix(W, jnp.eye(128), cfg)
+        assert int(res.arrays.indices.min()) >= 0
+        assert int(res.arrays.indices.max()) < cfg.k
+        np.testing.assert_allclose(np.asarray(res.reconstruct()),
+                                   np.asarray(res.arrays.Q), rtol=1e-4,
+                                   atol=1e-5)
+
+
+class TestShardingProps:
+    @settings(**SETTINGS)
+    @given(dims=st.tuples(st.sampled_from([1, 3, 8, 16, 64, 100]),
+                          st.sampled_from([1, 5, 16, 48, 256])))
+    def test_sanitize_always_divisible(self, dims):
+        import os
+        from jax.sharding import PartitionSpec as P
+        import jax as j
+        mesh = j.make_mesh((1, 1), ("data", "model"))
+        shapes = {"w": jax.ShapeDtypeStruct(dims, jnp.float32)}
+        specs = {"w": P("data", "model")}
+        fixed = sanitize_specs(shapes, specs, mesh)
+        for i, ax in enumerate(fixed["w"]):
+            if ax is not None:
+                assert dims[i] % 1 == 0  # axis size 1 always divides
+
+
+class TestStragglerProps:
+    @settings(**SETTINGS)
+    @given(base=st.floats(0.01, 10.0), n=st.integers(10, 50))
+    def test_constant_durations_never_flag(self, base, n):
+        mon = StragglerMonitor(min_samples=4)
+        for i in range(n):
+            rep = mon.record(i, base)
+            assert not rep.is_straggler

@@ -1,0 +1,286 @@
+"""Unit tests for the GPTVQ core: uniform quant, Hessian, EM, Algorithm 1."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codebook as cb
+from repro.core import hessian as hes
+from repro.core import normalization as norm
+from repro.core import packing
+from repro.core.bpv import PAPER_SETTINGS, VQConfig, group_size_for_overhead
+from repro.core.codebook_compress import codebook_update, quantize_codebooks, svd_compress
+from repro.core.gptvq import gptvq_quantize_matrix, layer_error, plan_groups
+from repro.core.quant import gptq_quantize, rtn_quantize, rtn_int_weights, dequantize_int
+
+jax.config.update("jax_enable_x64", False)
+
+
+def make_problem(r=64, c=128, n=512, seed=0):
+    """Random weights + correlated calibration inputs -> (W, X, H, U)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    W = jax.random.normal(k1, (r, c)) * (1.0 + jax.random.uniform(k2, (r, 1)))
+    # correlated inputs (realistic activations have structure)
+    A = jax.random.normal(k3, (c, c)) / np.sqrt(c)
+    X = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, c)) @ (
+        jnp.eye(c) + 0.5 * A
+    )
+    st = hes.accumulate(hes.init_hessian(c), X)
+    H = hes.finalize(st)
+    U = hes.inv_hessian_cholesky(H)
+    return W, X, H, U
+
+
+class TestUniform:
+    def test_rtn_error_bound(self):
+        W, *_ = make_problem()
+        Q = rtn_quantize(W, bits=4, group_size=32)
+        # max error bounded by half a quantization step per group
+        scale_bound = (
+            (W.reshape(64, 4, 32).max(-1) - jnp.minimum(W.reshape(64, 4, 32).min(-1), 0))
+            / 15.0
+        )
+        err = jnp.abs(W - Q).reshape(64, 4, 32).max(-1)
+        assert jnp.all(err <= scale_bound * 0.51 + 1e-6)
+
+    def test_int_roundtrip(self):
+        W, *_ = make_problem()
+        q, p = rtn_int_weights(W, bits=3, group_size=64)
+        assert q.min() >= 0 and q.max() <= 7
+        np.testing.assert_allclose(
+            dequantize_int(q, p), rtn_quantize(W, 3, 64), rtol=1e-5, atol=1e-5
+        )
+
+    def test_gptq_identity_hessian_equals_rtn(self):
+        W, *_ = make_problem(32, 64)
+        U = jnp.eye(64)
+        Q1 = gptq_quantize(W, U, bits=4, group_size=64, block_size=32)
+        Q2 = rtn_quantize(W, 4, 64)
+        np.testing.assert_allclose(np.asarray(Q1), np.asarray(Q2), atol=1e-5)
+
+    def test_gptq_beats_rtn_on_layer_error(self):
+        W, X, H, U = make_problem()
+        Qr = rtn_quantize(W, bits=3, group_size=128)
+        Qg = gptq_quantize(W, U, bits=3, group_size=128, block_size=64)
+        e_rtn = layer_error(W, Qr, H)
+        e_gptq = layer_error(W, Qg, H)
+        assert e_gptq < e_rtn * 0.9, (e_gptq, e_rtn)
+
+    @pytest.mark.parametrize("gs,B", [(32, 64), (64, 64), (128, 64), (64, 32)])
+    def test_gptq_group_block_combos(self, gs, B):
+        W, X, H, U = make_problem()
+        Q = gptq_quantize(W, U, bits=4, group_size=gs, block_size=B)
+        assert jnp.all(jnp.isfinite(Q))
+        assert layer_error(W, Q, H) < layer_error(W, jnp.zeros_like(W), H)
+
+
+class TestCodebook:
+    def test_em_monotone_objective(self):
+        key = jax.random.PRNGKey(0)
+        X = jax.random.normal(key, (256, 2))
+        Hw = jnp.abs(jax.random.normal(jax.random.PRNGKey(1), (256, 2))) + 0.1
+        C = cb.mahalanobis_init(X, 8)
+        prev = cb.em_objective(X, Hw, C)
+        for _ in range(5):
+            C = cb.em(X, Hw, C, iters=1)
+            cur = cb.em_objective(X, Hw, C)
+            assert cur <= prev + 1e-5
+            prev = cur
+
+    def test_em_identity_weights_is_kmeans(self):
+        # with Hw=1 the M-step is the plain mean -> matches manual kmeans step
+        key = jax.random.PRNGKey(0)
+        X = jax.random.normal(key, (128, 2))
+        Hw = jnp.ones_like(X)
+        C0 = cb.mahalanobis_init(X, 4)
+        idx = cb.assign(X, Hw, C0)
+        C1 = cb.m_step(X, Hw, idx, C0)
+        for m in range(4):
+            mask = idx == m
+            if mask.sum() > 0:
+                np.testing.assert_allclose(
+                    np.asarray(C1[m]), np.asarray(X[mask].mean(0)), rtol=1e-4, atol=1e-5
+                )
+
+    def test_mahalanobis_init_shape_and_spread(self):
+        X = jax.random.normal(jax.random.PRNGKey(2), (1000, 4))
+        C = cb.mahalanobis_init(X, 16)
+        assert C.shape == (16, 4)
+        assert jnp.all(jnp.isfinite(C))
+        # seeds should be distinct points for continuous data
+        assert len(np.unique(np.asarray(C), axis=0)) == 16
+
+    def test_kmeanspp_init(self):
+        X = jax.random.normal(jax.random.PRNGKey(3), (200, 2))
+        Hw = jnp.ones_like(X)
+        C = cb.kmeanspp_init(X, Hw, 8, jax.random.PRNGKey(0))
+        assert C.shape == (8, 2)
+        assert len(np.unique(np.asarray(C), axis=0)) == 8
+
+
+class TestBPV:
+    def test_paper_settings_bpv(self):
+        # paper Table 2 configurations hit their nominal bpv exactly
+        expect = {
+            "2.125bpv_1d": 2.125, "2.125bpv_2d": 2.125,
+            "2.25bpv_1d": 2.25, "2.25bpv_2d": 2.25, "2.25bpv_4d": 2.25,
+            "3.125bpv_1d": 3.125, "3.125bpv_2d": 3.125,
+            "4.125bpv_1d": 4.125, "4.125bpv_2d": 4.125,
+        }
+        for name, bpv in expect.items():
+            assert abs(PAPER_SETTINGS[name].bits_per_value - bpv) < 1e-9, name
+
+    def test_group_size_for_overhead_matches_paper(self):
+        # paper §4.1: 2D, 2 bits/dim, int8 codebook, 0.125 bpv -> 2048 weights
+        assert group_size_for_overhead(2, 2, 0.125, 8) == 2048
+
+    def test_scale_overhead(self):
+        cfg = VQConfig(d=2, bits_per_dim=2, group_size=2048, scale_block=32)
+        assert abs(cfg.bits_per_value - (2.125 + 4 / 32)) < 1e-9
+
+
+class TestPacking:
+    @pytest.mark.parametrize("bits", [2, 3, 4, 5, 8])
+    def test_roundtrip(self, bits):
+        n = 4096
+        idx = np.random.RandomState(0).randint(0, 2**bits, size=n).astype(np.int32)
+        words = packing.pack(jnp.asarray(idx), bits)
+        back = packing.unpack(words, bits, n)
+        np.testing.assert_array_equal(np.asarray(back), idx)
+        # container accounting
+        cb_ = packing.container_bits(bits)
+        assert words.size == n * cb_ // 32
+
+
+class TestNormalization:
+    def test_roundtrip_accuracy(self):
+        W = jax.random.normal(jax.random.PRNGKey(0), (32, 128)) * jnp.exp2(
+            jax.random.randint(jax.random.PRNGKey(1), (32, 1), -6, 6).astype(jnp.float32)
+        )
+        bs = norm.compute_block_scales(W, block=16, bits=4)
+        Wn = norm.normalize(W, bs)
+        # normalized blocks should be O(1)
+        assert jnp.max(jnp.abs(Wn)) < 4.0
+        np.testing.assert_allclose(
+            np.asarray(norm.denormalize(Wn, bs)), np.asarray(W), rtol=1e-5
+        )
+
+    def test_identity_scales(self):
+        W = jnp.ones((4, 64))
+        bs = norm.identity_scales(W, block=64)
+        np.testing.assert_allclose(np.asarray(bs.expand(64)), 1.0)
+
+
+class TestGPTVQ:
+    def test_plan_groups(self):
+        cfg = VQConfig(d=2, bits_per_dim=2, group_size=2048, group_cols=256)
+        cg, rg = plan_groups(64, 512, cfg)
+        assert cg == 256 and rg == 8
+        # non-divisible columns fall back to a divisor
+        cg, rg = plan_groups(64, 384, cfg)
+        assert 384 % cg == 0
+
+    @pytest.mark.parametrize("name", ["2.125bpv_2d", "3.125bpv_1d", "2.25bpv_4d"])
+    def test_sweep_finite_and_shapes(self, name):
+        cfg = PAPER_SETTINGS[name]
+        cfg = type(cfg)(**{**cfg.__dict__, "em_iters": 10, "codebook_update_iters": 0})
+        W, X, H, U = make_problem(r=32, c=256)
+        res = gptvq_quantize_matrix(W, U, cfg)
+        assert res.arrays.Q.shape == W.shape
+        assert jnp.all(jnp.isfinite(res.arrays.Q))
+        assert res.arrays.indices.shape == (32, 256 // cfg.d)
+        assert int(res.arrays.indices.max()) < cfg.k
+        # reconstruction matches the sweep's Q (same codebooks)
+        np.testing.assert_allclose(
+            np.asarray(res.reconstruct()), np.asarray(res.arrays.Q), rtol=1e-4, atol=1e-5
+        )
+
+    def test_gptvq_beats_datafree_kmeans(self):
+        """Paper Table 1: hessian-aware sweep must beat data-free clustering."""
+        W, X, H, U = make_problem(r=64, c=256)
+        cfg = VQConfig(d=2, bits_per_dim=3, group_size=4096, em_iters=30,
+                       codebook_update_iters=0)
+        res = gptvq_quantize_matrix(W, U, cfg)
+        e_gptvq = float(layer_error(W, res.arrays.Q, H))
+
+        # data-free: plain kmeans per group, no error feedback
+        res_df = gptvq_quantize_matrix(W, jnp.eye(256), cfg)
+        e_df = float(layer_error(W, res_df.arrays.Q, H))
+        assert e_gptvq < e_df, (e_gptvq, e_df)
+
+    def test_higher_d_better_sqnr_at_equal_bpv(self):
+        """Fig. 2: at matched index bits, 2D VQ >= 1D VQ in SQNR (typical)."""
+        W, X, H, U = make_problem(r=64, c=256, seed=3)
+        e = {}
+        for name in ["2.25bpv_1d", "2.25bpv_2d"]:
+            cfg = PAPER_SETTINGS[name]
+            cfg = type(cfg)(**{**cfg.__dict__, "em_iters": 30,
+                               "codebook_update_iters": 0})
+            res = gptvq_quantize_matrix(W, U, cfg)
+            e[name] = float(layer_error(W, res.arrays.Q, H))
+        assert e["2.25bpv_2d"] < e["2.25bpv_1d"], e
+
+    def test_codebook_update_reduces_error(self):
+        W, X, H, U = make_problem(r=32, c=256)
+        cfg = VQConfig(d=2, bits_per_dim=2, group_size=2048, em_iters=20,
+                       codebook_update_iters=30)
+        res = gptvq_quantize_matrix(W, U, cfg)
+        e0 = float(layer_error(W, res.arrays.Q, H))
+        res2 = codebook_update(res, W, H)
+        e1 = float(layer_error(W, res2.arrays.Q, H))
+        assert e1 <= e0 * 1.001, (e0, e1)
+
+    def test_codebook_quantization_small_effect(self):
+        W, X, H, U = make_problem(r=32, c=256)
+        cfg = VQConfig(d=2, bits_per_dim=2, group_size=2048, em_iters=20,
+                       codebook_update_iters=0)
+        res = gptvq_quantize_matrix(W, U, cfg)
+        resq = quantize_codebooks(res)
+        # int8 codebooks change reconstruction by <1% relative
+        rel = float(
+            jnp.linalg.norm(resq.arrays.Q - res.arrays.Q)
+            / jnp.linalg.norm(res.arrays.Q)
+        )
+        assert rel < 0.02, rel
+        assert resq.codebook_scale is not None
+
+    def test_svd_compress_runs_and_reconstructs(self):
+        W, X, H, U = make_problem(r=32, c=256)
+        cfg = VQConfig(d=1, bits_per_dim=3, group_size=512, em_iters=20,
+                       codebook_update_iters=0, svd_rank_frac=0.5)
+        res = gptvq_quantize_matrix(W, U, cfg)
+        out, svd = svd_compress(res, W, H)
+        assert jnp.all(jnp.isfinite(out.arrays.Q))
+        assert svd.U.shape[1] == max(1, int(round(0.5 * cfg.k)))
+        # compression should not blow up the error catastrophically
+        e0 = float(layer_error(W, res.arrays.Q, H))
+        e1 = float(layer_error(W, out.arrays.Q, H))
+        assert e1 < 10 * e0 + 1e-6, (e0, e1)
+
+    def test_normalization_path(self):
+        W, X, H, U = make_problem(r=32, c=256, seed=5)
+        # give rows wildly different scales so normalization matters
+        W = W * jnp.exp2(jnp.arange(32, dtype=jnp.float32) % 8 - 4)[:, None]
+        cfg = VQConfig(d=2, bits_per_dim=3, group_size=4096, em_iters=20,
+                       scale_block=16, codebook_update_iters=0)
+        res = gptvq_quantize_matrix(W, U, cfg)
+        assert jnp.all(jnp.isfinite(res.arrays.Q))
+        cfg_off = type(cfg)(**{**cfg.__dict__, "scale_block": 0})
+        res_off = gptvq_quantize_matrix(W, U, cfg_off)
+        e_on = float(layer_error(W, res.arrays.Q, H))
+        e_off = float(layer_error(W, res_off.arrays.Q, H))
+        # with extreme per-row scale variation, normalization should help
+        assert e_on < e_off, (e_on, e_off)
+
+    def test_d1_gptvq_close_to_gptq_nonuniform_vs_uniform(self):
+        """1D VQ with k=2^b centroids is a nonuniform grid; with error
+        feedback it should be at least competitive with uniform GPTQ."""
+        W, X, H, U = make_problem(r=64, c=256, seed=7)
+        cfg = VQConfig(d=1, bits_per_dim=3, group_size=512, em_iters=50,
+                       codebook_update_iters=0)
+        res = gptvq_quantize_matrix(W, U, cfg)
+        e_vq = float(layer_error(W, res.arrays.Q, H))
+        Qg = gptq_quantize(W, U, bits=3, group_size=128, block_size=128)
+        e_gptq = float(layer_error(W, Qg, H))
+        assert e_vq < e_gptq * 1.5, (e_vq, e_gptq)

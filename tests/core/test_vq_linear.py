@@ -1,0 +1,65 @@
+"""VQLinear packing / dequantization consistency with the quantizer output."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hessian as hes
+from repro.core.bpv import VQConfig
+from repro.core.codebook_compress import quantize_codebooks
+from repro.core.gptvq import gptvq_quantize_matrix
+from repro.core import vq_linear as vql_mod
+
+from tests.core.test_quant_core import make_problem
+
+
+@pytest.mark.parametrize(
+    "d,b,gs,scale_block",
+    [(1, 2, 256, 0), (2, 2, 2048, 0), (2, 3, 4096, 16), (4, 2, 4096, 0)],
+)
+def test_roundtrip_matches_reconstruction(d, b, gs, scale_block):
+    W, X, H, U = make_problem(r=32, c=256)
+    cfg = VQConfig(d=d, bits_per_dim=b, group_size=gs, em_iters=10,
+                   scale_block=scale_block, codebook_update_iters=0)
+    res = quantize_codebooks(gptvq_quantize_matrix(W, U, cfg))
+    vql = vql_mod.from_vq_result(res)
+    # unpack -> same indices
+    np.testing.assert_array_equal(
+        np.asarray(vql_mod.unpack_indices(vql)), np.asarray(res.arrays.indices)
+    )
+    # dequantize -> same fake-quantized weights (codebooks already int8)
+    Wq = vql_mod.dequantize(vql, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(Wq), np.asarray(res.arrays.Q), rtol=2e-2, atol=2e-2
+    )
+    # matmul path agrees with dense
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 256))
+    y = vql_mod.apply(vql, x, dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(y), np.asarray(x @ res.arrays.Q.T), rtol=3e-2, atol=3e-2
+    )
+
+
+def test_payload_bytes_matches_bpv():
+    W, X, H, U = make_problem(r=64, c=512)
+    cfg = VQConfig(d=2, bits_per_dim=2, group_size=2048, em_iters=5,
+                   codebook_update_iters=0)
+    res = quantize_codebooks(gptvq_quantize_matrix(W, U, cfg))
+    vql = vql_mod.from_vq_result(res)
+    n_weights = 64 * 512
+    measured_bpv = vql.payload_bytes() * 8 / n_weights
+    # measured includes fp32 codebook scales (small constant); nominal is 2.125
+    assert measured_bpv < cfg.bits_per_value + 0.3, measured_bpv
+    assert measured_bpv >= cfg.index_bits_per_value
+
+
+def test_quantize_array_end_to_end():
+    W, X, H, U = make_problem(r=32, c=256)
+    cfg = VQConfig(d=2, bits_per_dim=3, group_size=4096, em_iters=10,
+                   codebook_update_iters=5)
+    vql = vql_mod.quantize_array(W, H, cfg)
+    Wq = vql_mod.dequantize(vql, jnp.float32)
+    # iid Gaussian weights are the VQ worst case (max entropy); ~0.24 rel
+    # F-norm error at 3 bits/dim is in line with rate-distortion expectations
+    rel = float(jnp.linalg.norm(Wq - W) / jnp.linalg.norm(W))
+    assert rel < 0.3, rel

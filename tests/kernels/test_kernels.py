@@ -1,0 +1,159 @@
+"""Pallas kernel validation: interpret-mode sweeps vs pure-jnp oracles, plus
+consistency with the VQLinear serving path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing
+from repro.core.bpv import VQConfig
+from repro.core import vq_linear as vql_mod
+from repro.kernels import ops, ref
+
+from tests.core.test_quant_core import make_problem
+
+
+def make_vq_inputs(key, *, N, K, d, bits, rows_per_band, group_cols, k_c=None):
+    k_c = k_c or 2 ** (d * bits)
+    n_cg, n_bands = K // group_cols, N // rows_per_band
+    k1, k2 = jax.random.split(key)
+    codes = jax.random.randint(k1, (N, K // d), 0, k_c)
+    code_bits = max(1, (k_c - 1).bit_length())
+    words = jax.vmap(lambda r: packing.pack(r, code_bits))(codes)
+    C = jax.random.normal(k2, (n_cg, n_bands, k_c, d))
+    return words, C, code_bits
+
+
+class TestVQDequantMatmul:
+    @pytest.mark.parametrize(
+        "M,N,K,d,bits,rg,cg",
+        [
+            (8, 64, 256, 2, 2, 8, 256),
+            (16, 128, 512, 2, 2, 8, 256),
+            (8, 64, 256, 1, 3, 4, 256),   # 3-bit codes in 4-bit containers
+            (8, 64, 512, 4, 2, 16, 256),
+            (8, 64, 256, 2, 4, 2, 128),
+        ],
+    )
+    def test_matches_oracle(self, M, N, K, d, bits, rg, cg):
+        key = jax.random.PRNGKey(42)
+        words, C, code_bits = make_vq_inputs(
+            key, N=N, K=K, d=d, bits=bits, rows_per_band=rg, group_cols=cg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (M, K))
+        from repro.kernels.vq_dequant_matmul import vq_dequant_matmul
+        y = vq_dequant_matmul(
+            x, words, C, d=d, k_c=2 ** (d * bits), code_bits=code_bits,
+            container_bits=packing.container_bits(code_bits),
+            rows_per_band=rg, group_cols=cg,
+            tile_m=min(8, M), tile_n=min(64, N), tile_k=min(256, K),
+            interpret=True)
+        y_ref = ref.vq_dequant_matmul_ref(
+            x, words, C, d=d, code_bits=code_bits, rows_per_band=rg,
+            group_cols=cg)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        key = jax.random.PRNGKey(0)
+        words, C, code_bits = make_vq_inputs(
+            key, N=64, K=256, d=2, bits=2, rows_per_band=8, group_cols=256)
+        x = jax.random.normal(jax.random.PRNGKey(1), (8, 256)).astype(dtype)
+        from repro.kernels.vq_dequant_matmul import vq_dequant_matmul
+        y = vq_dequant_matmul(
+            x, words, C, d=2, k_c=16, code_bits=code_bits,
+            container_bits=4, rows_per_band=8, group_cols=256,
+            tile_m=8, tile_n=64, tile_k=256, interpret=True)
+        y_ref = ref.vq_dequant_matmul_ref(
+            x.astype(jnp.float32), words, C, d=2, code_bits=code_bits,
+            rows_per_band=8, group_cols=256)
+        tol = 1e-4 if dtype == jnp.float32 else 2e-2
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=tol, atol=tol)
+
+    def test_consistent_with_vqlinear_serving_path(self):
+        """kernel(x, packed) == x @ dequantize(packed).T for a real quantizer
+        output (end-to-end: GPTVQ -> pack -> kernel)."""
+        W, X, H, U = make_problem(r=64, c=256)
+        cfg = VQConfig(d=2, bits_per_dim=2, group_size=2048, em_iters=10,
+                       codebook_update_iters=0)
+        vql = vql_mod.quantize_array(W, H, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(3), (8, 256))
+        y_kernel = ops.vql_matmul(x, vql, use_pallas=True, interpret=True,
+                                  tile_m=8, tile_n=64, tile_k=256)
+        y_dense = x @ vql_mod.dequantize(vql, jnp.float32).T
+        np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_dense),
+                                   rtol=2e-2, atol=2e-2)
+
+
+class TestVQAssign:
+    @pytest.mark.parametrize("n,d,k", [(256, 2, 16), (1024, 4, 64),
+                                       (512, 1, 8), (2048, 2, 256)])
+    def test_matches_oracle(self, n, d, k):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        x = jax.random.normal(ks[0], (n, d))
+        hw = jnp.abs(jax.random.normal(ks[1], (n, d))) + 0.1
+        C = jax.random.normal(ks[2], (k, d))
+        got = ops.assign(x, hw, C, use_pallas=True, interpret=True, tile_n=256)
+        want = ref.vq_assign_ref(x, hw, C)
+        # ties are legal but measure-zero for continuous data
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_matches_core_codebook_assign(self):
+        """Kernel == the core EM E-step used by Algorithm 1."""
+        from repro.core import codebook as cb
+        ks = jax.random.split(jax.random.PRNGKey(7), 3)
+        x = jax.random.normal(ks[0], (512, 2))
+        hw = jnp.abs(jax.random.normal(ks[1], (512, 2))) + 0.1
+        C = jax.random.normal(ks[2], (16, 2))
+        got = ops.assign(x, hw, C, use_pallas=True, interpret=True)
+        want = cb.assign(x, hw, C)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize(
+        "B,S,H,KV,hd,bq,bk,causal",
+        [
+            (2, 256, 8, 4, 64, 64, 64, True),
+            (2, 256, 8, 4, 64, 64, 64, False),
+            (1, 128, 4, 4, 32, 32, 64, True),   # MHA, uneven blocks
+            (2, 128, 8, 2, 64, 128, 32, True),  # G=4 GQA
+        ],
+    )
+    def test_matches_plain_attention(self, B, S, H, KV, hd, bq, bk, causal):
+        from repro.kernels.flash_attention import flash_attention_tpu
+        from repro.models import attention
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, S, H, hd))
+        k = jax.random.normal(ks[1], (B, S, KV, hd))
+        v = jax.random.normal(ks[2], (B, S, KV, hd))
+        o1 = flash_attention_tpu(q, k, v, causal=causal, block_q=bq,
+                                 block_k=bk, interpret=True)
+        if causal:
+            msk = (jnp.arange(S)[None, :] <= jnp.arange(S)[:, None])[
+                None, None, None]
+        else:
+            msk = jnp.ones((1, 1, 1, S, S), bool)
+        o2 = attention._plain_attention(q, k, v, msk)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        from repro.kernels.flash_attention import flash_attention_tpu
+        from repro.models import attention
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (1, 128, 4, 32)).astype(dtype)
+        k = jax.random.normal(ks[1], (1, 128, 2, 32)).astype(dtype)
+        v = jax.random.normal(ks[2], (1, 128, 2, 32)).astype(dtype)
+        o = flash_attention_tpu(q, k, v, causal=True, block_q=64,
+                                block_k=64, interpret=True)
+        assert o.dtype == dtype
+        msk = (jnp.arange(128)[None, :] <= jnp.arange(128)[:, None])[
+            None, None, None]
+        o2 = attention._plain_attention(q, k, v, msk)
+        tol = 2e-4 if dtype == jnp.float32 else 4e-2
+        np.testing.assert_allclose(
+            np.asarray(o, np.float32), np.asarray(o2, np.float32),
+            rtol=tol, atol=tol)

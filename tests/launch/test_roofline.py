@@ -1,0 +1,75 @@
+"""Roofline tooling: HLO collective parser, trip counts, analytic model."""
+import pytest
+
+from repro.configs.base import ModelConfig, SHAPES
+from repro.launch import roofline as rl
+
+HLO = """
+HloModule test
+fused {
+  %p = bf16[16,1024]{1,0} parameter(0)
+}
+ENTRY main {
+  %ag = bf16[32,4096,8192]{2,1,0} all-gather(%x), replica_groups={}
+  %ar.1 = f32[1024,1024]{1,0} all-reduce(%y), to_apply=%add
+  %rs = bf16[8,512]{1,0} reduce-scatter(%z), to_apply=%add
+  %cp = u32[128]{0} collective-permute(%w), source_target_pairs={{0,1}}
+  %dot = f32[64,64]{1,0} dot(%a, %b)
+  %loop = (s32[]) while(%init), condition=%c, body=%b2,
+    backend_config={"known_trip_count":{"n":"28"}}
+}
+"""
+
+
+def test_collective_bytes_parser():
+    out = rl.collective_bytes(HLO)
+    assert out["all-gather"] == 32 * 4096 * 8192 * 2
+    assert out["all-reduce"] == 1024 * 1024 * 4
+    assert out["reduce-scatter"] == 8 * 512 * 2
+    assert out["collective-permute"] == 128 * 4
+    assert out["all-to-all"] == 0
+    assert out["total"] == sum(out[k] for k in (
+        "all-gather", "all-reduce", "reduce-scatter", "collective-permute"))
+    # non-collective ops (dot) are not counted
+    assert out["_counts"]["all-gather"] == 1
+
+
+def test_trip_count_parser():
+    assert rl.while_trip_counts(HLO) == [28]
+
+
+@pytest.fixture
+def dense_cfg():
+    return ModelConfig(name="x", family="dense", n_layers=32, d_model=4096,
+                       n_heads=32, n_kv_heads=8, head_dim=128, d_ff=11008,
+                       vocab_size=32000)
+
+
+class TestAnalyticModel:
+    def test_decode_weight_bound_improves_with_vq(self, dense_cfg):
+        common = dict(chips=256, dp=16, tp=16, n_total=6_700_000_000,
+                      n_active=6_700_000_000)
+        base = rl.analytic_cell(dense_cfg, SHAPES["decode_32k"], **common)
+        vq = rl.analytic_cell(dense_cfg, SHAPES["decode_32k"], **common,
+                              weight_payload_bytes=6.7e9 * 0.28)
+        assert base["dominant"] == "memory"
+        assert vq["memory_s"] < base["memory_s"]
+        # and fp8 cache halves the cache term
+        kv8 = rl.analytic_cell(dense_cfg, SHAPES["decode_32k"], **common,
+                               kv_bytes=1.0)
+        assert kv8["memory_s"] < base["memory_s"]
+
+    def test_train_is_compute_bound_at_scale(self, dense_cfg):
+        out = rl.analytic_cell(dense_cfg, SHAPES["train_4k"], chips=256,
+                               dp=16, tp=16, n_total=6_700_000_000,
+                               n_active=6_700_000_000, microbatches=16)
+        assert out["dominant"] == "compute"
+        assert 0 < out["roofline_fraction"] <= 1.0
+
+    def test_terms_positive_all_shapes(self, dense_cfg):
+        for s in SHAPES.values():
+            out = rl.analytic_cell(dense_cfg, s, chips=256, dp=16, tp=16,
+                                   n_total=1e9, n_active=1e9)
+            assert out["compute_s"] > 0 and out["hbm_bytes"] > 0
+            assert out["step_lower_bound_s"] >= max(
+                out["compute_s"], out["memory_s"], out["collective_s"]) - 1e-12
