@@ -25,6 +25,17 @@ SMOKE: dict[str, ModelConfig] = {
 
 ASSIGNED = [n for n in ARCHS if n != "llama2-7b"]
 
+# canonical representative arch per model family (smoke-testable via
+# SMOKE[...]); the adapter-registry tests and examples iterate this
+FAMILY_REPRESENTATIVE: dict[str, str] = {
+    "dense": "llama2-7b",
+    "moe": "qwen3-moe-30b-a3b",
+    "vlm": "phi-3-vision-4.2b",
+    "ssm": "xlstm-125m",
+    "hybrid": "zamba2-7b",
+    "audio": "whisper-small",
+}
+
 
 def get(name: str) -> ModelConfig:
     return ARCHS[name]

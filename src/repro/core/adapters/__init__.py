@@ -1,0 +1,75 @@
+"""Model-adapter registry: the GPTVQ pipeline's only entry to block anatomy.
+
+``get_adapter(model, params)`` resolves a ``ModelAdapter`` by
+``ModelConfig.family``; each adapter yields per-block ``BlockAdapter``s
+exposing quantizable weights, Hessian-tap capture and quantized-activation
+advance (see base.py). To support a new family, implement the two classes
+in a new module and ``register("<family>")`` it here — the driver in
+core/pipeline.py needs no change.
+"""
+from __future__ import annotations
+
+from repro.core.adapters.base import (  # noqa: F401 (public API)
+    BlockAdapter,
+    ModelAdapter,
+    WeightSpec,
+    acc_expert_tap,
+    acc_tap,
+    stack_blocks,
+    tree_get,
+    tree_set,
+)
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register(family: str):
+    def deco(cls):
+        _REGISTRY[family] = cls
+        return cls
+    return deco
+
+
+def families() -> tuple[str, ...]:
+    _ensure_builtins()
+    return tuple(sorted(_REGISTRY))
+
+
+def get_adapter(model, params) -> ModelAdapter:
+    _ensure_builtins()
+    family = model.cfg.family
+    cls = _REGISTRY.get(family)
+    if cls is None:
+        raise KeyError(
+            f"no ModelAdapter registered for family {family!r} "
+            f"(known: {sorted(_REGISTRY)}); add one under "
+            "repro/core/adapters/ and register() it")
+    return cls(model, params)
+
+
+def _ensure_builtins():
+    if _REGISTRY:
+        return
+    from repro.core.adapters.encdec import EncDecAdapter
+    from repro.core.adapters.hybrid import HybridAdapter
+    from repro.core.adapters.recurrent import XLSTMAdapter
+    from repro.core.adapters.transformer import TransformerAdapter
+
+    _REGISTRY.update({
+        "dense": TransformerAdapter,
+        "moe": TransformerAdapter,
+        "vlm": TransformerAdapter,
+        "ssm": XLSTMAdapter,
+        "hybrid": HybridAdapter,
+        "audio": EncDecAdapter,
+    })
+
+
+def calib_extras(cfg, tokens, chunk_index: int = 0) -> dict:
+    """Stub-frontend batch extras (frames/patches) for families whose
+    forward needs more than tokens — used by eval helpers around the
+    quantization launcher."""
+    if cfg.family == "audio":
+        from repro.core.adapters.encdec import synth_frames
+        return {"frames": synth_frames(cfg, tokens.shape[0], chunk_index)}
+    return {}

@@ -1,0 +1,159 @@
+"""Adapter contracts for the family-agnostic GPTVQ pipeline.
+
+The sequential error-compensated sweep (core/pipeline.quantize_model) is
+written once against two small interfaces:
+
+  * ``ModelAdapter`` — one per model family. Owns the parameter tree during
+    quantization, turns calibration token chunks into activation *states*
+    (opaque to the driver: a plain array for decoder-only stacks, richer
+    tuples for models that carry auxiliary streams such as the hybrid's
+    initial embedding or the enc-dec's encoder memory), yields the ordered
+    list of ``BlockAdapter``s, and reassembles the quantized tree.
+
+  * ``BlockAdapter`` — one per quantizable block. Names the block's weight
+    leaves as ``WeightSpec`` (name, path, hessian tap) triples, accumulates
+    input Hessians for each tap by running the block's sub-forward
+    (``capture``), receives the quantized block (``install``), and pushes a
+    calibration state through the quantized block (``advance``) so
+    downstream Hessians see upstream quantization error.
+
+Everything a family knows about its block anatomy (which matrices exist,
+what feeds them, what stays dense) lives in its adapter module; the driver
+only ever sees specs, taps, and states.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import hessian as hes
+from repro.core import vq_linear as vql_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightSpec:
+    """One quantizable weight leaf inside a block.
+
+    path       — key path into the block's parameter tree, e.g.
+                 ("attn", "wq"). The leaf is an (in, out) kernel, or an
+                 (E, in, out) expert stack when ``per_expert`` is set.
+    tap        — name of the Hessian tap (``capture`` output) whose
+                 statistics quantize this leaf. Plain taps accumulate a
+                 ``hessian.HessianState``; per-expert taps accumulate an
+                 (E, c, c) stack with per-expert token counts.
+    group      — "attn" (mixer / attention) or "mlp" (feed-forward), the
+                 granularity at which callers can disable quantization.
+    """
+
+    name: str
+    path: tuple
+    tap: str
+    group: str = "attn"
+    per_expert: bool = False
+
+
+class BlockAdapter:
+    """Base class: one sequential block of the model."""
+
+    name: str = "block"
+
+    def params(self) -> Any:
+        """Current (not yet quantized) block parameter tree."""
+        raise NotImplementedError
+
+    def targets(self) -> tuple[WeightSpec, ...]:
+        raise NotImplementedError
+
+    def capture(self, state, taps: dict, groups: frozenset) -> dict:
+        """Accumulate this block's Hessian taps from one calibration state."""
+        raise NotImplementedError
+
+    def install(self, new_params) -> None:
+        """Store the quantized block params (adapter-owned placement)."""
+        raise NotImplementedError
+
+    def advance(self, state):
+        """Push one calibration state through the (quantized) block."""
+        raise NotImplementedError
+
+
+class ModelAdapter:
+    """Base class: a model family's view of the quantization sweep."""
+
+    def __init__(self, model, params):
+        self.model = model
+        self.cfg: ModelConfig = model.cfg
+        self.params = params
+
+    def calib_state(self, tokens: jax.Array, chunk_index: int = 0):
+        """Embed one (B, S) calibration token chunk into the family's
+        activation-state representation."""
+        raise NotImplementedError
+
+    def blocks(self) -> list[BlockAdapter]:
+        raise NotImplementedError
+
+    def finalize(self):
+        """Reassemble the full parameter tree with quantized blocks."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# tap accumulation helpers
+# ---------------------------------------------------------------------------
+
+def acc_tap(taps: dict, name: str, x) -> dict:
+    """Accumulate activations ``x`` (..., c) into the named Hessian tap."""
+    H = taps.get(name)
+    if H is None:
+        H = hes.init_hessian(x.shape[-1])
+    taps = dict(taps)
+    taps[name] = hes.accumulate(H, x)
+    return taps
+
+
+def acc_expert_tap(taps: dict, name: str, new: tuple) -> dict:
+    """Accumulate a per-expert ((E, c, c) Hessian stack, (E,) count) pair."""
+    taps = dict(taps)
+    acc = taps.get(name)
+    taps[name] = new if acc is None else (acc[0] + new[0], acc[1] + new[1])
+    return taps
+
+
+# ---------------------------------------------------------------------------
+# tree path / stacking utilities
+# ---------------------------------------------------------------------------
+
+def tree_get(tree, path: tuple):
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def tree_set(tree, path: tuple, value):
+    """Copy-on-write set: shallow-copies dicts along ``path`` only."""
+    if not path:
+        return value
+    out = dict(tree)
+    out[path[0]] = tree_set(tree[path[0]], path[1:], value)
+    return out
+
+
+def stack_blocks(block_list: list):
+    """Stack per-block trees along a new leading axis; VQLinear leaves keep
+    their static metadata and stack arraywise (serving format for scanned
+    layer stacks)."""
+    def is_leaf(x):
+        return isinstance(x, vql_mod.VQLinear) or not isinstance(
+            x, (dict, list, tuple))
+
+    def stack(*ls):
+        if isinstance(ls[0], vql_mod.VQLinear):
+            return jax.tree.map(lambda *a: jnp.stack(a), *ls)
+        return jnp.stack(ls)
+
+    return jax.tree.map(stack, *block_list, is_leaf=is_leaf)

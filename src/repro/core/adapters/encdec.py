@@ -1,0 +1,227 @@
+"""Adapter for the "audio" family — Whisper-style encoder-decoder.
+
+Block sequence: encoder blocks in order (calibrated on the frame-embedding
+stream), one transition pseudo-block (applies the final encoder norm to
+form the cross-attention memory and embeds the decoder tokens), then
+decoder blocks. Decoder anatomy adds the cross-attention Hessians: the
+query projection reads the normed decoder stream ("cross_q_in"), while
+wk/wv read the *encoder memory* ("memory" tap) — so the decoder-side
+cross projections are calibrated against the actual acoustic statistics,
+quantized-encoder error included. Biases (whisper uses qkv_bias) and
+positional embeddings stay dense.
+
+The conv/mel frontend is a stub upstream (models/encdec.py): calibration
+frames are synthesized deterministically per chunk at the same scale the
+smoke tests use. The calibration state is {"enc": x} on the encoder side
+and {"dec": x, "memory": m} after the transition.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vq_linear as vql_mod
+from repro.core.adapters import base
+from repro.core.adapters.base import WeightSpec
+from repro.models import attention, common as cm, encdec, mlp
+
+_FRAMES_SEED = 20  # deterministic stub-frontend calibration frames
+
+
+def synth_frames(cfg, batch: int, chunk_index: int = 0):
+    """Deterministic placeholder frame embeddings (conv frontend stub)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(_FRAMES_SEED), chunk_index)
+    return jax.random.normal(
+        key, (batch, cfg.encoder_seq, cfg.d_model), jnp.float32) * 0.1
+
+
+def _ffn_specs(cfg, prefix=""):
+    names = ["w_in", "w_out"] + (
+        ["w_gate"] if cm.is_gated(cfg.activation) else [])
+    tap = {"w_in": "ffn_in", "w_gate": "ffn_in", "w_out": "ffn_out_in"}
+    return [WeightSpec(f"ffn.{w}", ("ffn", w), tap[w], "mlp") for w in names]
+
+
+class _EncBlock(base.BlockAdapter):
+    def __init__(self, adapter, index: int):
+        self.adapter = adapter
+        self.cfg = adapter.cfg
+        self.index = index
+        self.name = f"enc{index}"
+        self._p = adapter.enc_layer(index)
+        self._new = None
+
+    def params(self):
+        return self._p
+
+    def targets(self):
+        return tuple(
+            [WeightSpec(f"attn.{w}", ("attn", w), "attn_in", "attn")
+             for w in ("wq", "wk", "wv")]
+            + [WeightSpec("attn.wo", ("attn", "wo"), "attn_out_in", "attn")]
+            + _ffn_specs(self.cfg))
+
+    def capture(self, state, taps, groups):
+        cfg, lp = self.cfg, self._p
+        x = state["enc"]
+        x1 = cm.rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        if "attn" in groups:
+            taps = base.acc_tap(taps, "attn_in", x1)
+            o = attention.pre_out(lp["attn"], cfg, x1, causal=False,
+                                  use_rope=False)
+            taps = base.acc_tap(taps, "attn_out_in", o)
+            a = (o @ lp["attn"]["wo"]).astype(x.dtype)
+        else:
+            a, _ = attention.apply(lp["attn"], cfg, x1, causal=False,
+                                   use_rope=False)
+        h = x + a
+        if "mlp" in groups:
+            x2 = cm.rmsnorm(h, lp["norm2"], cfg.norm_eps)
+            taps = base.acc_tap(taps, "ffn_in", x2)
+            taps = base.acc_tap(taps, "ffn_out_in",
+                                mlp.pre_out(lp["ffn"], cfg, x2))
+        return taps
+
+    def install(self, new_params):
+        self._new = new_params
+        self.adapter.new_enc[self.index] = new_params
+
+    def advance(self, state):
+        lp = vql_mod.dequant_tree(self._new, jnp.float32)
+        return dict(state, enc=encdec.enc_block_apply(lp, self.cfg,
+                                                      state["enc"]))
+
+
+class _Transition(base.BlockAdapter):
+    """Encoder→decoder hand-off: final encoder norm forms the memory, the
+    decoder token stream is embedded. No quantizable weights."""
+
+    def __init__(self, adapter):
+        self.adapter = adapter
+        self.cfg = adapter.cfg
+        self.name = "enc→dec"
+
+    def params(self):
+        return {}
+
+    def targets(self):
+        return ()
+
+    def capture(self, state, taps, groups):
+        return taps
+
+    def install(self, new_params):
+        pass
+
+    def advance(self, state):
+        cfg, params = self.cfg, self.adapter.params
+        memory = cm.rmsnorm(state["enc"], params["enc_norm"], cfg.norm_eps)
+        tokens = state["tokens"]
+        x = params["embed"][tokens]
+        pos_ids = jnp.arange(tokens.shape[1])
+        x = x + params["pos_dec"][pos_ids][None].astype(x.dtype)
+        return {"dec": x, "memory": memory}
+
+
+class _DecBlock(base.BlockAdapter):
+    def __init__(self, adapter, index: int):
+        self.adapter = adapter
+        self.cfg = adapter.cfg
+        self.index = index
+        self.name = f"dec{index}"
+        self._p = adapter.dec_layer(index)
+        self._new = None
+
+    def params(self):
+        return self._p
+
+    def targets(self):
+        return tuple(
+            [WeightSpec(f"self_attn.{w}", ("self_attn", w), "self_in",
+                        "attn") for w in ("wq", "wk", "wv")]
+            + [WeightSpec("self_attn.wo", ("self_attn", "wo"),
+                          "self_out_in", "attn")]
+            + [WeightSpec("cross_attn.wq", ("cross_attn", "wq"),
+                          "cross_q_in", "attn")]
+            + [WeightSpec(f"cross_attn.{w}", ("cross_attn", w), "memory",
+                          "attn") for w in ("wk", "wv")]
+            + [WeightSpec("cross_attn.wo", ("cross_attn", "wo"),
+                          "cross_out_in", "attn")]
+            + _ffn_specs(self.cfg))
+
+    def capture(self, state, taps, groups):
+        cfg, lp = self.cfg, self._p
+        h, memory = state["dec"], state["memory"]
+        x1 = cm.rmsnorm(h, lp["norm1"], cfg.norm_eps)
+        if "attn" in groups:
+            taps = base.acc_tap(taps, "self_in", x1)
+            o = attention.pre_out(lp["self_attn"], cfg, x1, use_rope=False)
+            taps = base.acc_tap(taps, "self_out_in", o)
+            a = (o @ lp["self_attn"]["wo"]).astype(h.dtype)
+        else:
+            a, _ = attention.apply(lp["self_attn"], cfg, x1, use_rope=False)
+        h = h + a
+        xq = cm.rmsnorm(h, lp["norm_x"], cfg.norm_eps)
+        if "attn" in groups:
+            taps = base.acc_tap(taps, "cross_q_in", xq)
+            taps = base.acc_tap(taps, "memory", memory)
+            oc = attention.cross_pre_out(lp["cross_attn"], cfg, xq, memory)
+            taps = base.acc_tap(taps, "cross_out_in", oc)
+            c = (oc @ lp["cross_attn"]["wo"]).astype(h.dtype)
+        else:
+            c = attention.cross_apply(lp["cross_attn"], cfg, xq, memory)
+        h = h + c
+        if "mlp" in groups:
+            x2 = cm.rmsnorm(h, lp["norm2"], cfg.norm_eps)
+            taps = base.acc_tap(taps, "ffn_in", x2)
+            taps = base.acc_tap(taps, "ffn_out_in",
+                                mlp.pre_out(lp["ffn"], cfg, x2))
+        return taps
+
+    def install(self, new_params):
+        self._new = new_params
+        self.adapter.new_dec[self.index] = new_params
+
+    def advance(self, state):
+        lp = vql_mod.dequant_tree(self._new, jnp.float32)
+        h = encdec.dec_block_apply(lp, self.cfg, state["dec"],
+                                   state["memory"])
+        return dict(state, dec=h)
+
+
+class EncDecAdapter(base.ModelAdapter):
+    """Family "audio": params["enc_layers"] + params["dec_layers"], both
+    layer-stacked; cross K/V read the encoder memory."""
+
+    def __init__(self, model, params):
+        super().__init__(model, params)
+        self.new_enc: dict[int, dict] = {}
+        self.new_dec: dict[int, dict] = {}
+
+    def enc_layer(self, i: int):
+        return jax.tree.map(lambda a: a[i], self.params["enc_layers"])
+
+    def dec_layer(self, i: int):
+        return jax.tree.map(lambda a: a[i], self.params["dec_layers"])
+
+    def calib_state(self, tokens, chunk_index: int = 0):
+        frames = synth_frames(self.cfg, tokens.shape[0], chunk_index)
+        x = encdec.embed_frames(self.params, self.cfg,
+                                frames.astype(jnp.float32))
+        return {"enc": x, "tokens": tokens}
+
+    def blocks(self):
+        cfg = self.cfg
+        out: list[base.BlockAdapter] = [
+            _EncBlock(self, i) for i in range(cfg.n_encoder_layers)]
+        out.append(_Transition(self))
+        out += [_DecBlock(self, i) for i in range(cfg.n_layers)]
+        return out
+
+    def finalize(self):
+        cfg = self.cfg
+        enc = base.stack_blocks(
+            [self.new_enc[i] for i in range(cfg.n_encoder_layers)])
+        dec = base.stack_blocks(
+            [self.new_dec[i] for i in range(cfg.n_layers)])
+        return dict(self.params, enc_layers=enc, dec_layers=dec)

@@ -1,0 +1,202 @@
+"""Adapter for the "hybrid" family — Zamba2-style Mamba2 trunk with one
+*shared* attention block invoked every ``shared_attn_every`` layers (plus
+per-invocation LoRA deltas on q/k/v).
+
+Block sequence: the shared attention block first (it is one set of weights
+used at every group boundary), then the mamba layers in trunk order. The
+shared block's Hessians are accumulated over *all* of its invocations by
+replaying the unquantized trunk — its q/k/v/o statistics come from every
+group's concat(hidden, initial-embedding) stream, not just the first.
+Because it is quantized before any mamba layer, every subsequent capture
+and advance already sees the quantized shared weights at group entries —
+preserving the GPTQ-style "downstream sees upstream error" invariant.
+
+Mamba mixers quantize in_proj (tap: normed block input) and out_proj (tap:
+the gated scan output from models/ssm.pre_out). Conv/scan parameters
+(conv_w, A_log, dt_bias, D_skip, norm_scale) and the LoRA A/B factors stay
+dense. The calibration state is a dict {"x": hidden, "emb0": embedding}
+because every shared invocation re-reads the initial embedding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vq_linear as vql_mod
+from repro.core.adapters import base
+from repro.core.adapters.base import WeightSpec
+from repro.models import attention, common as cm, hybrid, ssm
+
+
+def _lora_group(params, g: int):
+    return jax.tree.map(lambda a: a[g], params["lora"])
+
+
+def _shared_pre_out(shared_p, lora_g, cfg, h, emb0):
+    """One shared-block invocation up to wo; returns (xin, o, y)."""
+    xin = hybrid.shared_attn_input(shared_p, cfg, h, emb0)
+    attn_p = hybrid.lora_attn_params(shared_p, lora_g, cfg)
+    o = attention.pre_out(attn_p, cfg, xin, pos=0)
+    y = (o @ attn_p["wo"]).astype(h.dtype)
+    return xin, o, y
+
+
+class _SharedAttnBlock(base.BlockAdapter):
+    TARGETS = tuple(
+        [WeightSpec(f"attn.{w}", ("attn", w), "xin", "attn")
+         for w in ("wq", "wk", "wv")]
+        + [WeightSpec("attn.wo", ("attn", "wo"), "attn_out_in", "attn")]
+    )
+
+    def __init__(self, adapter: "HybridAdapter"):
+        self.adapter = adapter
+        self.cfg = adapter.cfg
+        self.name = "shared_attn"
+
+    def params(self):
+        return dict(self.adapter.params["shared"])
+
+    def targets(self):
+        return self.TARGETS
+
+    def capture(self, state, taps, groups):
+        """Replay the unquantized trunk, accumulating the shared block's
+        input / pre-out Hessians at every invocation."""
+        if "attn" not in groups:
+            return taps
+        cfg = self.cfg
+        params = self.adapter.params
+        shared = params["shared"]
+        h, emb0 = state["x"], state["emb0"]
+        for g in range(self.adapter.n_groups):
+            lora_g = _lora_group(params, g)
+            xin, o, y = _shared_pre_out(shared, lora_g, cfg, h, emb0)
+            taps = base.acc_tap(taps, "xin", xin)
+            taps = base.acc_tap(taps, "attn_out_in", o)
+            h = h + y
+            for j in range(self.adapter.per):
+                lp = self.adapter.mamba_layer(g, j)
+                y_m, _ = ssm.apply(
+                    lp["mixer"], cfg,
+                    cm.rmsnorm(h, lp["norm"], cfg.norm_eps))
+                h = h + y_m
+        return taps
+
+    def install(self, new_params):
+        self.adapter.new_shared = new_params
+        self.adapter._shared_dense = None  # invalidate dequant cache
+
+    def advance(self, state):
+        return state  # stream is still at the embedding
+
+
+class _MambaBlock(base.BlockAdapter):
+    def __init__(self, adapter: "HybridAdapter", g: int, j: int):
+        self.adapter = adapter
+        self.cfg = adapter.cfg
+        self.g, self.j = g, j
+        self.name = f"mamba{g}.{j}" + (" (+shared entry)" if j == 0 else "")
+        self._p = adapter.mamba_layer(g, j)
+        self._new = None
+        # group-entry hidden streams computed in capture(), reused by
+        # advance() on the same state objects (the driver holds the state
+        # list across both loops) — halves the shared-block forwards
+        self._entered: dict[int, jax.Array] = {}
+
+    def params(self):
+        return self._p
+
+    def targets(self):
+        return (
+            WeightSpec("mixer.in_proj", ("mixer", "in_proj"), "in", "attn"),
+            WeightSpec("mixer.out_proj", ("mixer", "out_proj"), "out_in",
+                       "attn"),
+        )
+
+    def _enter(self, state):
+        """Hidden stream at this layer's input (applies the — already
+        quantized — shared block at group entry)."""
+        h, emb0 = state["x"], state["emb0"]
+        if self.j == 0:
+            shared = self.adapter.shared_dense()
+            lora_g = _lora_group(self.adapter.params, self.g)
+            _, _, y = _shared_pre_out(shared, lora_g, self.cfg, h, emb0)
+            h = h + y
+        return h
+
+    def capture(self, state, taps, groups):
+        if "attn" not in groups:
+            return taps
+        cfg = self.cfg
+        h = self._enter(state)
+        self._entered[id(state)] = h
+        x1 = cm.rmsnorm(h, self._p["norm"], cfg.norm_eps)
+        taps = base.acc_tap(taps, "in", x1)
+        y_pre, _ = ssm.pre_out(self._p["mixer"], cfg, x1)
+        taps = base.acc_tap(taps, "out_in", y_pre)
+        return taps
+
+    def install(self, new_params):
+        self._new = new_params
+        self.adapter.new_mamba[(self.g, self.j)] = new_params
+
+    def advance(self, state):
+        cfg = self.cfg
+        h = self._entered.pop(id(state), None)
+        if h is None:  # capture skipped (group disabled)
+            h = self._enter(state)
+        lp = vql_mod.dequant_tree(self._new, jnp.float32)
+        y, _ = ssm.apply(lp["mixer"], cfg,
+                         cm.rmsnorm(h, lp["norm"], cfg.norm_eps))
+        return {"x": h + y, "emb0": state["emb0"]}
+
+
+class HybridAdapter(base.ModelAdapter):
+    """Family "hybrid": shared attention block + (n_groups, per) mamba
+    trunk. The shared block quantizes first (Hessians over all
+    invocations), then the trunk in order."""
+
+    def __init__(self, model, params):
+        super().__init__(model, params)
+        self.n_groups = self.cfg.n_layers // self.cfg.shared_attn_every
+        self.per = self.cfg.shared_attn_every
+        self.new_shared = None
+        self.new_mamba: dict[tuple, dict] = {}
+        self._shared_dense = None
+
+    def mamba_layer(self, g: int, j: int):
+        return jax.tree.map(lambda a: a[g][j], self.params["mamba"])
+
+    def current_shared(self):
+        return self.new_shared if self.new_shared is not None \
+            else self.params["shared"]
+
+    def shared_dense(self):
+        """Dequantized shared block, cached — it is immutable once the
+        shared adapter has installed its quantized params, and every
+        group-entry capture/advance reuses it."""
+        if self._shared_dense is None:
+            self._shared_dense = vql_mod.dequant_tree(
+                self.current_shared(), jnp.float32)
+        return self._shared_dense
+
+    def calib_state(self, tokens, chunk_index: int = 0):
+        x = self.params["embed"][tokens]
+        return {"x": x, "emb0": x}
+
+    def blocks(self):
+        out: list[base.BlockAdapter] = [_SharedAttnBlock(self)]
+        for g in range(self.n_groups):
+            for j in range(self.per):
+                out.append(_MambaBlock(self, g, j))
+        return out
+
+    def finalize(self):
+        groups = []
+        for g in range(self.n_groups):
+            groups.append(base.stack_blocks(
+                [self.new_mamba[(g, j)] for j in range(self.per)]))
+        mamba = base.stack_blocks(groups)
+        return dict(self.params, shared=self.new_shared
+                    if self.new_shared is not None
+                    else self.params["shared"], mamba=mamba)

@@ -1,0 +1,146 @@
+"""Adapter for the "ssm" family — the xLSTM stack (mLSTM + sLSTM blocks).
+
+Quantizable anatomy (DESIGN.md §5; models/xlstm.py):
+
+  mLSTM block: up / up_gate read the normed block input ("in" tap); the
+  q/k/v/o head projections read the up-projected stream u ("u" tap); down
+  reads the gated core output ("down_in" tap). The tiny fp32 gate
+  projections w_i/w_f ((d_inner, n_heads)) stay dense — they are
+  numerically sensitive exponential-gate inputs and a negligible fraction
+  of the payload.
+
+  sLSTM block: the four input projections w_z/w_i/w_f/w_o read the normed
+  block input; the block-diagonal per-head recurrent matrices r_* stay
+  dense (their inputs are the lagged hidden states inside the scan — no
+  static tap exists without unrolling the recurrence). The post-core gated
+  FFN quantizes like any dense MLP.
+
+All mixer projections carry group "attn" (they are the sequence-mixing
+path); the sLSTM FFN carries group "mlp".
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import vq_linear as vql_mod
+from repro.core.adapters import base
+from repro.core.adapters.base import WeightSpec
+from repro.models import common as cm, transformer, xlstm
+
+
+class _MLSTMBlock(base.BlockAdapter):
+    TARGETS = tuple(
+        [WeightSpec(f"core.{w}", ("core", w), "in", "attn")
+         for w in ("up", "up_gate")]
+        + [WeightSpec(f"core.{w}", ("core", w), "u", "attn")
+           for w in ("wq", "wk", "wv", "w_o")]
+        + [WeightSpec("core.down", ("core", "down"), "down_in", "attn")]
+    )
+
+    def __init__(self, adapter, index: int):
+        self.adapter = adapter
+        self.cfg = adapter.cfg
+        self.index = index
+        self.name = f"layer{index}[mlstm]"
+        self._p = adapter.layer(index)
+        self._new = None
+
+    def params(self):
+        return self._p
+
+    def targets(self):
+        return self.TARGETS
+
+    def capture(self, x, taps, groups):
+        if "attn" not in groups:
+            return taps
+        cfg, lp = self.cfg, self._p
+        x1 = cm.rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        taps = base.acc_tap(taps, "in", x1)
+        u, h, _ = xlstm.mlstm_pre_down(lp["core"], cfg, x1)
+        taps = base.acc_tap(taps, "u", u)
+        taps = base.acc_tap(taps, "down_in", h)
+        return taps
+
+    def install(self, new_params):
+        self._new = new_params
+        self.adapter.installed[self.index] = new_params
+
+    def advance(self, x):
+        dense_lp = vql_mod.dequant_tree(self._new, jnp.float32)
+        return transformer._block_apply(
+            dense_lp, self.cfg, "mlstm", x, pos=0, cache=None)[0]
+
+
+class _SLSTMBlock(base.BlockAdapter):
+    def __init__(self, adapter, index: int):
+        self.adapter = adapter
+        self.cfg = adapter.cfg
+        self.index = index
+        self.name = f"layer{index}[slstm]"
+        self._p = adapter.layer(index)
+        self._new = None
+
+    def params(self):
+        return self._p
+
+    def targets(self):
+        return tuple(
+            [WeightSpec(f"core.{w}", ("core", w), "in", "attn")
+             for w in ("w_z", "w_i", "w_f", "w_o")]
+            + [WeightSpec(f"core.ffn.{w}", ("core", "ffn", w), "ffn_in",
+                          "mlp") for w in ("w_in", "w_gate")]
+            + [WeightSpec("core.ffn.w_out", ("core", "ffn", "w_out"),
+                          "ffn_out_in", "mlp")]
+        )
+
+    def capture(self, x, taps, groups):
+        cfg, lp = self.cfg, self._p
+        x1 = cm.rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        if "attn" in groups:
+            taps = base.acc_tap(taps, "in", x1)
+        if "mlp" in groups:
+            h, _ = xlstm.slstm_apply(lp["core"], cfg, x1, None)
+            xa = x + h
+            x2 = cm.rmsnorm(xa, lp["core"]["ffn_norm"], cfg.norm_eps)
+            taps = base.acc_tap(taps, "ffn_in", x2)
+            taps = base.acc_tap(
+                taps, "ffn_out_in",
+                xlstm.slstm_ffn_pre_out(lp["core"], cfg, x2))
+        return taps
+
+    def install(self, new_params):
+        self._new = new_params
+        self.adapter.installed[self.index] = new_params
+
+    def advance(self, x):
+        dense_lp = vql_mod.dequant_tree(self._new, jnp.float32)
+        return transformer._block_apply(
+            dense_lp, self.cfg, "slstm", x, pos=0, cache=None)[0]
+
+
+class XLSTMAdapter(base.ModelAdapter):
+    """Family "ssm": heterogeneous mLSTM/sLSTM list under params["layers"]."""
+
+    def __init__(self, model, params):
+        super().__init__(model, params)
+        self._layers = params["layers"]
+        self.installed: dict[int, dict] = {}
+
+    def layer(self, i: int):
+        return dict(self._layers[i])
+
+    def calib_state(self, tokens, chunk_index: int = 0):
+        return transformer.embed_tokens(self.params, self.cfg, tokens)
+
+    def blocks(self):
+        out = []
+        for i in range(self.cfg.n_layers):
+            kind = transformer.block_kind(self.cfg, i)
+            cls = _MLSTMBlock if kind == "mlstm" else _SLSTMBlock
+            out.append(cls(self, i))
+        return out
+
+    def finalize(self):
+        new_layers = [self.installed[i] for i in range(self.cfg.n_layers)]
+        return dict(self.params, layers=new_layers)

@@ -1,0 +1,128 @@
+"""Adapters for the transformer family: dense GQA stacks, MoE stacks, and
+the VLM text backbone (the vision tower is a stub; GPTVQ quantizes the text
+stack, calibrated on text tokens — patches enter only at serving time).
+
+Block anatomy (pre-norm residual):
+
+  x ─ norm1 ─ attn(wq wk wv │ wo) ─+─ norm2 ─ ffn(w_in w_gate │ w_out) ─+
+
+Taps: "attn_in" feeds the fused q/k/v projections, "attn_out_in" (the
+pre-``wo`` attention output) feeds the output projection, "ffn_in" feeds
+the up/gate projections and "ffn_out_in" (the activated hidden state) the
+down projection. MoE blocks replace the dense FFN taps with per-expert
+Hessian stacks accumulated from each expert's *routed* tokens
+(models/moe.expert_hessians).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vq_linear as vql_mod
+from repro.core.adapters import base
+from repro.core.adapters.base import WeightSpec
+from repro.models import attention, common as cm, mlp, moe, transformer
+
+
+def _gated(cfg) -> bool:
+    return cm.is_gated(cfg.activation)
+
+
+class _DenseBlock(base.BlockAdapter):
+    def __init__(self, adapter: "TransformerAdapter", index: int):
+        self.adapter = adapter
+        self.cfg = adapter.cfg
+        self.index = index
+        self.name = f"layer{index}"
+        self.kind = transformer.block_kind(self.cfg, index)
+        self._p = adapter.layer(index)
+        self._new = None
+
+    def params(self):
+        return self._p
+
+    def targets(self):
+        specs = [
+            WeightSpec(f"attn.{w}", ("attn", w), "attn_in", "attn")
+            for w in ("wq", "wk", "wv")
+        ]
+        specs.append(WeightSpec("attn.wo", ("attn", "wo"), "attn_out_in",
+                                "attn"))
+        if self.kind == "dense":
+            names = ["w_in", "w_out"] + (["w_gate"] if _gated(self.cfg)
+                                         else [])
+            tap = {"w_in": "ffn_in", "w_gate": "ffn_in",
+                   "w_out": "ffn_out_in"}
+            specs += [WeightSpec(f"ffn.{w}", ("ffn", w), tap[w], "mlp")
+                      for w in names]
+        else:  # moe: expert stacks with routed-token Hessians
+            names = ["w_in", "w_out"] + (["w_gate"] if _gated(self.cfg)
+                                         else [])
+            tap = {"w_in": "experts_in", "w_gate": "experts_in",
+                   "w_out": "experts_out"}
+            specs += [WeightSpec(f"ffn.{w}", ("ffn", w), tap[w], "mlp",
+                                 per_expert=True) for w in names]
+        return tuple(specs)
+
+    def capture(self, x, taps, groups):
+        cfg, lp = self.cfg, self.params()
+        x1 = cm.rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        if "attn" in groups:
+            taps = base.acc_tap(taps, "attn_in", x1)
+            o = attention.pre_out(lp["attn"], cfg, x1, pos=0)
+            taps = base.acc_tap(taps, "attn_out_in", o)
+            a = (o @ lp["attn"]["wo"]).astype(x.dtype)
+        else:
+            a, _ = attention.apply(lp["attn"], cfg, x1, pos=0)
+        xa = x + a
+        x2 = cm.rmsnorm(xa, lp["norm2"], cfg.norm_eps)
+        if "mlp" in groups:
+            if self.kind == "dense":
+                taps = base.acc_tap(taps, "ffn_in", x2)
+                taps = base.acc_tap(
+                    taps, "ffn_out_in", mlp.pre_out(lp["ffn"], cfg, x2))
+            else:
+                eh_in, eh_out = moe.expert_hessians(lp["ffn"], cfg, x2)
+                taps = base.acc_expert_tap(taps, "experts_in", eh_in)
+                taps = base.acc_expert_tap(taps, "experts_out", eh_out)
+        return taps
+
+    def install(self, new_params):
+        self._new = new_params
+        self.adapter.installed[self.index] = new_params
+
+    def advance(self, x):
+        dense_lp = vql_mod.dequant_tree(self._new, jnp.float32)
+        return transformer._block_apply(
+            dense_lp, self.cfg, self.kind, x, pos=0, cache=None)[0]
+
+
+class TransformerAdapter(base.ModelAdapter):
+    """Families "dense", "moe", "vlm": a stacked (or listed) block stack
+    under params["layers"] with transformer.embed_tokens in front."""
+
+    def __init__(self, model, params):
+        super().__init__(model, params)
+        layers = params["layers"]
+        self._stacked = not isinstance(layers, list)
+        self._layers = layers
+        self.installed: dict[int, dict] = {}
+
+    def layer(self, i: int):
+        if self._stacked:
+            return jax.tree.map(lambda a: a[i], self._layers)
+        return dict(self._layers[i])
+
+    def calib_state(self, tokens, chunk_index: int = 0):
+        return transformer.embed_tokens(self.params, self.cfg, tokens)
+
+    def blocks(self):
+        return [_DenseBlock(self, i) for i in range(self.cfg.n_layers)]
+
+    def finalize(self):
+        new_blocks = [self.installed[i] for i in range(self.cfg.n_layers)]
+        if not self._stacked:
+            out_layers = new_blocks
+        else:
+            out_layers = base.stack_blocks(new_blocks)
+        return dict(self.params, layers=out_layers)

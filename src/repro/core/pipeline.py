@@ -1,20 +1,33 @@
-"""Model-level GPTVQ pipeline: sequential layerwise PTQ (paper §4).
+"""Model-level GPTVQ pipeline: a family-agnostic sequential PTQ driver.
 
-Mirrors the GPTQ/GPTVQ flow: walk the blocks in order; for each block,
-accumulate the input Hessian of every target matmul from the *current*
-(already partially quantized) activation stream, quantize the block's
-weights, then push the activations through the quantized block before moving
-on — so downstream Hessians see upstream quantization error.
+GPTVQ (paper §4) is a per-layer method over a stack of linear maps: walk
+the blocks in order; for each block, accumulate the input Hessian of every
+target matmul from the *current* (already partially quantized) activation
+stream, quantize the block's weights, then push the activations through
+the quantized block before moving on — so downstream Hessians see upstream
+quantization error.
 
-Distribution: calibration sequences shard across data-parallel workers; each
-accumulates partial Hessians and a single all-reduce merges them (the
-quantizer itself is layer-local). On this single-process container the same
+Nothing in that loop is transformer-specific, so the driver here is
+written once against the ``ModelAdapter`` / ``BlockAdapter`` registry in
+core/adapters/ (the SliceGPT/QuaRot adapter pattern): the adapter names
+each block's quantizable weight leaves as ``WeightSpec`` (name, path,
+hessian-tap) triples, owns the block sub-forwards that accumulate the tap
+Hessians (``capture``), and advances calibration activations through the
+quantized block (``advance``). All block anatomy — what feeds q/k/v vs the
+output projection, per-expert routed-token Hessians, Mamba scan params
+that stay dense, cross-attention memory taps — lives in the family's
+adapter module. Supported families: transformer dense/MoE, VLM text
+stacks, xLSTM (ssm), Mamba+shared-attention hybrids, and audio
+encoder-decoders.
+
+Distribution: calibration sequences shard across data-parallel workers;
+each accumulates partial Hessians and a single all-reduce merges them (the
+quantizer itself is layer-local). On a single-process container the same
 code runs with world size 1.
 
-Supported: the transformer family (dense / MoE / VLM text stack). Weight
-convention note: model kernels are (in, out); GPTVQ operates on (out, in) so
-every matrix is transposed on entry and the packed VQLinear stores (r=out,
-c=in) — see core/vq_linear.dequant_tree.
+Weight convention: model kernels are (in, out); GPTVQ operates on
+(out, in) so every matrix is transposed on entry and the packed VQLinear
+stores (r=out, c=in) — see core/vq_linear.dequant_tree.
 """
 from __future__ import annotations
 
@@ -25,22 +38,27 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
+from repro.core import adapters
 from repro.core import hessian as hes
 from repro.core import vq_linear as vql_mod
 from repro.core.bpv import VQConfig
 from repro.core.codebook_compress import codebook_update, quantize_codebooks
 from repro.core.gptvq import gptvq_quantize_matrix, layer_error
 from repro.core.quant import gptq_quantize, rtn_quantize
-from repro.models import attention, common as cm, mlp, moe, transformer
 
 
 @dataclasses.dataclass
 class QuantizeReport:
-    per_layer: list
+    per_layer: list     # one row per block: {"layer", "block", target: err}
     total_seconds: float
     method: str
     bits_per_value: float
+
+    def total_error(self) -> float:
+        """Summed Hessian-weighted reconstruction error over all targets."""
+        return float(sum(
+            v for row in self.per_layer for k, v in row.items()
+            if k not in ("layer", "block")))
 
 
 def _quantize_matrix(W_io, H, method: str, cfg, key):
@@ -74,26 +92,35 @@ def _quantize_matrix(W_io, H, method: str, cfg, key):
     return res.arrays.Q.T.astype(W_io.dtype), packed
 
 
-def _attn_pre_out(p, cfg: ModelConfig, x1, pos=0):
-    """Attention up to (but not including) wo; returns (B,S,H*hd)."""
-    B, S, _ = x1.shape
-    q, k, v = attention._project_qkv(p, cfg, x1)
-    pos_arr = jnp.broadcast_to((jnp.asarray(pos) + jnp.arange(S))[None], (B, S))
-    q = cm.apply_rope(q, pos_arr, cfg.rope_theta)
-    k = cm.apply_rope(k, pos_arr, cfg.rope_theta)
-    if S > 2048:
-        o = attention.flash_attention(q, k, v, causal=True)
-    else:
-        msk = (jnp.arange(S)[None, :] <= jnp.arange(S)[:, None])[None, None, None]
-        o = attention._plain_attention(q, k, v, msk)
-    return o.reshape(B, S, -1)
-
-
-def _accumulate(H: hes.HessianState | None, x) -> hes.HessianState:
-    c = x.shape[-1]
+def _recon_error(W_io, q_io, H) -> float:
+    """Hessian-weighted reconstruction error of one quantized matrix."""
+    W = W_io.T.astype(jnp.float32)
+    Q = q_io.T.astype(jnp.float32)
     if H is None:
-        H = hes.init_hessian(c)
-    return hes.accumulate(H, x)
+        H = jnp.eye(W.shape[1], dtype=jnp.float32)
+    return float(layer_error(W, Q, H))
+
+
+def _quantize_expert_stack(Ws, tap, method, cfg, key, pack):
+    """Quantize an (E, in, out) expert stack, one routed-token Hessian per
+    expert. Returns (key, new leaf, summed reconstruction error)."""
+    E = Ws.shape[0]
+    Hs, n = tap if tap is not None else (None, None)
+    # n: raw routed-token counts summed over chunks; clamp exactly once here
+    qs, packs = [], []
+    err = 0.0
+    for e in range(E):
+        key, sub = jax.random.split(key)
+        He = Hs[e] / jnp.maximum(n[e], 1.0) if Hs is not None else None
+        q, packed = _quantize_matrix(Ws[e], He, method, cfg, sub)
+        qs.append(q)
+        packs.append(packed)
+        err += _recon_error(Ws[e], q, He)
+    if pack and packs[0] is not None:
+        leaf = jax.tree.map(lambda *a: jnp.stack(a), *packs)
+    else:
+        leaf = jnp.stack(qs)
+    return key, leaf, err
 
 
 def quantize_model(
@@ -105,180 +132,73 @@ def quantize_model(
     *,
     pack: bool = False,      # True -> VQLinear leaves (serving format)
     chunk: int = 8,          # calibration sequences per forward chunk
-    quantize_attn: bool = True,
-    quantize_mlp: bool = True,
+    quantize_attn: bool = True,   # quantize the "attn" (mixer) weight group
+    quantize_mlp: bool = True,    # quantize the "mlp" (feed-forward) group
     seed: int = 0,
     progress: Callable[[str], None] | None = None,
 ):
-    """Quantize a transformer-family model. Returns (new_params, report)."""
-    mcfg: ModelConfig = model.cfg
-    assert transformer.homogeneous(mcfg) or mcfg.family in ("dense", "moe", "vlm")
+    """Quantize any registered model family. Returns (new_params, report).
+
+    The driver is three passes per block, mediated by the family's
+    adapter: (1) Hessian capture from the current calibration activations,
+    (2) quantization of every ``WeightSpec`` target against its tap,
+    (3) advancing the activations through the quantized block.
+    """
     t0 = time.time()
+    adapter = adapters.get_adapter(model, params)
+    groups = frozenset(
+        g for g, on in (("attn", quantize_attn), ("mlp", quantize_mlp)) if on)
     key = jax.random.PRNGKey(seed)
     if cfg is None:
         cfg = VQConfig() if method == "gptvq" else {"bits": 4, "group_size": 128}
 
     n_seq = tokens.shape[0]
     chunks = [tokens[i : i + chunk] for i in range(0, n_seq, chunk)]
-    # current activations per chunk (updated as blocks quantize)
-    xs = [transformer.embed_tokens(params, mcfg, c) for c in chunks]
+    states = [adapter.calib_state(c, ci) for ci, c in enumerate(chunks)]
 
-    L = mcfg.n_layers
-    layers = params["layers"]
-    get_layer = (lambda i: jax.tree.map(lambda a: a[i], layers)) \
-        if not isinstance(layers, list) else (lambda i: layers[i])
-
-    new_layers = []
+    blocks = adapter.blocks()
     report_rows = []
-    kind = transformer.block_kind(mcfg, 0)
+    for bi, blk in enumerate(blocks):
+        # ---- pass 1: Hessian taps from current activations ----------------
+        taps: dict = {}
+        for st in states:
+            taps = blk.capture(st, taps, groups)
 
-    for li in range(L):
-        lp = {k: v for k, v in get_layer(li).items()}
-        lp_attn = dict(lp["attn"])
-        lp_ffn = dict(lp["ffn"])
-        row = {"layer": li}
-
-        # ---- pass 1: Hessians from current activations --------------------
-        H_qkv = H_wo = H_in = H_out = None
-        H_experts_in = H_experts_out = None
-        for x in xs:
-            x1 = cm.rmsnorm(x, lp["norm1"], mcfg.norm_eps)
-            if quantize_attn:
-                H_qkv = _accumulate(H_qkv, x1)
-                o = _attn_pre_out(lp["attn"], mcfg, x1)
-                H_wo = _accumulate(H_wo, o)
-            a, _ = attention.apply(lp["attn"], mcfg, x1, pos=0)
-            xa = x + a
-            x2 = cm.rmsnorm(xa, lp["norm2"], mcfg.norm_eps)
-            if quantize_mlp:
-                if kind == "dense":
-                    H_in = _accumulate(H_in, x2)
-                    h = x2 @ lp["ffn"]["w_in"]
-                    if cm.is_gated(mcfg.activation):
-                        h = jax.nn.silu(x2 @ lp["ffn"]["w_gate"]) * h \
-                            if mcfg.activation == "swiglu" else \
-                            jax.nn.gelu(x2 @ lp["ffn"]["w_gate"]) * h
-                    else:
-                        h = cm.act_fn(mcfg.activation)(h)
-                    H_out = _accumulate(H_out, h)
-                else:  # moe: per-expert Hessians from routed tokens
-                    eh_in, eh_out = _moe_hessians(lp["ffn"], mcfg, x2)
-                    H_experts_in = _merge_expert_h(H_experts_in, eh_in)
-                    H_experts_out = _merge_expert_h(H_experts_out, eh_out)
-
-        # ---- pass 2: quantize weights -------------------------------------
-        def do(W, H, subkey):
-            Hm = hes.finalize(H) if H is not None else None
-            return _quantize_matrix(W, Hm, method, cfg, subkey)
-
-        if quantize_attn:
-            for i, w in enumerate(("wq", "wk", "wv")):
+        # ---- pass 2: quantize this block's targets ------------------------
+        new_block = blk.params()
+        row = {"layer": bi, "block": blk.name}
+        for spec in blk.targets():
+            if spec.group not in groups:
+                continue
+            W = adapters.tree_get(new_block, spec.path)
+            tap = taps.get(spec.tap)
+            if tap is None and method not in ("rtn", "kmeans"):
+                # data-aware methods need the tap; a miss is an adapter bug
+                # (capture never accumulated what targets() promised)
+                raise KeyError(
+                    f"block {blk.name!r}: Hessian tap {spec.tap!r} for "
+                    f"target {spec.name!r} was never captured")
+            if spec.per_expert:
+                key, leaf, err = _quantize_expert_stack(
+                    W, tap, method, cfg, key, pack)
+            else:
+                H = hes.finalize(tap) if tap is not None else None
                 key, sub = jax.random.split(key)
-                q, packed = do(lp_attn[w], H_qkv, sub)
-                lp_attn[w] = packed if (pack and packed is not None) else q
-            key, sub = jax.random.split(key)
-            q, packed = do(lp_attn["wo"], H_wo, sub)
-            lp_attn["wo"] = packed if (pack and packed is not None) else q
-        if quantize_mlp and kind == "dense":
-            names = ["w_in", "w_out"] + (
-                ["w_gate"] if cm.is_gated(mcfg.activation) else [])
-            hmap = {"w_in": H_in, "w_gate": H_in, "w_out": H_out}
-            for w in names:
-                key, sub = jax.random.split(key)
-                q, packed = do(lp_ffn[w], hmap[w], sub)
-                lp_ffn[w] = packed if (pack and packed is not None) else q
-        elif quantize_mlp and kind == "moe":
-            lp_ffn = _quantize_experts(
-                lp_ffn, mcfg, H_experts_in, H_experts_out, method, cfg, key)
-
-        new_lp = dict(lp, attn=lp_attn, ffn=lp_ffn)
-        new_layers.append(new_lp)
+                q, packed = _quantize_matrix(W, H, method, cfg, sub)
+                leaf = packed if (pack and packed is not None) else q
+                err = _recon_error(W, q, H)
+            new_block = adapters.tree_set(new_block, spec.path, leaf)
+            row[spec.name] = err
+        blk.install(new_block)
 
         # ---- pass 3: advance activations through the quantized block ------
-        dense_lp = vql_mod.dequant_tree(new_lp, jnp.float32)
-        xs = [
-            transformer._block_apply(dense_lp, mcfg, kind, x, pos=0,
-                                     cache=None)[0]
-            for x in xs
-        ]
+        states = [blk.advance(st) for st in states]
         if progress:
-            progress(f"layer {li + 1}/{L} done")
+            progress(f"block {bi + 1}/{len(blocks)} [{blk.name}] done")
         report_rows.append(row)
 
-    # reassemble
-    if isinstance(layers, list):
-        out_layers = new_layers
-    else:
-        out_layers = jax.tree.map(lambda *ls: jnp.stack(ls), *new_layers) \
-            if not pack else _stack_with_vq(new_layers)
-    new_params = dict(params, layers=out_layers)
+    new_params = adapter.finalize()
     bpv = cfg.bits_per_value if isinstance(cfg, VQConfig) else (
         cfg["bits"] + 16.0 / cfg["group_size"])
-    return new_params, QuantizeReport(report_rows, time.time() - t0, method, bpv)
-
-
-def _stack_with_vq(layer_list):
-    """Stack per-layer trees where leaves may be VQLinear dataclasses."""
-    def is_leaf(x):
-        return isinstance(x, vql_mod.VQLinear) or not isinstance(
-            x, (dict, list, tuple))
-
-    def stack(*ls):
-        if isinstance(ls[0], vql_mod.VQLinear):
-            arrays = jax.tree.map(lambda *a: jnp.stack(a), *ls)
-            return arrays
-        return jnp.stack(ls)
-
-    return jax.tree.map(stack, *layer_list, is_leaf=is_leaf)
-
-
-def _moe_hessians(p, mcfg: ModelConfig, x2):
-    """Per-expert input/output-side Hessian accumulation for one chunk."""
-    B, S, D = x2.shape
-    E, K = mcfg.n_experts, mcfg.n_experts_active
-    xf = x2.reshape(B * S, D)
-    logits = xf.astype(jnp.float32) @ p["router"]
-    probs = jax.nn.softmax(logits, axis=-1)
-    _, eids = jax.lax.top_k(probs, K)
-    onehot = jax.nn.one_hot(eids, E, dtype=jnp.float32).sum(1)  # (N, E)
-    # input-side: H_e = sum over tokens routed to e of x x^T
-    Hin = jnp.einsum("ne,nd,nc->edc", onehot, xf, xf)
-    # output-side: inputs to w_out are h = act(...) per expert
-    act = cm.act_fn(mcfg.activation)
-    h = jnp.einsum("nd,edf->enf", xf, p["w_in"].astype(jnp.float32))
-    if cm.is_gated(mcfg.activation):
-        g = jnp.einsum("nd,edf->enf", xf, p["w_gate"].astype(jnp.float32))
-        h = act(g) * h
-    else:
-        h = act(h)
-    h = h * onehot.T[..., None]  # zero out tokens not routed to e
-    Hout = jnp.einsum("enf,eng->efg", h, h)
-    n = jnp.maximum(onehot.sum(0), 1.0)
-    return (Hin, n), (Hout, n)
-
-
-def _merge_expert_h(acc, new):
-    if acc is None:
-        return new
-    return (acc[0] + new[0], acc[1] + new[1])
-
-
-def _quantize_experts(lp_ffn, mcfg, Hin_acc, Hout_acc, method, cfg, key):
-    """Quantize each expert matrix with its routed-token Hessian."""
-    E = mcfg.n_experts
-    Hin, n_in = Hin_acc
-    Hout, _ = Hout_acc
-    out = dict(lp_ffn)
-    names = ["w_in", "w_out"] + (["w_gate"] if cm.is_gated(mcfg.activation)
-                                 else [])
-    for wname in names:
-        Ws = lp_ffn[wname]  # (E, d_in, d_out)
-        Hs = Hin if wname in ("w_in", "w_gate") else Hout
-        qs = []
-        for e in range(E):
-            key, sub = jax.random.split(key)
-            He = Hs[e] / jnp.maximum(n_in[e], 1.0)
-            q, _ = _quantize_matrix(Ws[e], He, method, cfg, sub)
-            qs.append(q)
-        out[wname] = jnp.stack(qs)
-    return out
+    return new_params, QuantizeReport(report_rows, time.time() - t0, method,
+                                      bpv)

@@ -164,6 +164,13 @@ def apply(vql: VQLinear, x: jax.Array, *, dtype=jnp.bfloat16) -> jax.Array:
 def dequant_tree(tree, dtype=jnp.bfloat16):
     """Replace any VQLinear leaves with dense (in, out) weight arrays.
 
+    Layout-agnostic across the model zoo: non-matmul leaves (norm scales,
+    conv kernels, SSM scan parameters A_log/dt_bias/D_skip, LoRA factors,
+    biases) pass through untouched, and VQLinear leaves with leading stack
+    dims — MoE expert stacks (E, ...), scanned layer stacks (L, ...), the
+    hybrid trunk's (n_groups, per, ...) — vmap the dequantization over
+    every leading axis of the packed words.
+
     Called by the model assemblies on each *layer slice* inside their layer
     scan, so only one layer's weights are ever dense at a time; everything
     else streams through HBM bit-packed. No-op for plain parameter trees.
@@ -171,7 +178,7 @@ def dequant_tree(tree, dtype=jnp.bfloat16):
     def f(x):
         if not isinstance(x, VQLinear):
             return x
-        # leading batch dims (e.g. MoE expert stacks (E, ...)) vmap away
+        # leading batch dims (expert / layer / group stacks) vmap away
         deq = lambda v: dequantize(v, dtype).T
         for _ in range(x.words.ndim - 2):
             deq = jax.vmap(deq)

@@ -1,6 +1,11 @@
 """Quantization launcher: run the GPTVQ pipeline over a model and save the
 packed checkpoint.
 
+Any architecture in the zoo quantizes through the same command — the
+pipeline resolves the family's ModelAdapter (core/adapters/) from the
+config, so `--arch whisper-small` or `--arch zamba2-7b` works exactly like
+`--arch llama2-7b`.
+
 Distribution note (DESIGN.md §3): calibration Hessian accumulation is
 data-parallel (each worker processes a shard of the calibration set; a psum
 merges per-layer Hessians), and layers are embarrassingly parallel across
@@ -19,6 +24,7 @@ import jax
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.configs import ARCHS, SMOKE
+from repro.core import adapters
 from repro.core.bpv import PAPER_SETTINGS, VQConfig
 from repro.core.pipeline import quantize_model
 from repro.data.calibration import calibration_tokens, shard_for_worker
@@ -59,14 +65,18 @@ def main():
     print(f"arch={cfg.name} setting={args.setting} "
           f"({vq_cfg.bits_per_value:.3f} bpv) calib={calib.shape}")
 
-    ppl_fp = perplexity(model, params, heldout)
+    # stub-frontend extras (audio frames) for families whose forward needs
+    # more than tokens; {} for everyone else
+    extras = adapters.calib_extras(cfg, heldout)
+    ppl_fp = perplexity(model, params, heldout, batch_extra=extras)
     t0 = time.time()
     qparams, rep = quantize_model(
         model, params, calib, "gptvq", vq_cfg, pack=True,
         progress=lambda msg: print(f"  {msg}", flush=True))
     dt = time.time() - t0
-    ppl_vq = perplexity(model, qparams, heldout)
-    print(f"quantized in {dt:.1f}s | ppl fp={ppl_fp:.3f} vq={ppl_vq:.3f}")
+    ppl_vq = perplexity(model, qparams, heldout, batch_extra=extras)
+    print(f"quantized in {dt:.1f}s | ppl fp={ppl_fp:.3f} vq={ppl_vq:.3f} "
+          f"| recon err={rep.total_error():.4f}")
 
     ck = Checkpointer(args.out, keep=1)
     ck.save(0, qparams, metadata={

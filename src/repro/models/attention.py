@@ -174,6 +174,47 @@ def flash_attention(q, k, v, *, causal: bool, q_offset=0,
 # full layer apply
 # ---------------------------------------------------------------------------
 
+def pre_out(p, cfg: ModelConfig, x, *, pos: jax.Array | int = 0,
+            causal: bool = True, use_rope: bool = True,
+            flash_threshold: int = 2048):
+    """Self-attention up to (but not including) ``wo``; returns (B,S,H*hd).
+
+    The Hessian tap for the output projection: GPTVQ quantizes ``wo``
+    against the distribution of its *inputs*, which is exactly this
+    pre-projection attention output (core/adapters/*).
+    """
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x)
+    if use_rope:
+        pos_arr = jnp.broadcast_to(
+            (jnp.asarray(pos) + jnp.arange(S))[None], (B, S))
+        q = cm.apply_rope(q, pos_arr, cfg.rope_theta)
+        k = cm.apply_rope(k, pos_arr, cfg.rope_theta)
+    if S > flash_threshold:
+        o = flash_attention(q, k, v, causal=causal)
+    else:
+        if causal:
+            msk = (jnp.arange(S)[None, :] <= jnp.arange(S)[:, None])
+            msk = msk[None, None, None]
+        else:
+            msk = jnp.ones((1, 1, 1, S, S), bool)
+        o = _plain_attention(q, k, v, msk)
+    return o.reshape(B, S, -1)
+
+
+def cross_pre_out(p, cfg: ModelConfig, x, memory, *, flash_threshold=2048):
+    """Cross-attention up to (but not including) ``wo``; returns (B,S,H*hd)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, kv_x=memory)
+    Sk = memory.shape[1]
+    if max(S, Sk) > flash_threshold:
+        o = flash_attention(q, k, v, causal=False)
+    else:
+        msk = jnp.ones((1, 1, 1, S, Sk), bool)
+        o = _plain_attention(q, k, v, msk)
+    return o.reshape(B, S, -1)
+
+
 def _project_qkv(p, cfg: ModelConfig, x, kv_x=None):
     B, S, _ = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
@@ -211,27 +252,29 @@ def apply(
     * decode: x is (B, 1, D); attends over cache[:pos+1].
     """
     B, S, D = x.shape
+    if cache is None:
+        # cache-free path shares its math with the quantizer's Hessian tap
+        o = pre_out(p, cfg, x, pos=pos, causal=causal, use_rope=use_rope,
+                    flash_threshold=flash_threshold)
+        return (o @ p["wo"]).astype(x.dtype), None
     q, k, v = _project_qkv(p, cfg, x)
     pos_arr = (jnp.asarray(pos) + jnp.arange(S))[None, :]  # (1, S)
     if use_rope:
         q = cm.apply_rope(q, jnp.broadcast_to(pos_arr, (B, S)), cfg.rope_theta)
         k = cm.apply_rope(k, jnp.broadcast_to(pos_arr, (B, S)), cfg.rope_theta)
 
-    if cache is not None:
-        ck = jax.lax.dynamic_update_slice(
-            cache.k, k.astype(cache.k.dtype), (0, jnp.asarray(pos), 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache.v, v.astype(cache.v.dtype), (0, jnp.asarray(pos), 0, 0))
-        new_cache = KVCache(ck, cv)
-        if S == 1:
-            # decode: attend over the whole cache with a length mask
-            Sk = ck.shape[1]
-            valid = (jnp.arange(Sk) <= jnp.asarray(pos))[None, None, None, None, :]
-            o = _plain_attention(q, ck, cv, valid)
-            return (o.reshape(B, S, -1) @ p["wo"]).astype(x.dtype), new_cache
-        k, v = ck[:, : S + 0], cv[:, : S + 0]  # prefill from position 0
-    else:
-        new_cache = None
+    ck = jax.lax.dynamic_update_slice(
+        cache.k, k.astype(cache.k.dtype), (0, jnp.asarray(pos), 0, 0))
+    cv = jax.lax.dynamic_update_slice(
+        cache.v, v.astype(cache.v.dtype), (0, jnp.asarray(pos), 0, 0))
+    new_cache = KVCache(ck, cv)
+    if S == 1:
+        # decode: attend over the whole cache with a length mask
+        Sk = ck.shape[1]
+        valid = (jnp.arange(Sk) <= jnp.asarray(pos))[None, None, None, None, :]
+        o = _plain_attention(q, ck, cv, valid)
+        return (o.reshape(B, S, -1) @ p["wo"]).astype(x.dtype), new_cache
+    k, v = ck[:, : S + 0], cv[:, : S + 0]  # prefill from position 0
 
     if S > flash_threshold:
         o = flash_attention(q, k, v, causal=causal)
@@ -249,12 +292,5 @@ def apply(
 
 def cross_apply(p, cfg: ModelConfig, x, memory, *, flash_threshold=2048):
     """Cross-attention (whisper decoder): keys/values from encoder memory."""
-    B, S, D = x.shape
-    q, k, v = _project_qkv(p, cfg, x, kv_x=memory)
-    Sk = memory.shape[1]
-    if max(S, Sk) > flash_threshold:
-        o = flash_attention(q, k, v, causal=False)
-    else:
-        msk = jnp.ones((1, 1, 1, S, Sk), bool)
-        o = _plain_attention(q, k, v, msk)
-    return (o.reshape(B, S, -1) @ p["wo"]).astype(x.dtype)
+    o = cross_pre_out(p, cfg, x, memory, flash_threshold=flash_threshold)
+    return (o @ p["wo"]).astype(x.dtype)

@@ -84,20 +84,31 @@ def param_specs(cfg: ModelConfig) -> dict:
     }
 
 
+def embed_frames(params, cfg: ModelConfig, frames: jax.Array):
+    """Add learned positional embeddings to the (stub) frame embeddings."""
+    return frames + params["pos_enc"][None, : frames.shape[1]].astype(
+        frames.dtype)
+
+
+def enc_block_apply(layer_p, cfg: ModelConfig, h):
+    """One encoder block (bidirectional attention + MLP) on (B, S_enc, D)."""
+    a, _ = attention.apply(
+        layer_p["attn"], cfg, cm.rmsnorm(h, layer_p["norm1"], cfg.norm_eps),
+        causal=False, use_rope=False)
+    h = h + a
+    f = mlp.apply(layer_p["ffn"], cfg,
+                  cm.rmsnorm(h, layer_p["norm2"], cfg.norm_eps))
+    return h + f
+
+
 def encode(params, cfg: ModelConfig, frames: jax.Array, remat=True):
     """frames: (B, S_enc, D) precomputed embeddings (conv frontend stub)."""
-    x = frames + params["pos_enc"][None, : frames.shape[1]].astype(frames.dtype)
+    x = embed_frames(params, cfg, frames)
 
     def body(h, layer_p):
         from repro.core import vq_linear as vql_mod
         layer_p = vql_mod.dequant_tree(layer_p, cm.DTYPES[cfg.dtype])
-        a, _ = attention.apply(
-            layer_p["attn"], cfg, cm.rmsnorm(h, layer_p["norm1"], cfg.norm_eps),
-            causal=False, use_rope=False)
-        h = h + a
-        f = mlp.apply(layer_p["ffn"], cfg,
-                      cm.rmsnorm(h, layer_p["norm2"], cfg.norm_eps))
-        return h + f, None
+        return enc_block_apply(layer_p, cfg, h), None
 
     body_fn = jax.checkpoint(body) if remat else body
     x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
@@ -144,6 +155,24 @@ def _cross_attend(layer_p, cfg, x, ck, cv):
     msk = jnp.ones((1, 1, 1, S, ck.shape[1]), bool)
     o = attention._plain_attention(q, ck, cv, msk)
     return (o.reshape(B, S, H * hd) @ layer_p["wo"]).astype(x.dtype)
+
+
+def dec_block_apply(layer_p, cfg: ModelConfig, h, memory):
+    """One decoder block (causal self-attn, cross-attn over ``memory``,
+    MLP) on (B, S, D) — the cache-free prefill/train path, used by the
+    audio-family quantization adapter (core/adapters/encdec.py)."""
+    a, _ = attention.apply(
+        layer_p["self_attn"], cfg,
+        cm.rmsnorm(h, layer_p["norm1"], cfg.norm_eps), use_rope=False)
+    h = h + a
+    ck, cv = _cross_kv(layer_p["cross_attn"], cfg, memory)
+    c = _cross_attend(layer_p["cross_attn"], cfg,
+                      cm.rmsnorm(h, layer_p["norm_x"], cfg.norm_eps),
+                      ck.astype(h.dtype), cv.astype(h.dtype))
+    h = h + c
+    f = mlp.apply(layer_p["ffn"], cfg,
+                  cm.rmsnorm(h, layer_p["norm2"], cfg.norm_eps))
+    return h + f
 
 
 def forward(params, cfg: ModelConfig, tokens, *, frames=None, memory=None,

@@ -111,14 +111,31 @@ def cache_specs(cfg: ModelConfig, seq_shard: bool = False):
     return HybridCache(mamba=m, attn=a)
 
 
-def _shared_attn(p, lora_g, cfg: ModelConfig, h, emb0, *, pos, kv_cache):
-    """One invocation of the shared block with this group's LoRA delta."""
-    xin = jnp.concatenate([h, emb0], axis=-1)
-    xin = cm.rmsnorm(xin, p["norm"], cfg.norm_eps)
+def lora_attn_params(p, lora_g, cfg: ModelConfig):
+    """Shared-attention params with one group's LoRA delta folded in.
+
+    ``lora_g`` is the per-group slice of the "lora" tree. The base weights
+    stay shared (and may arrive dequantized from VQ); the low-rank A @ B
+    delta is added densely per invocation.
+    """
     attn_p = dict(p["attn"])
     for name, wname in (("q", "wq"), ("k", "wk"), ("v", "wv")):
         A, B = lora_g[name]["A"], lora_g[name]["B"]
         attn_p[wname] = attn_p[wname] + A @ B
+    return attn_p
+
+
+def shared_attn_input(p, cfg: ModelConfig, h, emb0):
+    """The normalized concat(hidden, initial-embedding) stream entering the
+    shared block's q/k/v — the Hessian tap for its projections."""
+    xin = jnp.concatenate([h, emb0], axis=-1)
+    return cm.rmsnorm(xin, p["norm"], cfg.norm_eps)
+
+
+def _shared_attn(p, lora_g, cfg: ModelConfig, h, emb0, *, pos, kv_cache):
+    """One invocation of the shared block with this group's LoRA delta."""
+    xin = shared_attn_input(p, cfg, h, emb0)
+    attn_p = lora_attn_params(p, lora_g, cfg)
     y, new_kv = attention.apply(attn_p, cfg, xin, pos=pos, cache=kv_cache)
     return y, new_kv
 

@@ -28,11 +28,17 @@ def specs(cfg: ModelConfig):
     return s
 
 
-def apply(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+def pre_out(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Hidden activations entering ``w_out`` — the Hessian tap for the down
+    projection (core/adapters/*)."""
     act = cm.act_fn(cfg.activation)
     h = x @ p["w_in"]
     if cm.is_gated(cfg.activation):
         h = act(x @ p["w_gate"]) * h
     else:
         h = act(h)
-    return (h @ p["w_out"]).astype(x.dtype)
+    return h
+
+
+def apply(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    return (pre_out(p, cfg, x) @ p["w_out"]).astype(x.dtype)

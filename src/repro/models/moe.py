@@ -102,6 +102,46 @@ def _dispatch_one(xf, p, cfg: ModelConfig, C: int):
     return y, aux
 
 
+def expert_hessians(p, cfg: ModelConfig, x):
+    """Per-expert GPTVQ Hessian statistics for one calibration chunk.
+
+    x: (B, S, D) layer inputs. Routes every token with the layer's own
+    router (top-k, no capacity drop — calibration wants the true input
+    distribution, not the serving-time drop pattern) and accumulates
+
+      * input-side  H_e = sum_{tokens routed to e} x x^T        (E, D, D)
+      * output-side H_e = sum_{tokens routed to e} h_e h_e^T    (E, F, F)
+
+    where h_e is the expert's activated hidden state; tokens not routed to
+    an expert are masked to zero on the ``w_out`` side so they contribute
+    nothing. Returns ((Hin, n), (Hout, n)) with n = per-expert *raw* token
+    counts for this chunk — counts sum across chunks, and the consumer
+    clamps once at division time (clamping per chunk would inflate n for
+    experts unrouted in some chunks and skew the mean-Hessian scale).
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.n_experts_active
+    xf = x.reshape(B * S, D)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, eids = jax.lax.top_k(probs, K)
+    onehot = jax.nn.one_hot(eids, E, dtype=jnp.float32).sum(1)  # (N, E)
+    # input-side: H_e = sum over tokens routed to e of x x^T
+    Hin = jnp.einsum("ne,nd,nc->edc", onehot, xf, xf)
+    # output-side: inputs to w_out are h = act(...) per expert
+    act = cm.act_fn(cfg.activation)
+    h = jnp.einsum("nd,edf->enf", xf, p["w_in"].astype(jnp.float32))
+    if cm.is_gated(cfg.activation):
+        g = jnp.einsum("nd,edf->enf", xf, p["w_gate"].astype(jnp.float32))
+        h = act(g) * h
+    else:
+        h = act(h)
+    h = h * onehot.T[..., None]  # zero out tokens not routed to e
+    Hout = jnp.einsum("enf,eng->efg", h, h)
+    n = onehot.sum(0)
+    return (Hin, n), (Hout, n)
+
+
 def _maybe_constrain(t, spec):
     """Sharding constraint when tracing under a mesh (no-op otherwise)."""
     try:

@@ -196,8 +196,15 @@ def ssd_reference(xh, Bm, Cm, dt, A):
     return ys.transpose(1, 0, 2, 3), hf
 
 
-def apply(p, cfg: ModelConfig, x: jax.Array, cache: SSMCache | None = None):
-    """Mamba2 mixer. x: (B,S,D). Returns (y, new_cache)."""
+def pre_out(p, cfg: ModelConfig, x: jax.Array, cache: SSMCache | None = None):
+    """Mamba2 mixer up to (but not including) ``out_proj``.
+
+    Returns (y, new_cache) with y: (B, S, d_inner) — the gated, normalized
+    scan output that feeds the output projection. This is the Hessian tap
+    for quantizing ``out_proj`` (core/adapters/*); the conv/scan parameters
+    (conv_w, A_log, dt_bias, D_skip, norm_scale) are not matmul weights and
+    stay dense.
+    """
     Bsz, S, D = x.shape
     d_inner, heads, conv_ch = _dims(cfg)
     N, hd, w = cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_conv_width
@@ -235,7 +242,13 @@ def apply(p, cfg: ModelConfig, x: jax.Array, cache: SSMCache | None = None):
     y = y.reshape(Bsz, S, d_inner)
     y = cm.rmsnorm(y.astype(x.dtype) * jax.nn.silu(z), p["norm_scale"],
                    cfg.norm_eps)
-    out = y @ p["out_proj"]
     new_cache = SSMCache(h=Hfin.astype(jnp.float32), conv=new_conv) \
         if cache is not None else None
+    return y, new_cache
+
+
+def apply(p, cfg: ModelConfig, x: jax.Array, cache: SSMCache | None = None):
+    """Mamba2 mixer. x: (B,S,D). Returns (y, new_cache)."""
+    y, new_cache = pre_out(p, cfg, x, cache)
+    out = y @ p["out_proj"]
     return out.astype(x.dtype), new_cache

@@ -127,7 +127,13 @@ def _mlstm_core(q, k, v, i_raw, f_raw, state: MLSTMCache):
     return hs.transpose(1, 0, 2, 3), MLSTMCache(C, n, m)  # (B,S,H,hd)
 
 
-def mlstm_apply(p, cfg: ModelConfig, x, cache: MLSTMCache | None = None):
+def mlstm_pre_down(p, cfg: ModelConfig, x, cache: MLSTMCache | None = None):
+    """mLSTM block up to (but not including) ``down``.
+
+    Returns (u, h, new_state): u is the up-projected stream feeding the
+    q/k/v/o heads, h the gated core output feeding ``down`` — the two
+    Hessian taps the xLSTM adapter quantizes against (core/adapters/*).
+    """
     B, S, D = x.shape
     d_inner, H, hd = _mlstm_dims(cfg)
     u = x @ p["up"]
@@ -141,6 +147,11 @@ def mlstm_apply(p, cfg: ModelConfig, x, cache: MLSTMCache | None = None):
     h, new_state = _mlstm_core(q, k, v, i_raw, f_raw, state)
     o = jax.nn.sigmoid(u @ p["w_o"])
     h = (h.reshape(B, S, d_inner).astype(x.dtype) * o) * jax.nn.silu(g)
+    return u, h, new_state
+
+
+def mlstm_apply(p, cfg: ModelConfig, x, cache: MLSTMCache | None = None):
+    _, h, new_state = mlstm_pre_down(p, cfg, x, cache)
     y = h @ p["down"]
     return y.astype(x.dtype), (new_state if cache is not None else None)
 
@@ -251,6 +262,11 @@ def slstm_apply(p, cfg: ModelConfig, x, cache: SLSTMCache | None = None):
     return y, new_cache
 
 
+def slstm_ffn_pre_out(p, cfg: ModelConfig, x):
+    """Gated-FFN hidden state entering ``ffn.w_out`` (Hessian tap)."""
+    return jax.nn.silu(x @ p["ffn"]["w_gate"]) * (x @ p["ffn"]["w_in"])
+
+
 def slstm_ffn(p, cfg: ModelConfig, x):
-    h = jax.nn.silu(x @ p["ffn"]["w_gate"]) * (x @ p["ffn"]["w_in"])
+    h = slstm_ffn_pre_out(p, cfg, x)
     return (h @ p["ffn"]["w_out"]).astype(x.dtype)

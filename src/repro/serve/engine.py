@@ -46,7 +46,6 @@ class Engine:
         self.eos_id = eos_id
         self.key = jax.random.PRNGKey(seed)
 
-        _MERGE_BATCH["b"] = max_batch
         self.cache = model.init_cache(max_batch, max_len, dtype=jnp.float32)
         self.prefill = jax.jit(make_prefill(model))
         self.decode = jax.jit(make_decode(model))
@@ -75,7 +74,7 @@ class Engine:
         logits, new_cache = self.prefill(
             self.params, {"tokens": tok_b}, self.cache)
         # merge only this slot's cache rows (batch axis differs per leaf kind)
-        self.cache = _merge_slot(self.cache, new_cache, slot)
+        self.cache = _merge_slot(self.cache, new_cache, slot, self.max_batch)
         self.slots[slot] = req
         self.pos[slot] = S
         nxt = int(jnp.argmax(logits[slot, S - 1]))
@@ -94,10 +93,13 @@ class Engine:
         toks = jnp.asarray(self.last_tok[:, None], jnp.int32)
         logits, self.cache = self.decode(self.params, toks, self.cache, pos)
         self.key, sub = jax.random.split(self.key)
-        nxt = np.asarray(sampling.sample(
-            sub, logits[:, -1],
-            temperature=max((self.slots[i].temperature for i in active),
-                            default=0.0)))
+        # per-slot temperatures: every request samples under its own
+        # (inactive slots are greedy; their draws are discarded anyway)
+        temps = np.zeros(self.max_batch, np.float32)
+        for i in active:
+            temps[i] = self.slots[i].temperature
+        nxt = np.asarray(sampling.sample(sub, logits[:, -1],
+                                         temperature=jnp.asarray(temps)))
         for i in active:
             req = self.slots[i]
             t = int(nxt[i])
@@ -128,17 +130,18 @@ class Engine:
         return requests
 
 
-def _merge_slot(old_cache, new_cache, slot: int, batch: int | None = None):
+def _merge_slot(old_cache, new_cache, slot: int, batch: int):
     """Copy one request's batch row from new_cache into old_cache.
 
     The batch axis position differs per leaf (layer-stacked attention caches
     put it at axis 1, hybrid mamba stacks at axis 2, ...); every cache layout
-    in the zoo keeps exactly one axis of size ``max_batch``, located here as
-    the first size match.
+    in the zoo keeps exactly one axis of size ``batch`` (the engine's
+    ``max_batch``), located here as the first size match. ``batch`` is
+    threaded explicitly so two engines with different pool sizes can
+    coexist in one process.
     """
     def merge_leaf(o, n):
-        b = batch if batch is not None else _MERGE_BATCH["b"]
-        ax = next((i for i, s in enumerate(o.shape) if s == b), None)
+        ax = next((i for i, s in enumerate(o.shape) if s == batch), None)
         if ax is None:
             return n
         idx = [slice(None)] * o.ndim
@@ -146,6 +149,3 @@ def _merge_slot(old_cache, new_cache, slot: int, batch: int | None = None):
         return o.at[tuple(idx)].set(n[tuple(idx)])
 
     return jax.tree.map(merge_leaf, old_cache, new_cache)
-
-
-_MERGE_BATCH = {"b": 0}

@@ -1,13 +1,26 @@
-"""Token sampling: greedy / temperature / top-k / top-p."""
+"""Token sampling: greedy / temperature / top-k / top-p.
+
+``temperature`` may be a scalar or a per-row (B,) vector — the batched
+serving engine mixes requests with different temperatures in one decode
+tick, so each slot samples under its own. Rows with temperature <= 0 are
+greedy (argmax).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 
-def sample(key, logits: jax.Array, *, temperature: float = 1.0,
+def sample(key, logits: jax.Array, *, temperature=1.0,
            top_k: int = 0, top_p: float = 0.0) -> jax.Array:
-    """logits: (B, V) -> (B,) int32."""
+    """logits: (B, V); temperature: scalar or (B,) -> (B,) int32."""
+    temperature = jnp.asarray(temperature, jnp.float32)
+    if temperature.ndim > 0:
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        safe_t = jnp.where(temperature > 0.0, temperature, 1.0)
+        sampled = sample(key, logits / safe_t[:, None],
+                         temperature=1.0, top_k=top_k, top_p=top_p)
+        return jnp.where(temperature > 0.0, sampled, greedy)
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / temperature

@@ -1,0 +1,134 @@
+"""Adapter-registry coverage: every model family quantizes through the
+same generic driver, MoE per-expert Hessians match a naive per-token loop,
+and the data-aware method beats RTN on reconstruction error."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import FAMILY_REPRESENTATIVE as FAMILY_ARCH, SMOKE
+from repro.core import adapters
+from repro.core import vq_linear as vql
+from repro.core.bpv import VQConfig
+from repro.core.pipeline import quantize_model
+from repro.data.synthetic import sample_batch
+from repro.models import common as cm, model_zoo, moe
+from repro.train.loss import perplexity
+
+VQ_TINY = VQConfig(d=2, bits_per_dim=3, group_size=4096, em_iters=4,
+                   codebook_update_iters=2)
+
+
+def _errors(report):
+    return [v for row in report.per_layer for k, v in row.items()
+            if k not in ("layer", "block")]
+
+
+@pytest.mark.parametrize("family", sorted(FAMILY_ARCH))
+def test_registry_quantizes_and_packs_every_family(family):
+    """quantize_model(gptvq, pack=True) end-to-end on a tiny config from
+    each family: finite per-target reconstruction errors, VQLinear leaves
+    in the tree, and a finite perplexity when serving the packed params."""
+    cfg = SMOKE[FAMILY_ARCH[family]].scaled(dtype="float32")
+    model = model_zoo.build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    calib = sample_batch(jax.random.PRNGKey(9), cfg.vocab_size, 16, 4)
+    qp, rep = quantize_model(model, params, calib, "gptvq", VQ_TINY,
+                             pack=True, chunk=4, seed=1)
+    errs = _errors(rep)
+    assert errs, f"{family}: no quantized targets reported"
+    assert all(np.isfinite(e) for e in errs), (family, errs)
+    assert vql.tree_has_vq(qp), f"{family}: pack=True produced no VQLinear"
+    heldout = sample_batch(jax.random.PRNGKey(4), cfg.vocab_size, 16, 2)
+    extras = adapters.calib_extras(cfg, heldout)
+    ppl = perplexity(model, qp, heldout, batch_extra=extras)
+    assert np.isfinite(ppl), f"{family}: packed forward diverged"
+
+
+def test_gptvq_reconstruction_beats_rtn_on_dense():
+    """Data-aware GPTVQ must reconstruct better (Hessian-weighted
+    layer_error) than round-to-nearest at comparable bits on the dense
+    family."""
+    cfg = SMOKE[FAMILY_ARCH["dense"]].scaled(dtype="float32")
+    model = model_zoo.build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    calib = sample_batch(jax.random.PRNGKey(9), cfg.vocab_size, 16, 4)
+    _, rep_vq = quantize_model(model, params, calib, "gptvq", VQ_TINY,
+                               chunk=4, seed=1)
+    _, rep_rtn = quantize_model(model, params, calib, "rtn",
+                                {"bits": 3, "group_size": 128}, chunk=4)
+    err_vq, err_rtn = rep_vq.total_error(), rep_rtn.total_error()
+    assert np.isfinite(err_vq) and np.isfinite(err_rtn)
+    assert err_vq < err_rtn, (err_vq, err_rtn)
+
+
+def test_unknown_family_raises():
+    class FakeCfg:
+        family = "granite-moe-hybrid"
+
+    class FakeModel:
+        cfg = FakeCfg()
+
+    with pytest.raises(KeyError):
+        adapters.get_adapter(FakeModel(), {})
+
+
+def test_moe_expert_hessians_match_naive_token_loop():
+    """moe.expert_hessians (the adapter's per-expert tap) against a naive
+    per-token python loop: routed-token accumulation on the input side and
+    routed-token *masking* on the w_out (hidden) side."""
+    cfg = SMOKE[FAMILY_ARCH["moe"]].scaled(dtype="float32")
+    E, K = cfg.n_experts, cfg.n_experts_active
+    p = moe.init(jax.random.PRNGKey(3), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 6, cfg.d_model),
+                          jnp.float32)
+    (Hin, n_in), (Hout, n_out) = moe.expert_hessians(p, cfg, x)
+
+    xf = np.asarray(x, np.float64).reshape(-1, cfg.d_model)
+    router = np.asarray(p["router"], np.float64)
+    w_in = np.asarray(p["w_in"], np.float64)
+    w_gate = np.asarray(p["w_gate"], np.float64)
+    F = w_in.shape[-1]
+    Hin_ref = np.zeros((E, cfg.d_model, cfg.d_model))
+    Hout_ref = np.zeros((E, F, F))
+    n_ref = np.zeros(E)
+    for t in range(xf.shape[0]):
+        logits = xf[t] @ router
+        probs = np.exp(logits - logits.max())
+        probs /= probs.sum()
+        routed = np.argsort(-probs, kind="stable")[:K]
+        for e in routed:
+            n_ref[e] += 1
+            Hin_ref[e] += np.outer(xf[t], xf[t])
+            # hidden state of THIS expert for this token (swiglu gate)
+            g = xf[t] @ w_gate[e]
+            h = (g / (1 + np.exp(-g))) * (xf[t] @ w_in[e])
+            Hout_ref[e] += np.outer(h, h)
+        # tokens NOT routed to e contribute nothing on the w_out side —
+        # the masking the vectorized path implements with the onehot
+    np.testing.assert_allclose(np.asarray(n_in), n_ref, rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(Hin), Hin_ref, rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(Hout), Hout_ref, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_moe_pack_roundtrip_expert_stack():
+    """Packed MoE expert stacks (leading E dim on every VQLinear leaf)
+    dequantize to the fake-quant weights."""
+    cfg = SMOKE[FAMILY_ARCH["moe"]].scaled(dtype="float32")
+    model = model_zoo.build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    calib = sample_batch(jax.random.PRNGKey(9), cfg.vocab_size, 16, 4)
+    qp_fake, _ = quantize_model(model, params, calib, "gptvq", VQ_TINY,
+                                chunk=4, seed=7)
+    qp_pack, _ = quantize_model(model, params, calib, "gptvq", VQ_TINY,
+                                pack=True, chunk=4, seed=7)
+    fake_w = jax.tree.map(lambda a: a[0], qp_fake["layers"])["ffn"]["w_in"]
+    # slicing the stacked tree's array leaves keeps VQLinear metadata
+    packed = jax.tree.map(lambda a: a[0], qp_pack["layers"])
+    packed_w = packed["ffn"]["w_in"]
+    assert isinstance(packed_w, vql.VQLinear)
+    dense = vql.dequant_tree({"w": packed_w}, jnp.float32)["w"]
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(fake_w),
+                               rtol=2e-2, atol=2e-2)

@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (declared in pyproject [test]); "
+           "skipped on bare containers")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import codebook as cb
 from repro.core import packing

@@ -164,6 +164,62 @@ class TestEngine:
         assert all(all(0 <= t < model.cfg.padded_vocab for t in r.out_tokens)
                    for r in out)
 
+    def test_per_slot_temperature_sampling(self):
+        """A greedy (t=0) request must decode deterministically even when
+        batched with a high-temperature request in the same tick."""
+        from repro.serve import sampling
+
+        # unit level: vector temperature mixes greedy and sampled rows
+        logits = jnp.log(jnp.asarray([[0.05, 0.9, 0.05],
+                                      [0.05, 0.9, 0.05]]))
+        temps = jnp.asarray([0.0, 50.0])
+        draws = {int(sampling.sample(jax.random.PRNGKey(s), logits,
+                                     temperature=temps)[1])
+                 for s in range(64)}
+        for s in range(8):
+            out = sampling.sample(jax.random.PRNGKey(s), logits,
+                                  temperature=temps)
+            assert int(out[0]) == 1  # greedy row pinned to argmax
+        assert len(draws) > 1  # hot row actually samples
+
+        # engine level: the greedy request's tokens are independent of the
+        # stochastic neighbour sharing its batch
+        model = tiny_model()
+        params = model.init_params(jax.random.PRNGKey(0))
+        rng = np.random.RandomState(0)
+        prompt = rng.randint(0, 255, size=6)
+        outs = []
+        for seed in (0, 1):
+            eng = Engine(model, params, max_batch=2, max_len=48, seed=seed)
+            greedy = Request(rid=0, prompt=prompt, max_new_tokens=6,
+                             temperature=0.0)
+            hot = Request(rid=1, prompt=rng.randint(0, 255, size=6),
+                          max_new_tokens=6, temperature=5.0)
+            eng.run([greedy, hot])
+            outs.append(list(greedy.out_tokens))
+        assert outs[0] == outs[1], outs
+
+    def test_two_engines_with_different_max_batch_coexist(self):
+        """Slot-merge must use each engine's own max_batch (regression for
+        the module-global _MERGE_BATCH hack)."""
+        model = tiny_model()
+        params = model.init_params(jax.random.PRNGKey(0))
+        eng_a = Engine(model, params, max_batch=2, max_len=48)
+        eng_b = Engine(model, params, max_batch=4, max_len=48)
+        rng = np.random.RandomState(0)
+        reqs_a = [Request(rid=i, prompt=rng.randint(0, 255, size=5),
+                          max_new_tokens=3) for i in range(2)]
+        reqs_b = [Request(rid=10 + i, prompt=rng.randint(0, 255, size=5),
+                          max_new_tokens=3) for i in range(3)]
+        # interleave admissions so each engine merges slots after the OTHER
+        # engine was constructed (the old global held the latest max_batch)
+        eng_a.admit(reqs_a[0])
+        eng_b.admit(reqs_b[0])
+        eng_a.run(reqs_a[1:])
+        eng_b.run(reqs_b[1:])
+        for r in reqs_a + reqs_b:
+            assert len(r.out_tokens) >= 3 or r.done
+
 
 class TestQuantizePipeline:
     def test_gptvq_improves_over_rtn_on_model(self):
