@@ -1,0 +1,265 @@
+"""Serve-throughput benchmark: paged continuous-batching engine vs the
+pre-PR-2 dense-slot engine, bf16/fp32 vs GPTVQ-packed weights.
+
+Workload: a burst of requests with many *distinct* prompt lengths (the
+realistic serving shape) on the qwen3-1.7b config family. Reports decode
+tokens/s and time-to-first-token (TTFT) at max_batch in {1, 8}, and emits
+``BENCH_serve.json``. The legacy engine is kept here (not in serve/) as the
+measurement baseline: it prefility-tiles a full max_batch-wide batch per
+admission and retraces per distinct prompt length — exactly the costs the
+paged engine removes.
+
+Run: PYTHONPATH=src python benchmarks/serve_throughput.py --smoke
+     [--out BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SMOKE
+from repro.core.bpv import VQConfig
+from repro.core.pipeline import quantize_model
+from repro.data.synthetic import sample_batch
+from repro.models import model_zoo
+from repro.serve import sampling
+from repro.serve.engine import Engine, Request
+from repro.serve.serve_step import make_decode, make_prefill
+
+
+# ---------------------------------------------------------------------------
+# legacy dense-slot engine (pre-paged baseline, measurement only)
+# ---------------------------------------------------------------------------
+
+class LegacySlotEngine:
+    """The PR-1 engine: dense (max_batch, max_len) cache, full prefill at
+    admit over a max_batch-wide tiled batch, one shared max-position write
+    index per decode tick."""
+
+    def __init__(self, model, params, *, max_batch=8, max_len=512):
+        self.model, self.params = model, params
+        self.max_batch, self.max_len = max_batch, max_len
+        self.cache = model.init_cache(max_batch, max_len, dtype=jnp.float32)
+        self.prefill = jax.jit(make_prefill(model))
+        self.decode = jax.jit(make_decode(model))
+        self.slots = [None] * max_batch
+        self.pos = np.zeros(max_batch, np.int64)
+        self.last_tok = np.zeros(max_batch, np.int32)
+        self.ticks = 0
+
+    def _free_slot(self):
+        return next((i for i, s in enumerate(self.slots) if s is None), None)
+
+    def admit(self, req):
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        S = len(req.prompt)
+        assert S + req.max_new_tokens <= self.max_len
+        tok_b = jnp.zeros((self.max_batch, S), jnp.int32).at[slot].set(
+            jnp.asarray(req.prompt, jnp.int32))
+        logits, new_cache = self.prefill(
+            self.params, {"tokens": tok_b}, self.cache)
+        self.cache = _merge_slot(self.cache, new_cache, slot, self.max_batch)
+        self.slots[slot] = req
+        self.pos[slot] = S
+        nxt = int(jnp.argmax(logits[slot, S - 1]))
+        req.out_tokens.append(nxt)
+        self.last_tok[slot] = nxt
+        return True
+
+    def step(self):
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return
+        pos = int(self.pos.max())  # shared write position (the known bug)
+        toks = jnp.asarray(self.last_tok[:, None], jnp.int32)
+        logits, self.cache = self.decode(self.params, toks, self.cache, pos)
+        nxt = np.asarray(sampling.sample(jax.random.PRNGKey(0),
+                                         logits[:, -1], temperature=0.0))
+        for i in active:
+            req = self.slots[i]
+            t = int(nxt[i])
+            req.out_tokens.append(t)
+            self.last_tok[i] = t
+            self.pos[i] = pos + 1
+            if len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                self.slots[i] = None
+        self.ticks += 1
+
+
+def _merge_slot(old_cache, new_cache, slot, batch):
+    def merge_leaf(o, n):
+        ax = next((i for i, s in enumerate(o.shape) if s == batch), None)
+        if ax is None:
+            return n
+        idx = [slice(None)] * o.ndim
+        idx[ax] = slice(slot, slot + 1)
+        return o.at[tuple(idx)].set(n[tuple(idx)])
+
+    return jax.tree.map(merge_leaf, old_cache, new_cache)
+
+
+# ---------------------------------------------------------------------------
+# drivers (shared TTFT instrumentation)
+# ---------------------------------------------------------------------------
+
+def run_paged(eng, reqs):
+    for r in reqs:
+        eng.scheduler.submit(r)
+    ttft = {}
+    t0 = time.perf_counter()
+    while eng.scheduler.has_work() and eng.ticks < 100_000:
+        eng.step()
+        now = time.perf_counter() - t0
+        for r in reqs:
+            if r.out_tokens and r.rid not in ttft:
+                ttft[r.rid] = now
+    wall = time.perf_counter() - t0
+    return wall, sum(len(r.out_tokens) for r in reqs), ttft
+
+
+def run_legacy(eng, reqs):
+    pending = list(reqs)
+    ttft = {}
+    t0 = time.perf_counter()
+    while pending or any(eng.slots):
+        while pending and eng._free_slot() is not None:
+            if not eng.admit(pending[0]):
+                break
+            pending.pop(0)
+        eng.step()
+        now = time.perf_counter() - t0
+        for r in reqs:
+            if r.out_tokens and r.rid not in ttft:
+                ttft[r.rid] = now
+    wall = time.perf_counter() - t0
+    return wall, sum(len(r.out_tokens) for r in reqs), ttft
+
+
+class BenchCase:
+    """One (engine kind, weights, max_batch) cell: a persistent warm engine
+    plus per-pass measurements. Passes of different cases are interleaved
+    and summarized by the median, so ambient machine noise hits every case
+    evenly instead of whichever ran last."""
+
+    def __init__(self, kind, wtag, model, params, max_batch, max_len):
+        self.kind, self.wtag, self.max_batch = kind, wtag, max_batch
+        if kind == "paged":
+            self.eng = Engine(model, params, max_batch=max_batch,
+                              max_len=max_len)
+            self.runner = run_paged
+        else:
+            self.eng = LegacySlotEngine(model, params, max_batch=max_batch,
+                                        max_len=max_len)
+            self.runner = run_legacy
+        self.cold_wall_s = None
+        self.walls, self.ttfts = [], []
+        self.tokens = 0
+
+    def one_pass(self, prompts, max_new, rid0):
+        reqs = [Request(rid=rid0 + i, prompt=p, max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+        wall, tokens, ttft = self.runner(self.eng, reqs)
+        if self.cold_wall_s is None:
+            self.cold_wall_s = wall  # first pass includes jit compiles
+        else:
+            self.walls.append(wall)
+            self.ttfts.append(float(np.mean(sorted(ttft.values()))))
+            self.tokens = tokens
+
+    def summary(self):
+        walls = sorted(self.walls)
+        med = walls[len(walls) // 2]
+        return {
+            "engine": self.kind, "weights": self.wtag,
+            "max_batch": self.max_batch, "tokens": self.tokens,
+            "cold_wall_s": round(self.cold_wall_s, 4),
+            "wall_s_median": round(med, 4),
+            "tokens_per_s": round(self.tokens / med, 2),
+            "tokens_per_s_best": round(self.tokens / walls[0], 2),
+            "ttft_mean_s": round(sorted(self.ttfts)[len(self.ttfts) // 2],
+                                 4),
+        }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run on the qwen3-1.7b SMOKE config")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    ap.add_argument("--requests", type=int, default=0)
+    ap.add_argument("--max-new", type=int, default=0)
+    args = ap.parse_args()
+
+    # qwen3-1.7b architecture shape, scaled to a CI-runnable cell (the
+    # SMOKE d_model=64 cell is per-op-overhead-bound and measures nothing)
+    cfg = SMOKE["qwen3-1.7b"].scaled(
+        dtype="float32", d_model=256, n_heads=8, n_kv_heads=4, head_dim=32,
+        d_ff=512, vocab_size=4096, max_seq_len=256)
+    n_req = args.requests or (8 if args.smoke else 16)
+    max_new = args.max_new or (16 if args.smoke else 32)
+    max_len = 128 if args.smoke else 256
+    passes = 3 if args.smoke else 5
+    model = model_zoo.build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+
+    print(f"== quantizing {cfg.name} smoke weights (GPTVQ 2D packed) ==",
+          flush=True)
+    calib = sample_batch(jax.random.PRNGKey(9), cfg.vocab_size, 32, 4)
+    vq_cfg = VQConfig(d=2, bits_per_dim=3, group_size=4096, em_iters=5,
+                      codebook_update_iters=0)
+    qparams, _ = quantize_model(model, params, calib, "gptvq", vq_cfg,
+                                pack=True)
+
+    rng = np.random.RandomState(0)
+    # many DISTINCT lengths: the realistic shape, and the one the legacy
+    # engine retraces on
+    lens = [6 + 5 * i for i in range(n_req)]
+    prompts = [rng.randint(0, cfg.vocab_size - 1, size=s) for s in lens]
+
+    results = []
+    for mb in (1, 8):
+        cases = [BenchCase("paged", "fp32", model, params, mb, max_len),
+                 BenchCase("paged", "vq", model, qparams, mb, max_len),
+                 BenchCase("legacy", "fp32", model, params, mb, max_len)]
+        for i in range(passes + 1):  # pass 0 is the cold/compile pass
+            for c in cases:
+                c.one_pass(prompts, max_new, rid0=1000 * i)
+        for c in cases:
+            r = c.summary()
+            results.append(r)
+            print(f"  {r['engine']:6s} {r['weights']:4s} max_batch={mb}: "
+                  f"{r['tokens_per_s']:8.1f} tok/s (median)  "
+                  f"ttft_mean={r['ttft_mean_s']:.3f}s  "
+                  f"cold={r['cold_wall_s']:.1f}s", flush=True)
+
+    def pick(engine, mb, wtag="fp32"):
+        return next(r for r in results if r["engine"] == engine
+                    and r["max_batch"] == mb and r["weights"] == wtag)
+
+    report = {
+        "bench": "serve_throughput",
+        "config": cfg.name + ("-smoke" if args.smoke else ""),
+        "workload": {"n_requests": n_req, "max_new_tokens": max_new,
+                     "max_len": max_len, "prompt_lens": lens},
+        "results": results,
+        "paged_over_legacy_tokens_per_s_b8":
+            round(pick("paged", 8)["tokens_per_s"]
+                  / pick("legacy", 8)["tokens_per_s"], 3),
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {os.path.abspath(args.out)}; paged/legacy tok/s @B8 = "
+          f"{report['paged_over_legacy_tokens_per_s_b8']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@ the pure-JAX analogue of flash attention; a Pallas version is a §Perf item.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
@@ -72,6 +73,50 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                dtype=jnp.bfloat16) -> KVCache:
     shape = (batch, max_len, cfg.n_kv_heads, cfg.hd)
     return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (serving)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PagedLayout:
+    """Shape of a paged KV pool: ``num_blocks`` fixed-size blocks of
+    ``page_size`` tokens each, shared by every serving slot.
+
+    Block 0 is reserved as a scratch block: page-table entries of inactive
+    slots point there, so their (discarded) decode writes never touch live
+    data. The serve-side allocator (serve/paged_cache.py) hands out block
+    ids 1..num_blocks-1.
+    """
+    num_blocks: int
+    page_size: int
+
+    def n_pages(self, max_len: int) -> int:
+        return -(-max_len // self.page_size)
+
+
+class PagedKVCache(NamedTuple):
+    """KV pool + per-slot page table.
+
+    ``k``/``v`` carry NO batch axis — blocks are a shared pool; which slot
+    owns which block is entirely encoded in ``page_table`` (logical page p
+    of slot b lives in physical block ``page_table[b, p]``). Keeping the
+    page table a cache *leaf* means the family assemblies' layer scans
+    thread it exactly like any dense cache leaf — no forward-signature
+    change beyond ``pos`` accepting per-slot vectors.
+    """
+    k: jax.Array           # (num_blocks, page_size, KV, hd)
+    v: jax.Array           # (num_blocks, page_size, KV, hd)
+    page_table: jax.Array  # (B, n_pages) int32; 0 = scratch block
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
+                     layout: PagedLayout, dtype=jnp.bfloat16) -> PagedKVCache:
+    shape = (layout.num_blocks, layout.page_size, cfg.n_kv_heads, cfg.hd)
+    return PagedKVCache(
+        jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+        jnp.zeros((batch, layout.n_pages(max_len)), jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -186,8 +231,7 @@ def pre_out(p, cfg: ModelConfig, x, *, pos: jax.Array | int = 0,
     B, S, _ = x.shape
     q, k, v = _project_qkv(p, cfg, x)
     if use_rope:
-        pos_arr = jnp.broadcast_to(
-            (jnp.asarray(pos) + jnp.arange(S))[None], (B, S))
+        pos_arr = cm.position_ids(pos, B, S)
         q = cm.apply_rope(q, pos_arr, cfg.rope_theta)
         k = cm.apply_rope(k, pos_arr, cfg.rope_theta)
     if S > flash_threshold:
@@ -250,6 +294,10 @@ def apply(
     * prefill/train: x is (B, S, D); if a cache is given the fresh K/V are
       written at positions [pos, pos+S).
     * decode: x is (B, 1, D); attends over cache[:pos+1].
+    * paged (serving): cache is a PagedKVCache and ``pos`` may be a per-slot
+      (B,) vector — K/V are scattered into each slot's blocks through the
+      page table and attention reads back through a page-table gather, so
+      every slot decodes at its own depth (no shared write position).
     """
     B, S, D = x.shape
     if cache is None:
@@ -258,10 +306,13 @@ def apply(
                     flash_threshold=flash_threshold)
         return (o @ p["wo"]).astype(x.dtype), None
     q, k, v = _project_qkv(p, cfg, x)
-    pos_arr = (jnp.asarray(pos) + jnp.arange(S))[None, :]  # (1, S)
+    pos_arr = cm.position_ids(pos, B, S)  # (B, S)
     if use_rope:
-        q = cm.apply_rope(q, jnp.broadcast_to(pos_arr, (B, S)), cfg.rope_theta)
-        k = cm.apply_rope(k, jnp.broadcast_to(pos_arr, (B, S)), cfg.rope_theta)
+        q = cm.apply_rope(q, pos_arr, cfg.rope_theta)
+        k = cm.apply_rope(k, pos_arr, cfg.rope_theta)
+
+    if isinstance(cache, PagedKVCache):
+        return _paged_apply(p, cache, q, k, v, pos_arr, x.dtype)
 
     ck = jax.lax.dynamic_update_slice(
         cache.k, k.astype(cache.k.dtype), (0, jnp.asarray(pos), 0, 0))
@@ -288,6 +339,42 @@ def apply(
         o = _plain_attention(q, k, v, msk)
     y = o.reshape(B, S, -1) @ p["wo"]
     return y.astype(x.dtype), new_cache
+
+
+def _paged_apply(p, cache: PagedKVCache, q, k, v, pos_arr, out_dtype):
+    """Scatter new K/V through the page table, attend over the gathered
+    logical view. ``pos_arr`` is (B, S): the absolute position of every new
+    token per slot (S > 1 during chunked prefill, S == 1 at decode).
+
+    Writes from slots whose page-table entries are 0 land in the reserved
+    scratch block; reads are masked to ``kpos <= pos`` per slot, so stale
+    data in recycled blocks and the scratch block never leak into live
+    rows. The gather materializes a (B, n_pages*page_size, KV, hd) view per
+    layer — same working set as the dense cache read; a fused Pallas paged
+    decode kernel is the §Perf follow-up.
+    """
+    B, S = pos_arr.shape
+    page_size = cache.k.shape[1]
+    n_pages = cache.page_table.shape[-1]
+    page = pos_arr // page_size
+    blk = jnp.take_along_axis(
+        cache.page_table, jnp.minimum(page, n_pages - 1), axis=1)  # (B, S)
+    # positions past the table extent (a padded prefill chunk can overhang
+    # max_len) go to scratch — clipping them into the last page would
+    # overwrite live K/V
+    blk = jnp.where(page < n_pages, blk, 0)
+    off = pos_arr % page_size
+    ck = cache.k.at[blk, off].set(k.astype(cache.k.dtype))
+    cv = cache.v.at[blk, off].set(v.astype(cache.v.dtype))
+    new_cache = PagedKVCache(ck, cv, cache.page_table)
+
+    Sk = n_pages * page_size
+    kg = ck[cache.page_table].reshape(B, Sk, *ck.shape[2:])
+    vg = cv[cache.page_table].reshape(B, Sk, *cv.shape[2:])
+    # per-slot causal + length mask over logical positions
+    msk = jnp.arange(Sk)[None, None, :] <= pos_arr[:, :, None]  # (B, S, Sk)
+    o = _plain_attention(q, kg, vg, msk[:, None, None])
+    return (o.reshape(B, S, -1) @ p["wo"]).astype(out_dtype), new_cache
 
 
 def cross_apply(p, cfg: ModelConfig, x, memory, *, flash_threshold=2048):

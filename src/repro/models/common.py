@@ -63,6 +63,19 @@ def rope_freqs(hd: int, theta: float) -> jax.Array:
     return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
 
 
+def position_ids(pos, batch: int, seq: int) -> jax.Array:
+    """(B, S) absolute positions from a scalar or per-row (B,) offset.
+
+    The serving engine decodes with a *per-slot* position vector (each
+    continuous-batching slot is at its own depth in its sequence); training
+    and prefill paths pass the usual scalar offset.
+    """
+    p = jnp.asarray(pos)
+    if p.ndim == 0:
+        p = jnp.broadcast_to(p[None], (batch,))
+    return p[:, None] + jnp.arange(seq)[None, :]
+
+
 def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
     """x: (..., S, H, hd); pos: broadcastable to (..., S)."""
     hd = x.shape[-1]

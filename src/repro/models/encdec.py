@@ -115,9 +115,14 @@ def encode(params, cfg: ModelConfig, frames: jax.Array, remat=True):
     return cm.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               paged=None):
     L = cfg.n_layers
-    kv1 = attention.init_cache(cfg, batch, max_len, dtype)
+    # self-attention KV pages when serving; the cross K/V are fixed-size
+    # per-slot encoder projections (like recurrent state) and stay resident
+    kv1 = (attention.init_paged_cache(cfg, batch, max_len, paged, dtype)
+           if paged is not None
+           else attention.init_cache(cfg, batch, max_len, dtype))
     stack = lambda x: jnp.broadcast_to(x[None], (L, *x.shape))
     cross_shape = (L, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.hd)
     return EncDecCache(
@@ -189,8 +194,8 @@ def forward(params, cfg: ModelConfig, tokens, *, frames=None, memory=None,
 
     B, S = tokens.shape
     x = params["embed"][tokens]
-    pos_ids = jnp.asarray(pos) + jnp.arange(S)
-    x = x + params["pos_dec"][pos_ids][None].astype(x.dtype)
+    pos_ids = cm.position_ids(pos, B, S)  # (B, S): pos may be per-slot
+    x = x + params["pos_dec"][pos_ids].astype(x.dtype)
     from repro.models.transformer import _axes_size, _dp_axes
     dp = _dp_axes()
     if dp and B % _axes_size(dp) == 0:  # see hybrid.py — avoid replication

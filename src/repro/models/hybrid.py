@@ -83,10 +83,15 @@ class HybridCache(NamedTuple):
     attn: Any         # KVCache stacked (n_groups, ...)
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               paged=None):
     n_groups, per = _groups(cfg)
     m1 = ssm.init_cache(cfg, batch)
-    a1 = attention.init_cache(cfg, batch, max_len, dtype)
+    # mamba state is O(1) per slot and stays slot-resident; only the shared
+    # attention block's KV leaves page when serving
+    a1 = (attention.init_paged_cache(cfg, batch, max_len, paged, dtype)
+          if paged is not None
+          else attention.init_cache(cfg, batch, max_len, dtype))
     return HybridCache(
         mamba=jax.tree.map(
             lambda x: jnp.broadcast_to(x[None, None], (n_groups, per, *x.shape)),

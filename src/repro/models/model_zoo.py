@@ -36,7 +36,8 @@ def build(cfg: ModelConfig) -> Model:
                 pos=pos, cache=cache, remat=remat, **kw)
         return Model(cfg, lambda k: encdec.init_params(cfg, k),
                      lambda: encdec.param_specs(cfg), fwd,
-                     lambda b, s, dtype=jnp.bfloat16: encdec.init_cache(cfg, b, s, dtype),
+                     lambda b, s, dtype=jnp.bfloat16, paged=None:
+                         encdec.init_cache(cfg, b, s, dtype, paged),
                      lambda **kw: encdec.cache_specs(cfg))
     if cfg.family == "hybrid":
         def fwd(params, batch, cache=None, pos=0, remat=True, **kw):
@@ -44,7 +45,8 @@ def build(cfg: ModelConfig) -> Model:
                                   cache=cache, remat=remat, **kw)
         return Model(cfg, lambda k: hybrid.init_params(cfg, k),
                      lambda: hybrid.param_specs(cfg), fwd,
-                     lambda b, s, dtype=jnp.bfloat16: hybrid.init_cache(cfg, b, s, dtype),
+                     lambda b, s, dtype=jnp.bfloat16, paged=None:
+                         hybrid.init_cache(cfg, b, s, dtype, paged),
                      lambda **kw: hybrid.cache_specs(cfg, **kw))
     if cfg.family == "vlm":
         def fwd(params, batch, cache=None, pos=0, remat=True, **kw):
@@ -53,7 +55,8 @@ def build(cfg: ModelConfig) -> Model:
                                cache=cache, remat=remat, **kw)
         return Model(cfg, lambda k: vlm.init_params(cfg, k),
                      lambda: vlm.param_specs(cfg), fwd,
-                     lambda b, s, dtype=jnp.bfloat16: vlm.init_cache(cfg, b, s, dtype),
+                     lambda b, s, dtype=jnp.bfloat16, paged=None:
+                         vlm.init_cache(cfg, b, s, dtype, paged),
                      lambda **kw: vlm.cache_specs(cfg))
 
     # dense / moe / ssm(xlstm)
@@ -62,7 +65,8 @@ def build(cfg: ModelConfig) -> Model:
                                    cache=cache, remat=remat, **kw)
     return Model(cfg, lambda k: transformer.init_params(cfg, k),
                  lambda: transformer.param_specs(cfg), fwd,
-                 lambda b, s, dtype=jnp.bfloat16: transformer.init_cache(cfg, b, s, dtype),
+                 lambda b, s, dtype=jnp.bfloat16, paged=None:
+                     transformer.init_cache(cfg, b, s, dtype, paged),
                  lambda **kw: transformer.cache_specs(cfg))
 
 

@@ -99,10 +99,12 @@ def _causal_conv(u, w, b):
     return out + b.astype(jnp.float32)
 
 
-def _ssd_chunked(xh, Bm, Cm, dt, A, chunk):
+def _ssd_chunked(xh, Bm, Cm, dt, A, chunk, h0=None):
     """Chunk-parallel SSD scan.
 
     xh: (B,S,P,hd)  Bm/Cm: (B,S,N)  dt: (B,S,P)  A: (P,) negative.
+    ``h0`` (B,P,hd,N) resumes from a cached state (chunked prefill: the
+    serving engine feeds a long prompt in several forward calls).
     Returns y: (B,S,P,hd) and final state (B,P,hd,N).
     """
     Bsz, S, Ph, hd = xh.shape
@@ -157,7 +159,8 @@ def _ssd_chunked(xh, Bm, Cm, dt, A, chunk):
         H = H * seg_k[..., None, None] + Sk_k
         return H, H_out
 
-    H0 = jnp.zeros((Bsz, Ph, hd, N), jnp.float32)
+    H0 = (jnp.zeros((Bsz, Ph, hd, N), jnp.float32) if h0 is None
+          else h0.astype(jnp.float32))
     Hfin, Hin = jax.lax.scan(
         chunk_step,
         H0,
@@ -234,10 +237,10 @@ def pre_out(p, cfg: ModelConfig, x: jax.Array, cache: SSMCache | None = None):
         y = jnp.einsum("bphs,bs->bph", h, Ccv[:, 0])[:, None]  # (B,1,P,hd)
         Hfin = h
     else:
-        y, Hfin = _ssd_chunked(xh, Bcv, Ccv, dt, A, cfg.ssm_chunk)
-        if cache is not None:
-            # note: assumes prefill starts from zero state (engine contract)
-            pass
+        # chunk-parallel prefill; resumes from the cached state so the
+        # serving engine can feed a prompt in several chunked calls
+        y, Hfin = _ssd_chunked(xh, Bcv, Ccv, dt, A, cfg.ssm_chunk,
+                               h0=cache.h if cache is not None else None)
     y = y + xh.astype(jnp.float32) * p["D_skip"][None, None, :, None]
     y = y.reshape(Bsz, S, d_inner)
     y = cm.rmsnorm(y.astype(x.dtype) * jax.nn.silu(z), p["norm_scale"],

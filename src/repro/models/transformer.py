@@ -113,9 +113,14 @@ def _block_apply(p, cfg: ModelConfig, kind: str, x, *, pos, cache):
 
 
 def _block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
-                 dtype=jnp.bfloat16):
+                 dtype=jnp.bfloat16, paged=None):
     if kind in ("dense", "moe"):
+        if paged is not None:
+            return attention.init_paged_cache(cfg, batch, max_len, paged,
+                                              dtype)
         return attention.init_cache(cfg, batch, max_len, dtype)
+    # recurrent state is O(1) per slot — stays slot-resident even when the
+    # attention leaves are paged
     if kind == "mlstm":
         return xlstm.mlstm_cache(cfg, batch)
     if kind == "slstm":
@@ -171,14 +176,17 @@ def param_specs(cfg: ModelConfig) -> dict:
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16):
+               dtype=jnp.bfloat16, paged=None):
+    """``paged``: an attention.PagedLayout — attention leaves become shared
+    block pools + per-slot page tables (serving); None keeps the dense
+    (B, max_len) layout (training/eval)."""
     if homogeneous(cfg):
         kind = block_kind(cfg, 0)
-        one = _block_cache(cfg, kind, batch, max_len, dtype)
+        one = _block_cache(cfg, kind, batch, max_len, dtype, paged)
         return jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (cfg.n_layers, *x.shape)), one)
     return [
-        _block_cache(cfg, block_kind(cfg, i), batch, max_len, dtype)
+        _block_cache(cfg, block_kind(cfg, i), batch, max_len, dtype, paged)
         for i in range(cfg.n_layers)
     ]
 

@@ -22,8 +22,9 @@ def param_specs(cfg: ModelConfig):
     return transformer.param_specs(cfg)
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
-    return transformer.init_cache(cfg, batch, max_len, dtype)
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               paged=None):
+    return transformer.init_cache(cfg, batch, max_len, dtype, paged)
 
 
 def cache_specs(cfg: ModelConfig):

@@ -1,29 +1,53 @@
-"""Batched serving engine (continuous-batching lite).
+"""Paged-KV continuous-batching serving engine.
 
-Maintains a fixed pool of ``max_batch`` slots over a shared max_len KV cache.
-Requests are admitted into free slots; one jitted decode step advances every
-active slot per tick; finished sequences free their slot. Per-slot positions
-are tracked host-side; the decode step uses per-slot position vectors via a
-padded right-aligned layout: each admitted prompt is prefilled individually
-into its slot (simple, robust), then all slots decode together.
+Architecture (PR 2): the KV cache is a pool of fixed-size blocks shared by
+all ``max_batch`` slots (models/attention.PagedKVCache — block pools plus
+per-slot page tables, threaded through the family assemblies' layer scans
+as ordinary cache leaves). Host-side policy lives in serve/scheduler.py
+(FCFS admission with capacity-aware rejection, chunked prefill, preempt
+youngest on pool exhaustion) and serve/paged_cache.py (block allocator,
+slot views, page-table pushes). The engine executes:
+
+* **admit** — the request's prompt pages are allocated and the slot's
+  recurrent-state rows are reset from a fresh template. Prompts are fed
+  through jitted forwards in power-of-two chunks (O(log max_len) compile
+  variants instead of one per distinct prompt length), one chunk per tick,
+  as a B=1 slot view: page-table row + recurrent rows sliced, block pools
+  shared — no more tiling a full max_batch-wide zero batch per prompt.
+* **step** — one tick: admissions, at most one prefill chunk, then a
+  single batched decode over every decode-phase slot with a *per-slot
+  position vector*. Each slot writes at its own depth through its page
+  table; there is no shared max-position write index, so staggered
+  admissions leave no gaps and batched greedy decode is token-identical
+  to serving each request alone (dense and hybrid families; MoE routing
+  couples rows by design). Slots mid-prefill are routed to the scratch
+  block for the tick and their recurrent rows restored afterwards.
+* **run** — drives a request list to completion. Token throughput is
+  counted where tokens are sampled (inside ``step``), so a request's
+  final-tick token is never dropped from the stats.
+
+Recurrent/ssm state leaves (mamba h/conv, xLSTM C/n/m, enc-dec cross K/V)
+are O(1) per slot and stay slot-resident; only attention KV pages.
 
 This is the end-to-end driver used by examples/quantize_and_serve.py to
-demonstrate the paper's deployment claim: identical engine code serves bf16
-and GPTVQ-compressed weights.
+demonstrate the paper's deployment claim: identical engine code serves
+bf16 and GPTVQ-compressed weights.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.attention import PagedLayout
 from repro.models.model_zoo import Model
+from repro.serve import paged_cache as pc
 from repro.serve import sampling
-from repro.serve.serve_step import make_decode, make_prefill
+from repro.serve.scheduler import CapacityError, Scheduler, Sequence
+from repro.serve.serve_step import make_paged_decode, make_slot_prefill
 
 
 @dataclasses.dataclass
@@ -34,11 +58,14 @@ class Request:
     temperature: float = 0.0
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
+    error: str | None = None     # set when rejected (CapacityError)
 
 
 class Engine:
     def __init__(self, model: Model, params, *, max_batch: int = 8,
-                 max_len: int = 512, eos_id: int | None = None, seed: int = 0):
+                 max_len: int = 512, eos_id: int | None = None, seed: int = 0,
+                 page_size: int = 16, num_blocks: int | None = None,
+                 prefill_chunk: int = 64):
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -46,106 +73,201 @@ class Engine:
         self.eos_id = eos_id
         self.key = jax.random.PRNGKey(seed)
 
-        self.cache = model.init_cache(max_batch, max_len, dtype=jnp.float32)
-        self.prefill = jax.jit(make_prefill(model))
-        self.decode = jax.jit(make_decode(model))
-        self.slots: list[Request | None] = [None] * max_batch
-        self.pos = np.zeros(max_batch, np.int64)  # next write position
+        n_pages = -(-max_len // page_size)
+        if num_blocks is None:
+            # default pool holds every slot at full depth (+ scratch);
+            # pass a smaller pool to oversubscribe and exercise preemption
+            num_blocks = max_batch * n_pages + 1
+        self.layout = PagedLayout(num_blocks=num_blocks, page_size=page_size)
+        self.n_pages = n_pages
+
+        dtype = jnp.float32
+        self.cache = model.init_cache(max_batch, max_len, dtype=dtype,
+                                      paged=self.layout)
+        self.axes = pc.batch_axes(model, max_batch, max_len, dtype,
+                                  self.layout)
+        # B=1 template for resetting a slot's recurrent rows on admission
+        # (tiny pool: slot_merge(shared=False) never reads template pools)
+        self._slot_template = model.init_cache(
+            1, max_len, dtype=dtype, paged=PagedLayout(2, page_size))
+
+        self.scheduler = Scheduler(
+            max_batch=max_batch, max_len=max_len, page_size=page_size,
+            allocator=pc.BlockAllocator(num_blocks),
+            prefill_chunk=prefill_chunk,
+            # attention-only families pad the final prefill chunk to its
+            # power-of-two bucket (masked out exactly); recurrent-state
+            # families must feed exact tokens (see scheduler module doc)
+            pad_prefill=model.cfg.family not in ("ssm", "hybrid"))
+        # fully-compiled tick fns: decode traces once at (max_batch, 1);
+        # prefill traces per power-of-two chunk width — O(log) variants.
+        # The cache arg is donated: XLA updates the block pools in place
+        # instead of copying the whole pool every tick (the engine always
+        # replaces self.cache with the returned tree, so the old buffers
+        # are never read again).
+        self._decode_fn = jax.jit(make_paged_decode(model, self.axes),
+                                  donate_argnums=(2,))
+        self._prefill_fn = jax.jit(make_slot_prefill(model, self.axes),
+                                   donate_argnums=(2,))
+        self._sample = jax.jit(
+            lambda k, logits, t: sampling.sample(k, logits, temperature=t))
+
         self.last_tok = np.zeros(max_batch, np.int32)
         self.ticks = 0
+        self._decode_ticks = 0
+        self._tokens = 0
+        self._prefill_chunks = 0
+        self._preemptions = 0
+        self.stats = self._snapshot(0.0)
 
-    # -- slot admission ----------------------------------------------------
-    def _free_slot(self) -> int | None:
-        for i, s in enumerate(self.slots):
-            if s is None:
-                return i
-        return None
+    def _snapshot(self, wall_s: float) -> dict:
+        return {"wall_s": wall_s, "decode_ticks": self._decode_ticks,
+                "tokens": self._tokens, "ticks": self.ticks,
+                "prefill_chunks": self._prefill_chunks,
+                "preemptions": self._preemptions}
+
+    # -- admission ---------------------------------------------------------
 
     def admit(self, req: Request) -> bool:
-        slot = self._free_slot()
-        if slot is None:
+        """Place a request into a free slot (no prefill compute yet —
+        the prompt streams in chunk-per-tick during ``step``). Raises
+        CapacityError if the request can never fit; returns False when no
+        slot/blocks are free right now."""
+        self.scheduler.validate(req)
+        seq = self.scheduler.try_place(req)
+        if seq is None:
             return False
-        S = len(req.prompt)
-        assert S + req.max_new_tokens <= self.max_len
-        # per-slot prefill: run the prompt through with this slot's cache row
-        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
-        # batchify: tile prompt into a B=max_batch batch, but only keep slot
-        tok_b = jnp.zeros((self.max_batch, S), jnp.int32).at[slot].set(tokens[0])
-        logits, new_cache = self.prefill(
-            self.params, {"tokens": tok_b}, self.cache)
-        # merge only this slot's cache rows (batch axis differs per leaf kind)
-        self.cache = _merge_slot(self.cache, new_cache, slot, self.max_batch)
-        self.slots[slot] = req
-        self.pos[slot] = S
-        nxt = int(jnp.argmax(logits[slot, S - 1]))
-        req.out_tokens.append(nxt)
-        self.last_tok[slot] = nxt
+        self._reset_slot(seq)
         return True
 
-    # -- decode tick ---------------------------------------------------------
+    def _reset_slot(self, seq: Sequence):
+        self.cache = pc.slot_merge(self.cache, self._slot_template,
+                                   self.axes, seq.slot, shared=False)
+
+    def _page_table(self, phases: tuple) -> np.ndarray:
+        """Host page table with rows populated only for the given phases;
+        everything else points at the scratch block."""
+        t = np.zeros((self.max_batch, self.n_pages), np.int32)
+        for s in self.scheduler.active():
+            if s.phase in phases:
+                t[s.slot, : len(s.pages)] = s.pages
+        return t
+
+    # -- one tick ----------------------------------------------------------
+
     def step(self):
-        active = [i for i, s in enumerate(self.slots) if s is not None]
-        if not active:
-            return
-        # single position scalar per tick: all slots share the max position
-        # write index; inactive slots write into scratch (masked at read).
-        pos = int(self.pos.max())
-        toks = jnp.asarray(self.last_tok[:, None], jnp.int32)
-        logits, self.cache = self.decode(self.params, toks, self.cache, pos)
-        self.key, sub = jax.random.split(self.key)
-        # per-slot temperatures: every request samples under its own
-        # (inactive slots are greedy; their draws are discarded anyway)
-        temps = np.zeros(self.max_batch, np.float32)
-        for i in active:
-            temps[i] = self.slots[i].temperature
-        nxt = np.asarray(sampling.sample(sub, logits[:, -1],
-                                         temperature=jnp.asarray(temps)))
-        for i in active:
-            req = self.slots[i]
-            t = int(nxt[i])
-            req.out_tokens.append(t)
-            self.last_tok[i] = t
-            self.pos[i] = pos + 1
-            if (len(req.out_tokens) >= req.max_new_tokens
-                    or (self.eos_id is not None and t == self.eos_id)):
-                req.done = True
-                self.slots[i] = None
+        for seq in self.scheduler.admit_from_queue():
+            self._reset_slot(seq)
+        # one chunk per prefilling slot per tick: a burst of admissions
+        # drains its prompts concurrently, while a single long prompt can
+        # never stall the decode cohort by more than one chunk
+        prefilling = sorted(
+            (s for s in self.scheduler.active() if s.phase == "prefill"),
+            key=lambda s: s.order)
+        done = []
+        if prefilling:
+            # one table serves every chunk this tick: nothing allocates or
+            # finishes between chunks of the same tick
+            table = self._page_table(("prefill", "decode"))
+            for seq in prefilling:
+                last_logits = self._prefill_chunk(seq, table)
+                if last_logits is not None:
+                    done.append((seq, last_logits))
+        if done:
+            # sample every prompt that completed this tick in ONE batched
+            # draw: per-completion syncs serialized the prefill pipeline
+            self.key, sub = jax.random.split(self.key)
+            toks = np.asarray(self._sample(
+                sub, jnp.stack([l for _, l in done]),
+                jnp.asarray([s.req.temperature for s, _ in done],
+                            jnp.float32)))
+            for (seq, _), t in zip(done, toks):
+                seq.phase = "decode"
+                self._emit(seq, int(t))
+        self._decode_tick()
         self.ticks += 1
 
+    def _prefill_chunk(self, seq: Sequence, table: np.ndarray):
+        """Feed the next chunk; returns the (V,) next-token logits when the
+        prompt is complete, else None."""
+        size, real = self.scheduler.prefill_chunk_len(seq)
+        start = seq.pos
+        chunk = np.zeros(size, np.int32)
+        chunk[:real] = np.asarray(seq.req.prompt[start:start + real])
+        last_logits, self.cache = self._prefill_fn(
+            self.params, jnp.asarray(chunk[None]), self.cache, seq.slot,
+            start, real - 1, table)
+        seq.pos += real
+        self._prefill_chunks += 1
+        return last_logits if seq.pos == seq.prompt_len else None
+
+    def _emit(self, seq: Sequence, tok: int):
+        req = seq.req
+        req.out_tokens.append(tok)
+        self.last_tok[seq.slot] = tok
+        self._tokens += 1
+        if (len(req.out_tokens) >= req.max_new_tokens
+                or (self.eos_id is not None and tok == self.eos_id)):
+            req.done = True
+            self.scheduler.finish(seq)
+
+    def _decode_tick(self):
+        decoding = [s for s in self.scheduler.active()
+                    if s.phase == "decode"]
+        # supply every decoding slot with a block for its write position,
+        # preempting youngest-first when the pool runs dry
+        for s in sorted(decoding, key=lambda s: s.order):
+            if self.scheduler.running[s.slot] is not s:
+                continue  # already preempted this tick
+            for victim in self.scheduler.ensure_block(s):
+                self._on_preempt(victim)
+        decoding = [s for s in self.scheduler.active()
+                    if s.phase == "decode"]
+        if not decoding:
+            return
+        pos = np.zeros(self.max_batch, np.int32)
+        temps = np.zeros(self.max_batch, np.float32)
+        # slots mid-prefill decode on garbage this tick (their writes are
+        # routed to scratch by the table; their recurrent-state rows are
+        # restored inside the compiled step via keep_mask)
+        keep = np.zeros(self.max_batch, bool)
+        for s in self.scheduler.active():
+            if s.phase == "decode":
+                pos[s.slot] = s.pos
+                temps[s.slot] = s.req.temperature
+            else:
+                keep[s.slot] = True
+        toks = jnp.asarray(self.last_tok[:, None], jnp.int32)
+        logits, self.cache = self._decode_fn(
+            self.params, toks, self.cache, jnp.asarray(pos),
+            self._page_table(("decode",)), jnp.asarray(keep))
+        self.key, sub = jax.random.split(self.key)
+        nxt = np.asarray(self._sample(sub, logits[:, -1],
+                                      jnp.asarray(temps)))
+        for s in decoding:
+            s.pos += 1
+            self._emit(s, int(nxt[s.slot]))
+        self._decode_ticks += 1
+
+    def _on_preempt(self, victim: Sequence):
+        self._preemptions += 1
+        self._tokens -= len(victim.req.out_tokens)
+        victim.req.out_tokens.clear()
+        victim.req.done = False
+
+    # -- driver ------------------------------------------------------------
+
     def run(self, requests: list[Request], max_ticks: int = 10_000):
-        """Drive all requests to completion; returns them."""
-        pending = list(requests)
+        """Drive all requests to completion; returns them. Requests that
+        can never fit are rejected gracefully (``req.error`` set)."""
+        for req in requests:
+            try:
+                self.scheduler.submit(req)
+            except CapacityError as e:
+                req.error = str(e)
+                req.done = True
         t0 = time.perf_counter()
-        n_tok = 0
-        while (pending or any(self.slots)) and self.ticks < max_ticks:
-            while pending and self._free_slot() is not None:
-                if not self.admit(pending[0]):
-                    break
-                pending.pop(0)
+        while self.scheduler.has_work() and self.ticks < max_ticks:
             self.step()
-            n_tok += sum(1 for s in self.slots if s is not None)
-        dt = time.perf_counter() - t0
-        self.stats = {"wall_s": dt, "decode_ticks": self.ticks,
-                      "tokens": n_tok}
+        self.stats = self._snapshot(time.perf_counter() - t0)
         return requests
-
-
-def _merge_slot(old_cache, new_cache, slot: int, batch: int):
-    """Copy one request's batch row from new_cache into old_cache.
-
-    The batch axis position differs per leaf (layer-stacked attention caches
-    put it at axis 1, hybrid mamba stacks at axis 2, ...); every cache layout
-    in the zoo keeps exactly one axis of size ``batch`` (the engine's
-    ``max_batch``), located here as the first size match. ``batch`` is
-    threaded explicitly so two engines with different pool sizes can
-    coexist in one process.
-    """
-    def merge_leaf(o, n):
-        ax = next((i for i, s in enumerate(o.shape) if s == batch), None)
-        if ax is None:
-            return n
-        idx = [slice(None)] * o.ndim
-        idx[ax] = slice(slot, slot + 1)
-        return o.at[tuple(idx)].set(n[tuple(idx)])
-
-    return jax.tree.map(merge_leaf, old_cache, new_cache)

@@ -1,0 +1,153 @@
+"""Paged KV-cache pool management for the serving engine.
+
+The device-side layout lives in the model layer (models/attention.py:
+``PagedKVCache`` leaves inside each family's cache pytree — shared block
+pools + per-slot page tables). This module owns everything host-side:
+
+* ``BlockAllocator`` — free-list over physical block ids. Block 0 is the
+  reserved scratch block (inactive slots' page-table entries point there,
+  so their discarded decode writes never touch live data).
+* slot views/merges — the engine prefills one request at a time with a
+  B=1 view of the cache (page-table row + that slot's recurrent-state
+  rows; the pools pass through shared) and merges the result back. Which
+  axis of each cache leaf is the batch axis is *derived*, not guessed:
+  ``batch_axes`` diffs ``eval_shape`` of ``init_cache`` at two batch sizes,
+  so hybrid's (n_groups, per, B, ...) mamba leaves or any future layout
+  resolve correctly even when a leading axis coincides with max_batch.
+* ``push_page_table`` — broadcasts the host page table into every
+  PagedKVCache leaf (the table is replicated per layer so the layer scans
+  can slice it like any other cache leaf).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.attention import PagedKVCache, PagedLayout
+
+SCRATCH_BLOCK = 0
+
+
+class BlockAllocator:
+    """Free-list allocator over block ids 1..num_blocks-1 (0 is scratch)."""
+
+    def __init__(self, num_blocks: int):
+        assert num_blocks >= 2, "need at least scratch + one usable block"
+        self.num_blocks = num_blocks
+        self._free = list(range(num_blocks - 1, 0, -1))
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def capacity(self) -> int:
+        return self.num_blocks - 1
+
+    def alloc(self, n: int) -> list[int] | None:
+        """n blocks, or None (allocation is all-or-nothing)."""
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, ids: list[int]):
+        for b in ids:
+            assert 0 < b < self.num_blocks and b not in self._free, b
+            self._free.append(b)
+
+
+# ---------------------------------------------------------------------------
+# slot views over a family cache pytree
+# ---------------------------------------------------------------------------
+
+def batch_axes(model, max_batch: int, max_len: int, dtype,
+               paged: PagedLayout):
+    """Tree (matching the cache pytree) of per-leaf batch-axis indices;
+    -1 marks leaves without a batch axis (the shared block pools)."""
+    a = jax.eval_shape(
+        lambda: model.init_cache(max_batch, max_len, dtype=dtype, paged=paged))
+    b = jax.eval_shape(
+        lambda: model.init_cache(max_batch + 1, max_len, dtype=dtype,
+                                 paged=paged))
+
+    def ax(sa, sb):
+        diff = [i for i, (x, y) in enumerate(zip(sa.shape, sb.shape))
+                if x != y]
+        assert len(diff) <= 1, (sa.shape, sb.shape)
+        return diff[0] if diff else -1
+
+    return jax.tree.map(ax, a, b)
+
+
+def _slot_idx(ndim: int, axis: int, slot: int):
+    idx = [slice(None)] * ndim
+    idx[axis] = slice(slot, slot + 1)
+    return tuple(idx)
+
+
+def slot_merge(cache, new, axes, slot: int, *, shared: bool = True):
+    """Write a B=1 view back into the full cache at ``slot``.
+
+    ``shared=True`` (after a prefill forward) takes the returned pools
+    wholesale — the forward only scattered into this slot's blocks (plus
+    scratch). ``shared=False`` keeps the old pools: used to reset a slot's
+    recurrent state from a fresh B=1 template on admission without wiping
+    other slots' live blocks.
+    """
+    def put(o, n, a):
+        if a < 0:
+            return n if shared else o
+        idx = _slot_idx(o.ndim, a, slot)
+        return o.at[idx].set(n.astype(o.dtype))
+
+    return jax.tree.map(put, cache, new, axes)
+
+
+def slot_view_dyn(cache, axes, slot):
+    """slot_view with a *traced* slot index (jit-safe: one trace serves
+    every slot). Batch-axis leaves become size-1 dynamic slices."""
+    return jax.tree.map(
+        lambda x, a: x if a < 0
+        else jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=a),
+        cache, axes)
+
+
+def slot_merge_dyn(cache, new, axes, slot):
+    """slot_merge (shared pools taken wholesale) with a traced slot."""
+    return jax.tree.map(
+        lambda o, n, a: n if a < 0
+        else jax.lax.dynamic_update_slice_in_dim(
+            o, n.astype(o.dtype), slot, axis=a),
+        cache, new, axes)
+
+
+def restore_masked(old, new, axes, keep_mask):
+    """Rows of batch-axis leaves where ``keep_mask`` (B,) is True keep
+    their ``old`` value. The decode step uses this inside the compiled
+    tick: slots still mid-prefill get decoded on garbage tokens (their
+    cache writes go to scratch), so their recurrent-state rows must keep
+    their pre-tick values."""
+    def f(o, n, a):
+        if a < 0:
+            return n
+        shape = [1] * n.ndim
+        shape[a] = keep_mask.shape[0]
+        return jnp.where(keep_mask.reshape(shape), o.astype(n.dtype), n)
+
+    return jax.tree.map(f, old, new, axes)
+
+
+def push_page_table(cache, table: np.ndarray):
+    """Broadcast the host (max_batch, n_pages) table into every
+    PagedKVCache leaf (replicated over any leading layer/group axes)."""
+    t = jnp.asarray(table, jnp.int32)
+
+    def f(leaf):
+        if isinstance(leaf, PagedKVCache):
+            return PagedKVCache(
+                leaf.k, leaf.v, jnp.broadcast_to(t, leaf.page_table.shape))
+        return leaf
+
+    return jax.tree.map(f, cache,
+                        is_leaf=lambda x: isinstance(x, PagedKVCache))

@@ -1,9 +1,11 @@
 """Token sampling: greedy / temperature / top-k / top-p.
 
-``temperature`` may be a scalar or a per-row (B,) vector — the batched
-serving engine mixes requests with different temperatures in one decode
-tick, so each slot samples under its own. Rows with temperature <= 0 are
-greedy (argmax).
+``temperature`` may be a python scalar, a traced scalar, or a per-row (B,)
+vector — the batched serving engine mixes requests with different
+temperatures in one decode tick, so each slot samples under its own. Rows
+with temperature <= 0 are greedy (argmax). Jit-safe: branching on the
+temperature value is pythonic only for python scalars; traced values go
+through ``jnp.where`` selects.
 """
 from __future__ import annotations
 
@@ -11,19 +13,8 @@ import jax
 import jax.numpy as jnp
 
 
-def sample(key, logits: jax.Array, *, temperature=1.0,
-           top_k: int = 0, top_p: float = 0.0) -> jax.Array:
-    """logits: (B, V); temperature: scalar or (B,) -> (B,) int32."""
-    temperature = jnp.asarray(temperature, jnp.float32)
-    if temperature.ndim > 0:
-        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        safe_t = jnp.where(temperature > 0.0, temperature, 1.0)
-        sampled = sample(key, logits / safe_t[:, None],
-                         temperature=1.0, top_k=top_k, top_p=top_p)
-        return jnp.where(temperature > 0.0, sampled, greedy)
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    logits = logits / temperature
+def _sample_scaled(key, logits: jax.Array, top_k: int, top_p: float):
+    """Categorical draw from already temperature-scaled logits."""
     if top_k > 0:
         kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
         logits = jnp.where(logits < kth, -1e30, logits)
@@ -35,3 +26,20 @@ def sample(key, logits: jax.Array, *, temperature=1.0,
         cutoff = jnp.take_along_axis(sorted_l, cutoff_idx[:, None], axis=-1)
         logits = jnp.where(logits < cutoff, -1e30, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample(key, logits: jax.Array, *, temperature=1.0,
+           top_k: int = 0, top_p: float = 0.0) -> jax.Array:
+    """logits: (B, V); temperature: scalar or (B,) -> (B,) int32."""
+    if isinstance(temperature, (int, float)):
+        # python scalar: static branch (no tracer bool conversion)
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return _sample_scaled(key, logits / temperature, top_k, top_p)
+    t = jnp.asarray(temperature, jnp.float32)
+    if t.ndim == 0:
+        t = t[None]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    safe_t = jnp.where(t > 0.0, t, 1.0)
+    sampled = _sample_scaled(key, logits / safe_t[:, None], top_k, top_p)
+    return jnp.where(t > 0.0, sampled, greedy)

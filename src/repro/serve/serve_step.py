@@ -5,6 +5,12 @@ the model assemblies dequantize them per layer-slice inside their layer scan
 (core/vq_linear.dequant_tree), so these steps are agnostic to whether the
 model is dense bf16 or VQ-compressed — the paper's technique is a drop-in
 serving format.
+
+``make_paged_decode`` / ``make_slot_prefill`` are the paged serving
+engine's fully-compiled tick functions (per-slot position vectors, page
+tables, chunked prefill over B=1 slot views). ``make_prefill`` /
+``make_decode`` remain the dense-cache builders used by launch/dryrun and
+as the correctness reference for the paged path.
 """
 from __future__ import annotations
 
@@ -15,8 +21,10 @@ from repro.models.model_zoo import Model
 
 
 def make_prefill(model: Model, last_only: bool = False):
-    """last_only=True returns only next-token logits — required at 32k+
-    sequence lengths where full (B, S, V) logits would dominate memory."""
+    """Whole-prompt prefill from position 0 over a dense cache (dry-run and
+    benchmark baselines). last_only=True returns only next-token logits —
+    required at 32k+ sequence lengths where full (B, S, V) logits would
+    dominate memory."""
     def prefill(params, batch, cache):
         logits, cache, _ = model.forward(params, batch, cache=cache, pos=0,
                                          last_only=last_only)
@@ -27,9 +35,55 @@ def make_prefill(model: Model, last_only: bool = False):
 
 def make_decode(model: Model):
     def decode(params, tokens, cache, pos):
-        """tokens: (B, 1); pos: scalar position of the new token."""
+        """tokens: (B, S) int32; pos: scalar start position, or a per-slot
+        (B,) vector when the cache is paged (each continuous-batching slot
+        writes/attends at its own depth)."""
         logits, cache, _ = model.forward(
             params, {"tokens": tokens}, cache=cache, pos=pos)
         return logits, cache
 
     return decode
+
+
+def make_paged_decode(model: Model, axes):
+    """One fully-compiled decode tick over a paged cache. ``axes`` is the
+    per-leaf batch-axis tree from paged_cache.batch_axes. Folding the
+    page-table refresh and the mid-prefill row restore into the jitted
+    step keeps the tick at a single dispatch — the eager tree-map variant
+    cost more host time than the forward itself at small model scale."""
+    from repro.serve import paged_cache as pc
+
+    def decode(params, tokens, cache, pos, table, keep_mask):
+        """tokens (B, 1); pos (B,) per-slot write positions; table
+        (B, n_pages) page rows for decoding slots (scratch elsewhere);
+        keep_mask (B,) marks slots whose recurrent-state rows must keep
+        their pre-tick values (slots still mid-prefill)."""
+        cache = pc.push_page_table(cache, table)
+        logits, new_cache, _ = model.forward(
+            params, {"tokens": tokens}, cache=cache, pos=pos)
+        return logits, pc.restore_masked(cache, new_cache, axes, keep_mask)
+
+    return decode
+
+
+def make_slot_prefill(model: Model, axes):
+    """One fully-compiled chunked-prefill step: push the page table, slice
+    a B=1 view of ``slot`` (traced — one trace serves every slot), run the
+    chunk from position ``start``, merge the view back. Retraces only per
+    power-of-two chunk width."""
+    from repro.serve import paged_cache as pc
+
+    def chunk(params, tokens, cache, slot, start, last_idx, table):
+        cache = pc.push_page_table(cache, table)
+        view = pc.slot_view_dyn(cache, axes, slot)
+        logits, new_view, _ = model.forward(
+            params, {"tokens": tokens}, cache=view,
+            pos=jnp.full((1,), start, jnp.int32))
+        # only the last *real* token's logits ever get sampled (chunks may
+        # be padded up to their power-of-two bucket) — returning (V,)
+        # instead of (1, C, V) keeps the host transfer flat
+        last = jax.lax.dynamic_index_in_dim(logits[0], last_idx, 0,
+                                            keepdims=False)
+        return last, pc.slot_merge_dyn(cache, new_view, axes, slot)
+
+    return chunk

@@ -1,0 +1,230 @@
+"""Paged serving subsystem tests: block allocator, chunked-prefill plan,
+capacity-aware admission, token accounting, preemption, and the
+mixed-length continuous-batching regression (the shared-max-position bug:
+interleaved admission of staggered-length prompts must be token-identical
+to serving each request alone)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKE
+from repro.models import model_zoo
+from repro.serve.engine import Engine, Request
+from repro.serve.paged_cache import BlockAllocator
+from repro.serve.scheduler import CapacityError, next_chunk_len
+from repro.serve.serve_step import make_decode, make_prefill
+
+
+def dense_model():
+    cfg = SMOKE["llama2-7b"].scaled(dtype="float32", n_layers=2, d_model=64,
+                                    vocab_size=256, max_seq_len=64)
+    return model_zoo.build(cfg)
+
+
+def hybrid_model():
+    return model_zoo.build(SMOKE["zamba2-7b"].scaled(dtype="float32"))
+
+
+def greedy_reqs(prompts, n=6, rid0=0):
+    return [Request(rid=rid0 + i, prompt=p, max_new_tokens=n)
+            for i, p in enumerate(prompts)]
+
+
+class TestBlockAllocator:
+    def test_alloc_free_exhaust(self):
+        a = BlockAllocator(5)  # block 0 reserved scratch -> 4 usable
+        assert a.capacity == 4
+        got = a.alloc(3)
+        assert len(got) == 3 and all(0 < b < 5 for b in got)
+        assert a.alloc(2) is None  # all-or-nothing
+        assert a.free_blocks == 1
+        a.free(got)
+        assert a.free_blocks == 4
+
+    def test_scratch_never_handed_out(self):
+        a = BlockAllocator(4)
+        assert 0 not in a.alloc(3)
+
+    def test_double_free_asserts(self):
+        a = BlockAllocator(4)
+        got = a.alloc(1)
+        a.free(got)
+        with pytest.raises(AssertionError):
+            a.free(got)
+
+
+class TestChunkPlan:
+    def test_pow2_decomposition_covers_prompt(self):
+        for S in (1, 2, 5, 13, 64, 100, 255):
+            sizes, rem = [], S
+            while rem:
+                c = next_chunk_len(rem, 64)
+                assert c & (c - 1) == 0 and c <= 64
+                sizes.append(c)
+                rem -= c
+            assert sum(sizes) == S
+            # O(log): at most ceil(S/max) full chunks + log2(max) tail
+            assert len(sizes) <= S // 64 + 7, (S, sizes)
+
+
+class TestAdmissionAndStats:
+    def test_stats_initialized_before_run(self):
+        model = dense_model()
+        params = model.init_params(jax.random.PRNGKey(0))
+        eng = Engine(model, params, max_batch=2, max_len=48)
+        assert eng.stats["tokens"] == 0  # no AttributeError pre-run
+
+    def test_capacity_error_is_typed_and_graceful(self):
+        model = dense_model()
+        params = model.init_params(jax.random.PRNGKey(0))
+        eng = Engine(model, params, max_batch=2, max_len=32, page_size=4)
+        rng = np.random.RandomState(0)
+        with pytest.raises(CapacityError):
+            eng.admit(Request(rid=0, prompt=rng.randint(0, 255, size=30),
+                              max_new_tokens=8))
+        # run() rejects the oversized request but still serves the rest
+        bad = Request(rid=1, prompt=rng.randint(0, 255, size=30),
+                      max_new_tokens=8)
+        ok = Request(rid=2, prompt=rng.randint(0, 255, size=5),
+                     max_new_tokens=4)
+        eng.run([bad, ok])
+        assert bad.error is not None and bad.out_tokens == []
+        assert len(ok.out_tokens) == 4
+
+    def test_token_accounting_counts_final_tick(self):
+        """Regression: tokens sampled on a request's final tick used to be
+        dropped (the old run() counted surviving slots after step() freed
+        finished ones)."""
+        model = dense_model()
+        params = model.init_params(jax.random.PRNGKey(0))
+        eng = Engine(model, params, max_batch=3, max_len=48)
+        rng = np.random.RandomState(0)
+        reqs = greedy_reqs([rng.randint(0, 255, size=5 + i)
+                            for i in range(5)], n=4)
+        eng.run(reqs)
+        assert eng.stats["tokens"] == sum(len(r.out_tokens) for r in reqs)
+        assert eng.stats["tokens"] == 20
+
+    def test_prefill_compiles_pow2_variants_only(self):
+        """Admitting prompts of many distinct lengths must only trace the
+        step fn at power-of-two chunk widths (plus the decode shape)."""
+        model = dense_model()
+        params = model.init_params(jax.random.PRNGKey(0))
+        eng = Engine(model, params, max_batch=2, max_len=64, page_size=8,
+                     prefill_chunk=16)
+        rng = np.random.RandomState(0)
+        reqs = greedy_reqs([rng.randint(0, 255, size=s)
+                            for s in (3, 5, 7, 9, 11, 13, 21)], n=2)
+        eng.run(reqs)
+        sizes = {1, 2, 4, 8, 16}  # pow2 chunks <= prefill_chunk
+        assert eng._prefill_fn._cache_size() <= len(sizes)
+        assert eng._decode_fn._cache_size() == 1
+
+
+class TestMixedLengthContinuousBatching:
+    """THE regression test for the shared-max-position bug: late-admitted
+    slots used to write at the oldest slot's position, leaving gaps."""
+
+    @pytest.mark.parametrize("family", ["dense", "hybrid"])
+    def test_interleaved_matches_solo(self, family):
+        model = dense_model() if family == "dense" else hybrid_model()
+        params = model.init_params(jax.random.PRNGKey(0))
+        rng = np.random.RandomState(1)
+        V = model.cfg.vocab_size - 1
+        prompts = [rng.randint(0, V, size=s) for s in (5, 9, 3, 12)]
+        eng = Engine(model, params, max_batch=2, max_len=64, page_size=8)
+        reqs = greedy_reqs(prompts)
+        eng.run(reqs)
+        assert all(len(r.out_tokens) == 6 for r in reqs)
+        for i, p in enumerate(prompts):
+            solo = Engine(model, params, max_batch=2, max_len=64,
+                          page_size=8)
+            r = greedy_reqs([p], rid0=100 + i)[0]
+            solo.run([r])
+            assert r.out_tokens == reqs[i].out_tokens, (family, i)
+
+    def test_padded_chunk_overhanging_max_len_matches_reference(self):
+        """A prompt whose padded prefill bucket overhangs the page-table
+        extent must not corrupt its own live K/V (regression: out-of-range
+        pages used to be clipped into the slot's last page)."""
+        model = dense_model()
+        params = model.init_params(jax.random.PRNGKey(0))
+        rng = np.random.RandomState(3)
+        # 40 tokens pad to a 64-wide chunk; positions 48..63 overhang the
+        # 48-token table and must land in scratch
+        prompt = rng.randint(0, 255, size=40)
+        eng = Engine(model, params, max_batch=1, max_len=48, page_size=16)
+        req = greedy_reqs([prompt])[0]
+        eng.run([req])
+
+        cache = model.init_cache(1, 48, dtype=jnp.float32)
+        logits, cache = jax.jit(make_prefill(model))(
+            params, {"tokens": jnp.asarray(prompt, jnp.int32)[None]}, cache)
+        decode = jax.jit(make_decode(model))
+        tok = int(jnp.argmax(logits[0, len(prompt) - 1]))
+        ref, pos = [tok], len(prompt)
+        for _ in range(5):
+            logits, cache = decode(params, jnp.asarray([[tok]], jnp.int32),
+                                   cache, pos)
+            tok = int(jnp.argmax(logits[0, -1]))
+            ref.append(tok)
+            pos += 1
+        assert ref == req.out_tokens
+
+    def test_empty_prompt_rejected(self):
+        model = dense_model()
+        params = model.init_params(jax.random.PRNGKey(0))
+        eng = Engine(model, params, max_batch=2, max_len=48)
+        with pytest.raises(CapacityError):
+            eng.admit(Request(rid=0, prompt=np.zeros(0, np.int32),
+                              max_new_tokens=4))
+
+    def test_dense_reference_decode_anchor(self):
+        """Paged greedy decode must match a plain dense-cache decode loop
+        (the pre-paged serving path) token for token."""
+        model = dense_model()
+        params = model.init_params(jax.random.PRNGKey(0))
+        rng = np.random.RandomState(2)
+        prompt = rng.randint(0, 255, size=7)
+        eng = Engine(model, params, max_batch=3, max_len=48, page_size=4)
+        req = greedy_reqs([prompt])[0]
+        eng.run([req])
+
+        cache = model.init_cache(1, 48, dtype=jnp.float32)
+        prefill = jax.jit(make_prefill(model))
+        decode = jax.jit(make_decode(model))
+        logits, cache = prefill(
+            params, {"tokens": jnp.asarray(prompt, jnp.int32)[None]}, cache)
+        tok = int(jnp.argmax(logits[0, len(prompt) - 1]))
+        ref, pos = [tok], len(prompt)
+        for _ in range(5):
+            logits, cache = decode(params, jnp.asarray([[tok]], jnp.int32),
+                                   cache, pos)
+            tok = int(jnp.argmax(logits[0, -1]))
+            ref.append(tok)
+            pos += 1
+        assert ref == req.out_tokens
+
+
+class TestPreemption:
+    def test_pool_exhaustion_preempts_and_completes(self):
+        """With an oversubscribed pool the youngest request is evicted and
+        recomputed; greedy outputs still match the unpressured engine."""
+        model = dense_model()
+        params = model.init_params(jax.random.PRNGKey(0))
+        rng = np.random.RandomState(0)
+        prompts = [rng.randint(0, 255, size=s) for s in (10, 14, 7)]
+        big = Engine(model, params, max_batch=2, max_len=64, page_size=4)
+        ref = greedy_reqs(prompts, n=8)
+        big.run(ref)
+        assert big.stats["preemptions"] == 0
+
+        tight = Engine(model, params, max_batch=2, max_len=64, page_size=4,
+                       num_blocks=9)  # 8 usable; 2 live seqs need up to 12
+        out = greedy_reqs(prompts, n=8, rid0=10)
+        tight.run(out)
+        assert tight.stats["preemptions"] > 0
+        for a, b in zip(ref, out):
+            assert a.out_tokens == b.out_tokens
+        assert tight.stats["tokens"] == sum(len(r.out_tokens) for r in out)
