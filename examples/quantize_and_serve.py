@@ -20,8 +20,9 @@ import numpy as np
 from repro.configs import FAMILY_REPRESENTATIVE as FAMILY_ARCH, SMOKE
 from repro.configs.base import ModelConfig
 from repro.core import adapters
-from repro.core.bpv import VQConfig
+from repro.core.bpv import PAPER_SETTINGS, VQConfig
 from repro.core.pipeline import quantize_model
+from repro.core.recipe import KeepDense, QuantRecipe, Quantize, Rule
 from repro.data.synthetic import SyntheticStream, sample_batch
 from repro.models import model_zoo
 from repro.serve.engine import Engine, Request
@@ -92,6 +93,25 @@ def main():
           f"{report.bits_per_value:.3f} bits/value")
     ppl_vq = perplexity(model, qparams, heldout)
     print(f"  VQ perplexity: {ppl_vq:.2f} (fp32 {ppl_fp:.2f})")
+
+    print("== mixed QuantRecipe: attn 2D@2b, mlp 1D@4b, layer-0 wq dense ==")
+    recipe = QuantRecipe(
+        rules=(
+            Rule("layers.0.attn.wq", KeepDense("demo: named target")),
+            Rule("group:attn", Quantize(PAPER_SETTINGS["2.25bpv_2d"])),
+            Rule("group:mlp", Quantize(PAPER_SETTINGS["4.125bpv_1d"])),
+        ),
+        default=Quantize(PAPER_SETTINGS["2.25bpv_2d"]), name="mixed-demo",
+    ).with_quantize_overrides(em_iters=30, codebook_update_iters=15)
+    qparams_mix, rep_mix = quantize_model(model, state.params, calib,
+                                          recipe=recipe, pack=True)
+    ppl_mix = perplexity(model, qparams_mix, heldout)
+    mix = sorted({(e.get("d"), e.get("bits_per_dim"))
+                  for e in rep_mix.per_target.values()
+                  if e["action"] == "quantize"})
+    print(f"  {rep_mix.achieved_bpv:.3f} bpv achieved | settings (d,b): "
+          f"{mix} | ppl {ppl_mix:.2f} | dense: "
+          f"{[k for k, e in rep_mix.per_target.items() if e['action'] == 'keep_dense']}")
 
     rng = np.random.RandomState(0)
     prompts = [rng.randint(0, cfg.vocab_size, size=8 + i % 5) for i in range(6)]

@@ -15,6 +15,8 @@ from repro.core.adapters.base import (  # noqa: F401 (public API)
     WeightSpec,
     acc_expert_tap,
     acc_tap,
+    blocks_stackable,
+    maybe_stack_blocks,
     stack_blocks,
     tree_get,
     tree_set,

@@ -44,22 +44,36 @@ class WeightSpec:
     tap        — name of the Hessian tap (``capture`` output) whose
                  statistics quantize this leaf. Plain taps accumulate a
                  ``hessian.HessianState``; per-expert taps accumulate an
-                 (E, c, c) stack with per-expert token counts.
-    group      — "attn" (mixer / attention) or "mlp" (feed-forward), the
-                 granularity at which callers can disable quantization.
+                 (E, c, c) stack with per-expert token counts. ``None``
+                 means no static tap exists (e.g. recurrent matrices fed
+                 by lagged hidden states): data-aware actions fall back
+                 to an identity Hessian if a recipe forces quantization.
+    group      — "attn" (mixer / attention) or "mlp" (feed-forward); rule
+                 patterns can address it as ``group:attn`` / ``group:mlp``.
+    keep_dense — when set, the adapter declares this target dense by
+                 default (the string is the reason, surfaced in
+                 ``QuantizeReport.per_target``); an explicit recipe rule
+                 still overrides it.
+
+    The canonical recipe-visible name of a target is
+    ``f"{block.prefix}.{spec.name}"`` (see BlockAdapter.prefix).
     """
 
     name: str
     path: tuple
-    tap: str
+    tap: str | None
     group: str = "attn"
     per_expert: bool = False
+    keep_dense: str | None = None
 
 
 class BlockAdapter:
     """Base class: one sequential block of the model."""
 
-    name: str = "block"
+    name: str = "block"      # display name (progress lines, report rows)
+    prefix: str = "block"    # canonical-name prefix for recipe patterns:
+                             # stable across runs, e.g. "layers.3", "shared",
+                             # "mamba.0.1", "enc.2", "dec.0"
 
     def params(self) -> Any:
         """Current (not yet quantized) block parameter tree."""
@@ -157,3 +171,48 @@ def stack_blocks(block_list: list):
         return jnp.stack(ls)
 
     return jax.tree.map(stack, *block_list, is_leaf=is_leaf)
+
+
+def blocks_stackable(block_list: list) -> bool:
+    """True when every block tree has an identical structure (VQLinear
+    static metadata included — it lives in the treedef), i.e. the stack is
+    scannable. Mixed recipes break this: per-layer settings diverge in
+    (k, d, band) metadata or leave some layers dense, so the model
+    assemblies fall back to a per-layer python loop over a list."""
+    s0 = jax.tree.structure(block_list[0])
+    return all(jax.tree.structure(b) == s0 for b in block_list[1:])
+
+
+def unify_rules(block_list: list) -> list:
+    """When per-layer VQLinear leaves differ *only* in their ``rule``
+    provenance string (e.g. layer 0 matched a by-name rule whose action
+    equals the default), collapse the divergent rules to "mixed" so the
+    stack stays scannable — per-target provenance is still exact in
+    QuantizeReport.per_target / checkpoint metadata."""
+    is_l = lambda x: isinstance(x, vql_mod.VQLinear)
+    flats = [jax.tree.flatten(b, is_leaf=is_l) for b in block_list]
+    if any(f[1] != flats[0][1] for f in flats[1:]):
+        return block_list  # shapes of the trees themselves differ
+    cols = list(zip(*[f[0] for f in flats]))
+    out_cols = []
+    for col in cols:
+        if all(is_l(x) for x in col) and len({x.rule for x in col}) > 1:
+            col = tuple(dataclasses.replace(x, rule="mixed") for x in col)
+        out_cols.append(col)
+    return [jax.tree.unflatten(flats[0][1], [c[i] for c in out_cols])
+            for i in range(len(block_list))]
+
+
+def maybe_stack_blocks(block_list: list):
+    """stack_blocks when the blocks are homogeneous, else the plain list
+    (heterogeneous serving format for mixed recipes). Rule-provenance
+    strings that are the only divergence are unified first so they never
+    force the slow list path on an otherwise uniform stack."""
+    if blocks_stackable(block_list):
+        return stack_blocks(block_list)
+    unified = unify_rules(block_list)
+    if blocks_stackable(unified):
+        return stack_blocks(unified)
+    # genuinely heterogeneous: keep the ORIGINAL blocks so each leaf's
+    # exact rule provenance survives in the list-path serving format
+    return list(block_list)

@@ -48,6 +48,7 @@ class _EncBlock(base.BlockAdapter):
         self.cfg = adapter.cfg
         self.index = index
         self.name = f"enc{index}"
+        self.prefix = f"enc.{index}"
         self._p = adapter.enc_layer(index)
         self._new = None
 
@@ -100,6 +101,7 @@ class _Transition(base.BlockAdapter):
         self.adapter = adapter
         self.cfg = adapter.cfg
         self.name = "enc→dec"
+        self.prefix = "enc_dec"
 
     def params(self):
         return {}
@@ -129,6 +131,7 @@ class _DecBlock(base.BlockAdapter):
         self.cfg = adapter.cfg
         self.index = index
         self.name = f"dec{index}"
+        self.prefix = f"dec.{index}"
         self._p = adapter.dec_layer(index)
         self._new = None
 
@@ -220,8 +223,8 @@ class EncDecAdapter(base.ModelAdapter):
 
     def finalize(self):
         cfg = self.cfg
-        enc = base.stack_blocks(
+        enc = base.maybe_stack_blocks(
             [self.new_enc[i] for i in range(cfg.n_encoder_layers)])
-        dec = base.stack_blocks(
+        dec = base.maybe_stack_blocks(
             [self.new_dec[i] for i in range(cfg.n_layers)])
         return dict(self.params, enc_layers=enc, dec_layers=dec)

@@ -52,6 +52,7 @@ class _SharedAttnBlock(base.BlockAdapter):
         self.adapter = adapter
         self.cfg = adapter.cfg
         self.name = "shared_attn"
+        self.prefix = "shared"
 
     def params(self):
         return dict(self.adapter.params["shared"])
@@ -96,6 +97,7 @@ class _MambaBlock(base.BlockAdapter):
         self.cfg = adapter.cfg
         self.g, self.j = g, j
         self.name = f"mamba{g}.{j}" + (" (+shared entry)" if j == 0 else "")
+        self.prefix = f"mamba.{g}.{j}"
         self._p = adapter.mamba_layer(g, j)
         self._new = None
         # group-entry hidden streams computed in capture(), reused by
@@ -192,11 +194,22 @@ class HybridAdapter(base.ModelAdapter):
         return out
 
     def finalize(self):
-        groups = []
-        for g in range(self.n_groups):
-            groups.append(base.stack_blocks(
-                [self.new_mamba[(g, j)] for j in range(self.per)]))
-        mamba = base.stack_blocks(groups)
+        flat = [self.new_mamba[(g, j)] for g in range(self.n_groups)
+                for j in range(self.per)]
+        if not base.blocks_stackable(flat):
+            # provenance-only rule divergence must not cost the scan path
+            flat = base.unify_rules(flat)
+        if base.blocks_stackable(flat):
+            groups = [flat[g * self.per:(g + 1) * self.per]
+                      for g in range(self.n_groups)]
+            mamba = base.stack_blocks(
+                [base.stack_blocks(grp) for grp in groups])
+        else:
+            # heterogeneous trunk (mixed recipe): list-of-lists with the
+            # original per-leaf rules, consumed by the python-loop path
+            # in models/hybrid.forward
+            mamba = [[self.new_mamba[(g, j)] for j in range(self.per)]
+                     for g in range(self.n_groups)]
         return dict(self.params, shared=self.new_shared
                     if self.new_shared is not None
                     else self.params["shared"], mamba=mamba)

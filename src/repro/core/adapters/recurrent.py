@@ -10,10 +10,12 @@ Quantizable anatomy (DESIGN.md §5; models/xlstm.py):
   of the payload.
 
   sLSTM block: the four input projections w_z/w_i/w_f/w_o read the normed
-  block input; the block-diagonal per-head recurrent matrices r_* stay
-  dense (their inputs are the lagged hidden states inside the scan — no
-  static tap exists without unrolling the recurrence). The post-core gated
-  FFN quantizes like any dense MLP.
+  block input; the block-diagonal per-head recurrent matrices r_* are
+  emitted as explicit ``keep_dense`` targets (their inputs are the lagged
+  hidden states inside the scan — no static tap exists without unrolling
+  the recurrence), so the recipe layer surfaces the exclusion in
+  ``QuantizeReport.per_target`` instead of skipping it silently. The
+  post-core gated FFN quantizes like any dense MLP.
 
 All mixer projections carry group "attn" (they are the sequence-mixing
 path); the sLSTM FFN carries group "mlp".
@@ -28,6 +30,14 @@ from repro.core.adapters.base import WeightSpec
 from repro.models import common as cm, transformer, xlstm
 
 
+_GATE_DENSE_REASON = (
+    "fp32 exponential-gate inputs: numerically sensitive and a "
+    "negligible fraction of the payload")
+_R_DENSE_REASON = (
+    "recurrent r_* inputs are lagged hidden states inside the scan — "
+    "no static Hessian tap exists without unrolling the recurrence")
+
+
 class _MLSTMBlock(base.BlockAdapter):
     TARGETS = tuple(
         [WeightSpec(f"core.{w}", ("core", w), "in", "attn")
@@ -35,6 +45,9 @@ class _MLSTMBlock(base.BlockAdapter):
         + [WeightSpec(f"core.{w}", ("core", w), "u", "attn")
            for w in ("wq", "wk", "wv", "w_o")]
         + [WeightSpec("core.down", ("core", "down"), "down_in", "attn")]
+        + [WeightSpec(f"core.{w}", ("core", w), None, "attn",
+                      keep_dense=_GATE_DENSE_REASON)
+           for w in ("w_i", "w_f")]
     )
 
     def __init__(self, adapter, index: int):
@@ -42,6 +55,7 @@ class _MLSTMBlock(base.BlockAdapter):
         self.cfg = adapter.cfg
         self.index = index
         self.name = f"layer{index}[mlstm]"
+        self.prefix = f"layers.{index}"
         self._p = adapter.layer(index)
         self._new = None
 
@@ -78,21 +92,27 @@ class _SLSTMBlock(base.BlockAdapter):
         self.cfg = adapter.cfg
         self.index = index
         self.name = f"layer{index}[slstm]"
+        self.prefix = f"layers.{index}"
         self._p = adapter.layer(index)
         self._new = None
-
-    def params(self):
-        return self._p
 
     def targets(self):
         return tuple(
             [WeightSpec(f"core.{w}", ("core", w), "in", "attn")
              for w in ("w_z", "w_i", "w_f", "w_o")]
+            # block-diagonal per-head recurrent matrices: declared (not
+            # silently skipped) so the recipe layer reports them dense
+            + [WeightSpec(f"core.{w}", ("core", w), None, "attn",
+                          keep_dense=_R_DENSE_REASON)
+               for w in ("r_z", "r_i", "r_f", "r_o")]
             + [WeightSpec(f"core.ffn.{w}", ("core", "ffn", w), "ffn_in",
                           "mlp") for w in ("w_in", "w_gate")]
             + [WeightSpec("core.ffn.w_out", ("core", "ffn", "w_out"),
                           "ffn_out_in", "mlp")]
         )
+
+    def params(self):
+        return self._p
 
     def capture(self, x, taps, groups):
         cfg, lp = self.cfg, self._p

@@ -34,6 +34,7 @@ class _DenseBlock(base.BlockAdapter):
         self.cfg = adapter.cfg
         self.index = index
         self.name = f"layer{index}"
+        self.prefix = f"layers.{index}"
         self.kind = transformer.block_kind(self.cfg, index)
         self._p = adapter.layer(index)
         self._new = None
@@ -124,5 +125,7 @@ class TransformerAdapter(base.ModelAdapter):
         if not self._stacked:
             out_layers = new_blocks
         else:
-            out_layers = base.stack_blocks(new_blocks)
+            # mixed recipes produce per-layer packed metadata that cannot
+            # stack into one scan; the forward falls back to a layer loop
+            out_layers = base.maybe_stack_blocks(new_blocks)
         return dict(self.params, layers=out_layers)

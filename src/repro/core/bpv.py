@@ -8,11 +8,20 @@ entries stored at b_c bits, and blockwise normalization scales at b_s bits
 per N_s weights (0 if normalization is off).
 
 The paper picks l to hit the uniform-baseline overheads (0.125/0.25 bpv).
+Those nominal figures assume the tensor is large enough to amortize its
+codebooks; ``effective_bpv`` accounts for the group plan a concrete
+(r, c) matrix actually gets, which is what the recipe layer
+(core/recipe.py — PAPER_SETTINGS are also exposed there as single-rule
+recipe presets) and the budget allocator reason about.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+
+# accounting rate for weights a recipe leaves (or stores) dense: the
+# serving reference dtype is bf16 regardless of the fp32 smoke configs
+DENSE_BITS = 16.0
 
 
 @dataclass(frozen=True)
@@ -77,6 +86,44 @@ def group_size_for_overhead(
     assert budget > 0, "scale overhead alone exceeds the target"
     l = k * d * codebook_bits / budget
     return 2 ** math.ceil(math.log2(l))
+
+
+def effective_bpv(cfg: VQConfig, r: int, c: int) -> float:
+    """Achieved bits-per-value of ``cfg`` on a concrete (r, c) matrix.
+
+    Small tensors cannot amortize a codebook over the full nominal group
+    size: the group plan caps a group at the matrix extent, so the
+    codebook overhead term uses the group actually used (cols * band
+    rows) rather than ``cfg.group_size``. Equals ``cfg.bits_per_value``
+    whenever the matrix is large enough for the nominal plan.
+    """
+    from repro.core.gptvq import plan_groups  # deferred: gptvq imports us
+
+    cg, rg = plan_groups(r, c, cfg)
+    # same per-codebook storage as the nominal figure, amortized over the
+    # group actually planned instead of cfg.group_size
+    codebook = cfg.codebook_bits_per_value * cfg.group_size / (cg * rg)
+    return cfg.index_bits_per_value + codebook + cfg.scale_bits_per_value
+
+
+def int_quant_bpv(bits: int, group_size: int, c: int) -> float:
+    """Achieved bpv of uniform integer quantization on ``c`` input columns:
+    index bits + one fp16 scale per (row, group). Groups fall back to the
+    largest divisor of c, mirroring quant.compute_qparams."""
+    gs = c if group_size in (-1, None) else min(group_size, c)
+    while c % gs != 0:
+        gs -= 1
+    return bits + DENSE_BITS / gs
+
+
+def weighted_bpv(items) -> float:
+    """Model-wide bits-per-value: ``items`` is an iterable of
+    (numel, bpv) pairs; returns the numel-weighted mean."""
+    total_bits = total_w = 0.0
+    for numel, bpv in items:
+        total_bits += numel * bpv
+        total_w += numel
+    return total_bits / max(total_w, 1.0)
 
 
 # Paper's main configurations, matched to uniform W2@g128 / W2@g64 / W3@g128

@@ -20,6 +20,19 @@ adapter module. Supported families: transformer dense/MoE, VLM text
 stacks, xLSTM (ssm), Mamba+shared-attention hybrids, and audio
 encoder-decoders.
 
+Configuration is a declarative ``QuantRecipe`` (core/recipe.py): ordered
+``Rule(pattern, action)`` entries over the canonical target names
+(``<block_prefix>.<spec.name>``) resolve every leaf to Quantize /
+IntQuant / KeepDense before any compute; adapter-declared dense
+exclusions (e.g. sLSTM ``r_*``) surface in the report instead of being
+silently skipped. ``budget_bpv`` turns on Hessian-budgeted mixed
+precision: a pre-pass over the unquantized model collects per-target
+diagonal Hessians, and a greedy allocator picks each target's setting so
+the model-wide weighted bpv stays on budget. The legacy
+``(method, cfg, quantize_attn, quantize_mlp)`` kwargs remain as a shim
+that compiles to an equivalent recipe with bitwise-identical packed
+payloads.
+
 Distribution: calibration sequences shard across data-parallel workers;
 each accumulates partial Hessians and a single all-reduce merges them (the
 quantizer itself is layer-local). On a single-process container the same
@@ -33,6 +46,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -41,10 +55,21 @@ import jax.numpy as jnp
 from repro.core import adapters
 from repro.core import hessian as hes
 from repro.core import vq_linear as vql_mod
-from repro.core.bpv import VQConfig
+from repro.core.bpv import VQConfig, weighted_bpv
 from repro.core.codebook_compress import codebook_update, quantize_codebooks
 from repro.core.gptvq import gptvq_quantize_matrix, layer_error
 from repro.core.quant import gptq_quantize, rtn_quantize
+from repro.core.recipe import (
+    BudgetEntry,
+    IntQuant,
+    KeepDense,
+    QuantRecipe,
+    Quantize,
+    RecipeError,
+    Resolved,
+    TargetInfo,
+    allocate_budget,
+)
 
 
 @dataclasses.dataclass
@@ -52,7 +77,11 @@ class QuantizeReport:
     per_layer: list     # one row per block: {"layer", "block", target: err}
     total_seconds: float
     method: str
-    bits_per_value: float
+    bits_per_value: float   # nominal cfg bpv (legacy uniform) / achieved
+    # per canonical target: {"action", "rule", "bpv", "numel", "error", ...}
+    per_target: dict = dataclasses.field(default_factory=dict)
+    achieved_bpv: float = 0.0   # numel-weighted model-wide bpv, overhead incl.
+    recipe: dict | None = None  # the resolved recipe, JSON-able
 
     def total_error(self) -> float:
         """Summed Hessian-weighted reconstruction error over all targets."""
@@ -61,32 +90,42 @@ class QuantizeReport:
             if k not in ("layer", "block")))
 
 
-def _quantize_matrix(W_io, H, method: str, cfg, key):
-    """W_io: (in, out) kernel. Returns (fake-quant (in,out), VQLinear|None)."""
+def _apply_action(W_io, H, action, key):
+    """W_io: (in, out) kernel. Returns (fake-quant (in,out), VQLinear|None).
+
+    Dispatch mirrors the legacy method strings exactly (same ops, same
+    jitted functions) so shim-compiled recipes stay bitwise-identical.
+    """
     W = W_io.T.astype(jnp.float32)  # (out, in)
-    if method == "rtn":
-        return rtn_quantize(W, cfg["bits"], cfg["group_size"]).T.astype(
-            W_io.dtype), None
-    if method == "kmeans":
+    if isinstance(action, IntQuant):
+        if action.method == "rtn":
+            q = rtn_quantize(W, action.bits, action.group_size)
+            return q.T.astype(W_io.dtype), None
+        U = hes.inv_hessian_cholesky(
+            H if H is not None else jnp.eye(W.shape[1], dtype=jnp.float32))
+        Q = gptq_quantize(W, U, bits=action.bits,
+                          group_size=action.group_size)
+        return Q.T.astype(W_io.dtype), None
+    assert isinstance(action, Quantize)
+    cfg = action.cfg
+    if action.method == "kmeans":
         # Table-1 baseline: plain k-means clustering, no Hessian weighting,
         # no error feedback (identity H => EM == k-means, U == I)
         res = gptvq_quantize_matrix(
             W, jnp.eye(W.shape[1], dtype=jnp.float32), cfg, key)
         return res.arrays.Q.T.astype(W_io.dtype), None
-    U = hes.inv_hessian_cholesky(H)
-    if method == "kmeans_data":
+    U = hes.inv_hessian_cholesky(
+        H if H is not None else jnp.eye(W.shape[1], dtype=jnp.float32))
+    if action.method == "kmeans_data":
         # Table-1 middle row: k-means WITH layer input data (Hessian-weighted
         # EM/assignment) but no GPTQ-style error feedback: diagonal-only U
         Ud = jnp.diag(jnp.diagonal(U))
         res = gptvq_quantize_matrix(W, Ud, cfg, key)
         return res.arrays.Q.T.astype(W_io.dtype), None
-    if method == "gptq":
-        Q = gptq_quantize(W, U, bits=cfg["bits"], group_size=cfg["group_size"])
-        return Q.T.astype(W_io.dtype), None
-    assert method == "gptvq"
-    vq_cfg: VQConfig = cfg
-    res = gptvq_quantize_matrix(W, U, vq_cfg, key)
-    res = codebook_update(res, W, H)
+    assert action.method == "gptvq"
+    res = gptvq_quantize_matrix(W, U, cfg, key)
+    if H is not None:
+        res = codebook_update(res, W, H)
     res = quantize_codebooks(res)
     packed = vql_mod.from_vq_result(res)
     return res.arrays.Q.T.astype(W_io.dtype), packed
@@ -101,7 +140,7 @@ def _recon_error(W_io, q_io, H) -> float:
     return float(layer_error(W, Q, H))
 
 
-def _quantize_expert_stack(Ws, tap, method, cfg, key, pack):
+def _quantize_expert_stack(Ws, tap, action, key, pack, rule: str):
     """Quantize an (E, in, out) expert stack, one routed-token Hessian per
     expert. Returns (key, new leaf, summed reconstruction error)."""
     E = Ws.shape[0]
@@ -112,8 +151,10 @@ def _quantize_expert_stack(Ws, tap, method, cfg, key, pack):
     for e in range(E):
         key, sub = jax.random.split(key)
         He = Hs[e] / jnp.maximum(n[e], 1.0) if Hs is not None else None
-        q, packed = _quantize_matrix(Ws[e], He, method, cfg, sub)
+        q, packed = _apply_action(Ws[e], He, action, sub)
         qs.append(q)
+        if packed is not None:
+            packed = dataclasses.replace(packed, rule=rule)
         packs.append(packed)
         err += _recon_error(Ws[e], q, He)
     if pack and packs[0] is not None:
@@ -123,6 +164,131 @@ def _quantize_expert_stack(Ws, tap, method, cfg, key, pack):
     return key, leaf, err
 
 
+def _block_prefix(blk) -> str:
+    """Canonical name prefix for a block's targets (adapters set
+    ``prefix``; the display ``name`` is the fallback)."""
+    return getattr(blk, "prefix", blk.name)
+
+
+def _collect_targets(blocks) -> list[TargetInfo]:
+    """Flatten every block's WeightSpecs into resolver TargetInfo rows."""
+    out = []
+    for blk in blocks:
+        prefix = _block_prefix(blk)
+        block_params = blk.params()
+        for spec in blk.targets():
+            W = adapters.tree_get(block_params, spec.path)
+            if spec.per_expert:
+                E, c, r = W.shape
+                numel = E * c * r
+            elif W.ndim == 2:
+                c, r = W.shape           # (in, out) kernel
+                numel = c * r
+            else:
+                # non-matmul leaf (e.g. sLSTM block-diagonal r_*): only
+                # KeepDense can apply; record extents for bpv weighting
+                r, c = W.shape[-1], W.shape[-2]
+                numel = W.size
+            default = (KeepDense(spec.keep_dense) if spec.keep_dense
+                       is not None else None)
+            out.append(TargetInfo(
+                name=f"{prefix}.{spec.name}", group=spec.group, r=r, c=c,
+                numel=numel, default_action=default))
+    return out
+
+
+def _check_plan(blocks, plan) -> None:
+    """Fail fast on actions the target's leaf cannot support."""
+    for blk in blocks:
+        prefix = _block_prefix(blk)
+        block_params = blk.params()
+        for spec in blk.targets():
+            res = plan[f"{prefix}.{spec.name}"]
+            if isinstance(res.action, KeepDense):
+                continue
+            W = adapters.tree_get(block_params, spec.path)
+            if W.ndim != (3 if spec.per_expert else 2):
+                raise RecipeError(
+                    f"target {prefix}.{spec.name!r} has shape "
+                    f"{tuple(W.shape)}; only 2-D kernels (or 3-D expert "
+                    f"stacks) can quantize — use keep_dense "
+                    f"(matched {res.rule})")
+
+
+def _budget_prepass(adapter, chunks, plan, progress):
+    """Collect per-target diagonal Hessians from the *unquantized* model.
+
+    One cheap forward sweep: capture each block's taps from the original
+    activation stream, keep only diag(H), install the original params and
+    advance. Uses a fresh blocks() list so the real sweep starts clean.
+    """
+    states = [adapter.calib_state(c, ci) for ci, c in enumerate(chunks)]
+    blocks = adapter.blocks()
+    diag: dict[str, jax.Array] = {}
+    for blk in blocks:
+        prefix = _block_prefix(blk)
+        eligible = [
+            spec for spec in blk.targets()
+            if isinstance(plan[f"{prefix}.{spec.name}"].action, Quantize)
+            and spec.tap is not None]
+        groups = frozenset(spec.group for spec in eligible)
+        taps: dict = {}
+        if groups:
+            for st in states:
+                taps = blk.capture(st, taps, groups)
+        for spec in eligible:
+            tap = taps.get(spec.tap)
+            if tap is None:
+                continue
+            name = f"{prefix}.{spec.name}"
+            if spec.per_expert:
+                Hs, n = tap
+                He = Hs / jnp.maximum(n, 1.0)[:, None, None]
+                diag[name] = jnp.mean(jax.vmap(jnp.diagonal)(He), axis=0)
+            else:
+                diag[name] = jnp.diagonal(hes.finalize(tap))
+        blk.install(blk.params())
+        states = [blk.advance(st) for st in states]
+        if progress:
+            progress(f"budget pre-pass: {blk.name}")
+    return diag
+
+
+def _allocate(blocks, plan, diag, budget_bpv, progress):
+    """Rewrite Quantize plan entries with the budget allocator's choice."""
+    entries, fixed_bits, fixed_numel = [], 0.0, 0
+    for blk in blocks:
+        prefix = _block_prefix(blk)
+        block_params = blk.params()
+        for spec in blk.targets():
+            name = f"{prefix}.{spec.name}"
+            res = plan[name]
+            W = adapters.tree_get(block_params, spec.path)
+            if spec.per_expert:
+                replicas = W.shape[0]
+                Wq, numel = W[0].T.astype(jnp.float32), W.size
+            else:
+                replicas = 1
+                Wq, numel = W.T.astype(jnp.float32), W.size
+            if isinstance(res.action, Quantize):
+                entries.append(BudgetEntry(
+                    name=name, W=Wq, diag_h=diag.get(name),
+                    base_cfg=res.action.cfg, numel=numel,
+                    replicas=replicas))
+            else:
+                r, c = Wq.shape[-2], Wq.shape[-1]
+                fixed_bits += numel * res.action.bpv(r, c)
+                fixed_numel += numel
+    alloc = allocate_budget(entries, budget_bpv, fixed_bits=fixed_bits,
+                            fixed_numel=fixed_numel, progress=progress)
+    for name, (setting, cfg) in alloc.items():
+        old = plan[name]
+        plan[name] = Resolved(
+            Quantize(cfg, method=old.action.method),
+            rule=f"budget[{setting}]<-{old.rule}")
+    return plan
+
+
 def quantize_model(
     model,
     params,
@@ -130,65 +296,109 @@ def quantize_model(
     method: str = "gptvq",
     cfg: Any = None,         # VQConfig for gptvq; {"bits","group_size"} else
     *,
+    recipe: QuantRecipe | None = None,  # declarative per-target rules
+    budget_bpv: float | None = None,    # Hessian-budgeted mixed precision
     pack: bool = False,      # True -> VQLinear leaves (serving format)
     chunk: int = 8,          # calibration sequences per forward chunk
-    quantize_attn: bool = True,   # quantize the "attn" (mixer) weight group
-    quantize_mlp: bool = True,    # quantize the "mlp" (feed-forward) group
+    quantize_attn: bool = True,   # deprecated: use a recipe rule instead
+    quantize_mlp: bool = True,    # deprecated: use a recipe rule instead
     seed: int = 0,
     progress: Callable[[str], None] | None = None,
 ):
     """Quantize any registered model family. Returns (new_params, report).
 
-    The driver is three passes per block, mediated by the family's
-    adapter: (1) Hessian capture from the current calibration activations,
-    (2) quantization of every ``WeightSpec`` target against its tap,
-    (3) advancing the activations through the quantized block.
+    The driver resolves a per-target plan from the recipe (or from the
+    legacy kwargs via ``QuantRecipe.from_legacy`` — bitwise-identical
+    packed payloads), then runs three passes per block, mediated by the
+    family's adapter: (1) Hessian capture from the current calibration
+    activations for the taps the plan actually needs, (2) per-target
+    application of the resolved action, (3) advancing the activations
+    through the quantized block.
     """
     t0 = time.time()
+    legacy = recipe is None
+    if not legacy and (method != "gptvq" or cfg is not None):
+        raise ValueError(
+            "pass either a recipe or the legacy (method, cfg) pair — "
+            "explicit method/cfg would be silently ignored alongside "
+            "recipe=")
     adapter = adapters.get_adapter(model, params)
-    groups = frozenset(
-        g for g, on in (("attn", quantize_attn), ("mlp", quantize_mlp)) if on)
+    if legacy:
+        if not (quantize_attn and quantize_mlp):
+            warnings.warn(
+                "quantize_attn/quantize_mlp are deprecated; pass a "
+                "QuantRecipe with keep_dense rules instead",
+                DeprecationWarning, stacklevel=2)
+        if cfg is None:
+            cfg = (VQConfig()
+                   if method in ("gptvq", "kmeans", "kmeans_data")
+                   else {"bits": 4, "group_size": 128})
+        recipe = QuantRecipe.from_legacy(
+            method, cfg, quantize_attn=quantize_attn,
+            quantize_mlp=quantize_mlp)
     key = jax.random.PRNGKey(seed)
-    if cfg is None:
-        cfg = VQConfig() if method == "gptvq" else {"bits": 4, "group_size": 128}
 
     n_seq = tokens.shape[0]
     chunks = [tokens[i : i + chunk] for i in range(0, n_seq, chunk)]
-    states = [adapter.calib_state(c, ci) for ci, c in enumerate(chunks)]
 
     blocks = adapter.blocks()
-    report_rows = []
-    for bi, blk in enumerate(blocks):
-        # ---- pass 1: Hessian taps from current activations ----------------
-        taps: dict = {}
-        for st in states:
-            taps = blk.capture(st, taps, groups)
+    plan = recipe.resolve(_collect_targets(blocks))
+    _check_plan(blocks, plan)
+    if budget_bpv is not None:
+        diag = _budget_prepass(adapter, chunks, plan, progress)
+        plan = _allocate(blocks, plan, diag, budget_bpv, progress)
 
-        # ---- pass 2: quantize this block's targets ------------------------
+    states = [adapter.calib_state(c, ci) for ci, c in enumerate(chunks)]
+    report_rows = []
+    per_target: dict[str, dict] = {}
+    for bi, blk in enumerate(blocks):
+        prefix = _block_prefix(blk)
+        specs = blk.targets()
+        resolved = {spec.name: plan[f"{prefix}.{spec.name}"]
+                    for spec in specs}
+
+        # ---- pass 1: Hessian taps the plan needs --------------------------
+        needed = frozenset(
+            spec.group for spec in specs
+            if resolved[spec.name].needs_hessian and spec.tap is not None)
+        taps: dict = {}
+        if needed:
+            for st in states:
+                taps = blk.capture(st, taps, needed)
+
+        # ---- pass 2: apply each target's resolved action ------------------
         new_block = blk.params()
         row = {"layer": bi, "block": blk.name}
-        for spec in blk.targets():
-            if spec.group not in groups:
-                continue
+        for spec in specs:
+            res = resolved[spec.name]
+            name = f"{prefix}.{spec.name}"
             W = adapters.tree_get(new_block, spec.path)
-            tap = taps.get(spec.tap)
-            if tap is None and method not in ("rtn", "kmeans"):
-                # data-aware methods need the tap; a miss is an adapter bug
+            entry = _target_entry(res, spec, W)
+            if isinstance(res.action, KeepDense):
+                per_target[name] = entry
+                continue
+            tap = taps.get(spec.tap) if spec.tap is not None else None
+            if res.needs_hessian and spec.tap is not None and tap is None:
+                # data-aware actions need the tap; a miss is an adapter bug
                 # (capture never accumulated what targets() promised)
                 raise KeyError(
                     f"block {blk.name!r}: Hessian tap {spec.tap!r} for "
                     f"target {spec.name!r} was never captured")
             if spec.per_expert:
                 key, leaf, err = _quantize_expert_stack(
-                    W, tap, method, cfg, key, pack)
+                    W, tap, res.action, key, pack, res.rule)
             else:
                 H = hes.finalize(tap) if tap is not None else None
                 key, sub = jax.random.split(key)
-                q, packed = _quantize_matrix(W, H, method, cfg, sub)
+                q, packed = _apply_action(W, H, res.action, sub)
+                if packed is not None:
+                    packed = dataclasses.replace(packed, rule=res.rule)
                 leaf = packed if (pack and packed is not None) else q
                 err = _recon_error(W, q, H)
             new_block = adapters.tree_set(new_block, spec.path, leaf)
             row[spec.name] = err
+            entry["error"] = err
+            per_target[name] = entry
         blk.install(new_block)
 
         # ---- pass 3: advance activations through the quantized block ------
@@ -198,7 +408,40 @@ def quantize_model(
         report_rows.append(row)
 
     new_params = adapter.finalize()
-    bpv = cfg.bits_per_value if isinstance(cfg, VQConfig) else (
-        cfg["bits"] + 16.0 / cfg["group_size"])
-    return new_params, QuantizeReport(report_rows, time.time() - t0, method,
-                                      bpv)
+    achieved = weighted_bpv(
+        (e["numel"], e["bpv"]) for e in per_target.values())
+    if legacy and budget_bpv is None:
+        # uniform legacy accounting: the nominal per-tensor formula
+        bpv = cfg.bits_per_value if isinstance(cfg, VQConfig) else (
+            cfg["bits"] + 16.0 / cfg["group_size"])
+        label = method
+    else:
+        bpv = achieved
+        label = f"recipe:{recipe.name}" if recipe.name else "recipe"
+    return new_params, QuantizeReport(
+        report_rows, time.time() - t0, label, bpv,
+        per_target=per_target, achieved_bpv=achieved,
+        recipe=recipe.to_json())
+
+
+def _target_entry(res: Resolved, spec, W) -> dict:
+    """JSON-able per-target report row (checkpoint metadata payload)."""
+    if spec.per_expert:
+        r, c = W.shape[2], W.shape[1]
+    else:
+        r, c = W.shape[-1], W.shape[-2]
+    action = res.action
+    entry: dict[str, Any] = {
+        "rule": res.rule, "numel": int(W.size),
+        "bpv": float(action.bpv(r, c)), "group": spec.group,
+    }
+    if isinstance(action, Quantize):
+        entry.update(action="quantize", method=action.method,
+                     d=action.cfg.d, bits_per_dim=action.cfg.bits_per_dim,
+                     group_size=action.cfg.group_size)
+    elif isinstance(action, IntQuant):
+        entry.update(action="int_quant", method=action.method,
+                     bits=action.bits, group_size=action.group_size)
+    else:
+        entry.update(action="keep_dense", reason=action.reason)
+    return entry

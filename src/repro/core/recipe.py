@@ -1,0 +1,501 @@
+"""QuantRecipe: declarative per-target quantization rules.
+
+The pipeline's configuration surface. A recipe is an ordered list of
+``Rule(pattern, action)`` entries matched against the canonical target
+names the family adapters emit (``<block_prefix>.<leaf>``, e.g.
+``layers.3.attn.wq``, ``shared.attn.wo``, ``mamba.0.1.mixer.in_proj``,
+``layers.5.core.r_z``). Patterns are shell globs (``fnmatch``) plus the
+special forms ``group:attn`` / ``group:mlp`` that match a target's
+``WeightSpec.group``. **First match wins.** Targets matched by no rule
+fall back to (in order) the adapter-declared default action (e.g. the
+sLSTM ``r_*`` ``keep_dense``), then the recipe's ``default`` action; in
+``strict`` mode an unmatched target without an adapter default is an
+error instead. Adapter-declared exclusions yield only to *explicit*
+exact-name rules — broad glob / ``group:`` patterns skip them, so a
+blanket ``group:attn`` rule never forces tap-less recurrent weights
+into quantization.
+
+Actions:
+  * ``Quantize(cfg)``      — GPTVQ (or its kmeans ablations) at a
+                             per-target ``VQConfig``.
+  * ``IntQuant(bits, gs)`` — uniform integer quantization (GPTQ error
+                             feedback by default, plain RTN optionally).
+  * ``KeepDense(reason)``  — leave the leaf untouched; the reason is
+                             surfaced in ``QuantizeReport.per_target``.
+
+On top of rules, ``allocate_budget`` solves Hessian-budgeted mixed
+precision: given a global bits-per-value budget it scores every
+Quantize-resolved target at each candidate setting with a cheap
+diagonal-Hessian-weighted proxy (a short EM fit on a row subsample, no
+error feedback) and greedily upgrades the most error-reducing targets
+per bit spent until the model-wide weighted bpv (shape-aware codebook /
+scale overhead included, via ``bpv.effective_bpv``) meets the budget.
+
+JSON schema (see ROADMAP.md "Recipes" for worked per-family examples) —
+omitting "default" means the rules (plus adapter defaults) must cover
+every target; unmatched targets error rather than silently quantize::
+
+    {"name": "mixed-demo", "strict": false,
+     "default": {"action": "quantize", "setting": "2.25bpv_2d"},
+     "rules": [
+       {"pattern": "group:attn", "action": "quantize",
+        "setting": "2.25bpv_2d", "overrides": {"em_iters": 25}},
+       {"pattern": "group:mlp", "action": "int_quant",
+        "bits": 4, "group_size": 128},
+       {"pattern": "layers.0.ffn.w_in", "action": "keep_dense",
+        "reason": "first-layer sensitivity"}]}
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+from typing import Any, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bpv import (
+    DENSE_BITS,
+    PAPER_SETTINGS,
+    VQConfig,
+    effective_bpv,
+    int_quant_bpv,
+)
+
+# ---------------------------------------------------------------------------
+# actions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Quantize:
+    """Vector-quantize with GPTVQ (method="gptvq") or one of its data
+    ablations ("kmeans": identity Hessian, no feedback; "kmeans_data":
+    diagonal Hessian, no feedback)."""
+
+    cfg: VQConfig = VQConfig()
+    method: str = "gptvq"
+
+    @property
+    def needs_hessian(self) -> bool:
+        return self.method != "kmeans"
+
+    def bpv(self, r: int, c: int) -> float:
+        return effective_bpv(self.cfg, r, c)
+
+
+@dataclasses.dataclass(frozen=True)
+class IntQuant:
+    """Uniform integer quantization: GPTQ error feedback by default,
+    plain round-to-nearest with method="rtn"."""
+
+    bits: int = 4
+    group_size: int = 128
+    method: str = "gptq"
+
+    @property
+    def needs_hessian(self) -> bool:
+        return self.method == "gptq"
+
+    def bpv(self, r: int, c: int) -> float:
+        return int_quant_bpv(self.bits, self.group_size, c)
+
+
+@dataclasses.dataclass(frozen=True)
+class KeepDense:
+    """Leave the leaf dense; counted at DENSE_BITS in the weighted bpv."""
+
+    reason: str = ""
+
+    needs_hessian = False
+
+    def bpv(self, r: int, c: int) -> float:
+        return DENSE_BITS
+
+
+RuleAction = Union[Quantize, IntQuant, KeepDense]
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    pattern: str
+    action: RuleAction
+
+    def matches(self, name: str, group: str) -> bool:
+        if self.pattern.startswith("group:"):
+            return group == self.pattern[len("group:"):]
+        return fnmatch.fnmatchcase(name, self.pattern)
+
+    @property
+    def explicit(self) -> bool:
+        """True for an exact-name rule (no glob metacharacters, not a
+        group: pattern) — the only kind that can override an
+        adapter-declared keep_dense default. Broad patterns fall through
+        to those defaults so e.g. ``group:attn`` never drags the sLSTM
+        recurrent r_* (no tap, 3-D) into quantization."""
+        return (not self.pattern.startswith("group:")
+                and not any(ch in self.pattern for ch in "*?["))
+
+
+# ---------------------------------------------------------------------------
+# target descriptors / resolution
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TargetInfo:
+    """What the resolver needs to know about one quantizable leaf."""
+
+    name: str                 # canonical: "<block_prefix>.<spec.name>"
+    group: str                # WeightSpec.group ("attn" / "mlp")
+    r: int                    # out_features (GPTVQ row dim)
+    c: int                    # in_features
+    numel: int                # total weights (experts included)
+    default_action: RuleAction | None = None  # adapter-declared fallback
+
+
+@dataclasses.dataclass(frozen=True)
+class Resolved:
+    """One target's resolved treatment plus its provenance."""
+
+    action: RuleAction
+    rule: str                 # "rule[i]:<pattern>" | "default" | "adapter:<reason>"
+
+    @property
+    def needs_hessian(self) -> bool:
+        return self.action.needs_hessian
+
+
+class RecipeError(ValueError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantRecipe:
+    """Ordered first-match-wins rules + default, over canonical names."""
+
+    rules: tuple[Rule, ...] = ()
+    default: RuleAction | None = Quantize()
+    strict: bool = False
+    name: str = ""
+
+    def __post_init__(self):
+        # mirror the from_json guard: a strict recipe must pass
+        # default=None — a silently-ignored default is a config footgun
+        if self.strict and self.default is not None:
+            raise RecipeError("strict recipe cannot carry a default action")
+
+    def resolve(self, targets: list[TargetInfo]) -> dict[str, Resolved]:
+        """Map every target to its action. Strict mode refuses targets
+        that no rule matches (adapter-declared defaults still apply:
+        they are explicit, visible exclusions, not silent misses)."""
+        plan: dict[str, Resolved] = {}
+        unmatched: list[str] = []
+        for t in targets:
+            if t.name in plan:
+                raise RecipeError(f"duplicate canonical target {t.name!r}")
+            hit = None
+            for i, rule in enumerate(self.rules):
+                if not rule.matches(t.name, t.group):
+                    continue
+                if t.default_action is not None and not rule.explicit:
+                    continue  # adapter exclusions need a by-name rule
+                hit = Resolved(rule.action, f"rule[{i}]:{rule.pattern}")
+                break
+            if hit is None and t.default_action is not None:
+                reason = getattr(t.default_action, "reason", "")
+                hit = Resolved(t.default_action, f"adapter:{reason}")
+            if hit is None:
+                if self.strict or self.default is None:
+                    unmatched.append(t.name)
+                    continue
+                hit = Resolved(self.default, "default")
+            plan[t.name] = hit
+        if unmatched:
+            why = "strict recipe" if self.strict else "recipe has no default"
+            raise RecipeError(
+                f"{why}: no rule matches target(s) "
+                + ", ".join(repr(n) for n in unmatched[:8])
+                + ("..." if len(unmatched) > 8 else ""))
+        return plan
+
+    def with_quantize_overrides(self, **kw) -> "QuantRecipe":
+        """A copy with VQConfig fields overridden on every Quantize action
+        (rules and default) — launchers use it to apply global speed knobs
+        like em_iters without touching the rule structure."""
+        def fix(action):
+            if not isinstance(action, Quantize):
+                return action
+            return dataclasses.replace(
+                action, cfg=dataclasses.replace(action.cfg, **kw))
+
+        return dataclasses.replace(
+            self,
+            rules=tuple(dataclasses.replace(r, action=fix(r.action))
+                        for r in self.rules),
+            default=None if self.default is None else fix(self.default))
+
+    # -- construction helpers ----------------------------------------------
+
+    @staticmethod
+    def uniform(cfg: VQConfig, method: str = "gptvq",
+                name: str = "") -> "QuantRecipe":
+        return QuantRecipe(rules=(), default=Quantize(cfg, method), name=name)
+
+    @staticmethod
+    def from_legacy(method: str, cfg, *, quantize_attn: bool = True,
+                    quantize_mlp: bool = True) -> "QuantRecipe":
+        """Compile the old ``quantize_model(method, cfg, quantize_attn=,
+        quantize_mlp=)`` surface into an equivalent recipe. The pipeline
+        guarantees bitwise-identical packed params for this recipe vs the
+        legacy kwargs (same per-target ops, same RNG key consumption)."""
+        if method in ("rtn", "gptq"):
+            cfg = cfg if cfg is not None else {"bits": 4, "group_size": 128}
+            action: RuleAction = IntQuant(cfg["bits"], cfg["group_size"],
+                                          method=method)
+        elif method in ("gptvq", "kmeans", "kmeans_data"):
+            action = Quantize(cfg if cfg is not None else VQConfig(), method)
+        else:
+            raise RecipeError(f"unknown method {method!r}")
+        rules = []
+        if not quantize_attn:
+            rules.append(Rule("group:attn", KeepDense("quantize_attn=False")))
+        if not quantize_mlp:
+            rules.append(Rule("group:mlp", KeepDense("quantize_mlp=False")))
+        return QuantRecipe(rules=tuple(rules), default=action,
+                           name=f"legacy:{method}")
+
+    # -- (de)serialization --------------------------------------------------
+
+    def to_json(self) -> dict:
+        out: dict[str, Any] = {"name": self.name, "strict": self.strict,
+                               "rules": [
+                                   {"pattern": r.pattern,
+                                    **_action_to_json(r.action)}
+                                   for r in self.rules]}
+        if self.default is not None:
+            out["default"] = _action_to_json(self.default)
+        return out
+
+    @staticmethod
+    def from_json(obj: dict) -> "QuantRecipe":
+        rules = tuple(
+            Rule(r["pattern"], _action_from_json(r))
+            for r in obj.get("rules", ()))
+        default = (_action_from_json(obj["default"])
+                   if "default" in obj else None)
+        strict = bool(obj.get("strict", False))
+        if strict and "default" in obj:
+            raise RecipeError("strict recipe cannot carry a default action")
+        # no implicit default: a JSON recipe that omits "default" covers
+        # only what its rules (and adapter defaults) match — unmatched
+        # targets are a clear error, never silently quantized
+        return QuantRecipe(rules=rules, default=default, strict=strict,
+                           name=obj.get("name", ""))
+
+    @staticmethod
+    def from_file(path: str) -> "QuantRecipe":
+        with open(path) as f:
+            return QuantRecipe.from_json(json.load(f))
+
+
+def _vq_cfg_from_json(spec: dict) -> VQConfig:
+    base = PAPER_SETTINGS[spec["setting"]] if "setting" in spec else VQConfig()
+    overrides = spec.get("overrides", {})
+    unknown = set(overrides) - {f.name for f in dataclasses.fields(VQConfig)}
+    if unknown:
+        raise RecipeError(f"unknown VQConfig override(s): {sorted(unknown)}")
+    return dataclasses.replace(base, **overrides)
+
+
+def _action_from_json(spec: dict) -> RuleAction:
+    kind = spec.get("action", "quantize")
+    if kind == "quantize":
+        return Quantize(_vq_cfg_from_json(spec),
+                        method=spec.get("method", "gptvq"))
+    if kind == "int_quant":
+        return IntQuant(int(spec.get("bits", 4)),
+                        int(spec.get("group_size", 128)),
+                        method=spec.get("method", "gptq"))
+    if kind == "keep_dense":
+        return KeepDense(spec.get("reason", ""))
+    raise RecipeError(f"unknown action {kind!r}")
+
+
+def _action_to_json(action: RuleAction) -> dict:
+    if isinstance(action, Quantize):
+        out: dict[str, Any] = {"action": "quantize"}
+        if action.method != "gptvq":
+            out["method"] = action.method
+        # emit the matching paper setting when one exists, else raw fields
+        for name, cfg in PAPER_SETTINGS.items():
+            if action.cfg == cfg:
+                out["setting"] = name
+                return out
+        out["overrides"] = {
+            f.name: getattr(action.cfg, f.name)
+            for f in dataclasses.fields(VQConfig)
+            if getattr(action.cfg, f.name) != f.default}
+        return out
+    if isinstance(action, IntQuant):
+        out = {"action": "int_quant", "bits": action.bits,
+               "group_size": action.group_size}
+        if action.method != "gptq":
+            out["method"] = action.method
+        return out
+    assert isinstance(action, KeepDense)
+    return {"action": "keep_dense", "reason": action.reason}
+
+
+# ---------------------------------------------------------------------------
+# named presets: every PAPER_SETTINGS point as a single-rule (uniform)
+# recipe, plus the mixed demo CI exercises on dense and hybrid
+# ---------------------------------------------------------------------------
+
+PRESET_RECIPES: dict[str, QuantRecipe] = {
+    name: QuantRecipe.uniform(cfg, name=name)
+    for name, cfg in PAPER_SETTINGS.items()
+}
+PRESET_RECIPES["mixed_demo"] = QuantRecipe(
+    rules=(
+        Rule("group:attn", Quantize(PAPER_SETTINGS["2.25bpv_2d"])),
+        Rule("group:mlp", Quantize(PAPER_SETTINGS["4.125bpv_1d"])),
+    ),
+    default=Quantize(PAPER_SETTINGS["2.25bpv_2d"]),
+    name="mixed_demo",
+)
+
+
+def get_recipe(spec: str) -> QuantRecipe:
+    """Resolve a CLI recipe argument: a preset name or a JSON file path."""
+    if spec in PRESET_RECIPES:
+        return PRESET_RECIPES[spec]
+    if spec.endswith(".json"):
+        return QuantRecipe.from_file(spec)
+    raise RecipeError(
+        f"unknown recipe {spec!r}: not a preset "
+        f"({sorted(PRESET_RECIPES)}) and not a .json path")
+
+
+# ---------------------------------------------------------------------------
+# Hessian-budgeted mixed-precision allocation
+# ---------------------------------------------------------------------------
+
+# candidate settings the allocator may assign, cheapest-first by nominal
+# bpv; targets whose column count is not divisible by a setting's d skip
+# that setting
+BUDGET_CANDIDATES = tuple(sorted(
+    PAPER_SETTINGS, key=lambda n: PAPER_SETTINGS[n].bits_per_value))
+
+
+@dataclasses.dataclass
+class BudgetEntry:
+    """One Quantize-resolved target entering the allocation."""
+
+    name: str
+    W: jax.Array              # (r, c) float32, GPTVQ orientation
+    diag_h: jax.Array | None  # (c,) diagonal Hessian (None -> identity)
+    base_cfg: VQConfig        # non-(d,bits,gs,cb) fields carry over
+    numel: int                # weights this choice prices (experts incl.)
+    replicas: int = 1         # matrices sharing this choice (E for expert
+                              # stacks): the proxy error scales by this so
+                              # err and bit-cost cover the same weights
+
+
+def _proxy_error(W: jax.Array, diag_h, cfg: VQConfig,
+                 max_rows: int = 32) -> float:
+    """Cheap proxy for the reconstruction error of ``cfg`` on W: a short
+    diagonal-Hessian-weighted EM fit (no GPTQ error feedback) on a row
+    subsample, scaled back to the full matrix."""
+    from repro.core.gptvq import gptvq_quantize_matrix, layer_error
+
+    r, c = W.shape
+    step = max(1, r // max_rows)
+    Ws = W[::step][:max_rows]
+    if diag_h is None:
+        diag_h = jnp.ones((c,), jnp.float32)
+    d = jnp.maximum(diag_h.astype(jnp.float32), 1e-10)
+    Ud = jnp.diag(1.0 / jnp.sqrt(d))  # diagonal H -> Hinv = U^T U
+    cfg = dataclasses.replace(cfg, em_iters=min(cfg.em_iters, 6),
+                              codebook_update_iters=0, exact_span_solve=False)
+    res = gptvq_quantize_matrix(Ws, Ud, cfg, jax.random.PRNGKey(0))
+    err = float(layer_error(Ws, res.arrays.Q, jnp.diag(d)))
+    return err * (r / Ws.shape[0])
+
+
+def allocate_budget(
+    entries: list[BudgetEntry],
+    budget_bpv: float,
+    *,
+    fixed_bits: float = 0.0,      # Σ numel*bpv of non-Quantize targets
+    fixed_numel: int = 0,
+    candidates: tuple[str, ...] = BUDGET_CANDIDATES,
+    progress=None,
+) -> dict[str, tuple[str, VQConfig]]:
+    """Greedy discrete allocation: start every target at its cheapest
+    feasible setting, then repeatedly apply the upgrade with the best
+    proxy-error reduction per extra bit while the model-wide weighted
+    bpv (including ``fixed_*`` contributions from int/dense targets)
+    stays <= ``budget_bpv``. Returns {target name: (setting, VQConfig)}.
+    """
+    if not entries:
+        return {}
+    table: dict[str, list[tuple[str, VQConfig, float, float]]] = {}
+    for e in entries:
+        r, c = e.W.shape
+        rows = []
+        for setting in candidates:
+            base = PAPER_SETTINGS[setting]
+            if c % base.d != 0:
+                continue
+            cfg = dataclasses.replace(
+                e.base_cfg, d=base.d, bits_per_dim=base.bits_per_dim,
+                group_size=base.group_size, codebook_bits=base.codebook_bits)
+            bpv = effective_bpv(cfg, r, c)
+            err = _proxy_error(e.W, e.diag_h, cfg) * e.replicas
+            rows.append((setting, cfg, bpv, err))
+        if not rows:
+            raise RecipeError(
+                f"no candidate setting fits target {e.name!r} "
+                f"(c={c} not divisible by any candidate d)")
+        table[e.name] = rows
+        if progress:
+            progress(f"budget proxy: {e.name} ({len(rows)} candidates)")
+
+    numel = {e.name: e.numel for e in entries}
+    total_numel = fixed_numel + sum(numel.values())
+    # start at the cheapest effective bpv (ties: lower proxy error)
+    choice: dict[str, int] = {}
+    for nm, rows in table.items():
+        choice[nm] = min(range(len(rows)), key=lambda i: (rows[i][2],
+                                                          rows[i][3]))
+    bits = fixed_bits + sum(
+        numel[nm] * table[nm][choice[nm]][2] for nm in table)
+    if bits / total_numel > budget_bpv + 1e-9:
+        raise RecipeError(
+            f"budget {budget_bpv} bpv infeasible: cheapest allocation "
+            f"already needs {bits / total_numel:.3f} bpv")
+
+    while True:
+        best = None  # (efficiency, name, cand_index, delta_bits)
+        for nm, rows in table.items():
+            cur = rows[choice[nm]]
+            for i, cand in enumerate(rows):
+                dbits = (cand[2] - cur[2]) * numel[nm]
+                derr = cur[3] - cand[3]
+                if dbits <= 0 or derr <= 0:
+                    continue
+                if (bits + dbits) / total_numel > budget_bpv + 1e-9:
+                    continue
+                eff = derr / dbits
+                if best is None or eff > best[0]:
+                    best = (eff, nm, i, dbits)
+        if best is None:
+            break
+        _, nm, i, dbits = best
+        choice[nm] = i
+        bits += dbits
+
+    return {nm: (table[nm][choice[nm]][0], table[nm][choice[nm]][1])
+            for nm in table}

@@ -51,6 +51,9 @@ class VQLinear:
     group_cols: int = dataclasses.field(metadata=dict(static=True), default=256)
     rows_per_band: int = dataclasses.field(metadata=dict(static=True), default=1)
     scale_block: int = dataclasses.field(metadata=dict(static=True), default=0)
+    # recipe provenance: the rule that produced this leaf ("" when packed
+    # outside a recipe run) — lets serve/report reconstruct the mix
+    rule: str = dataclasses.field(metadata=dict(static=True), default="")
 
     @property
     def code_bits(self) -> int:

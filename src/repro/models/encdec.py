@@ -110,8 +110,13 @@ def encode(params, cfg: ModelConfig, frames: jax.Array, remat=True):
         layer_p = vql_mod.dequant_tree(layer_p, cm.DTYPES[cfg.dtype])
         return enc_block_apply(layer_p, cfg, h), None
 
-    body_fn = jax.checkpoint(body) if remat else body
-    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    if isinstance(params["enc_layers"], list):
+        # heterogeneous encoder stack (mixed quantization recipe)
+        for layer_p in params["enc_layers"]:
+            x, _ = (jax.checkpoint(body) if remat else body)(x, layer_p)
+    else:
+        body_fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
     return cm.rmsnorm(x, params["enc_norm"], cfg.norm_eps)
 
 
@@ -236,7 +241,23 @@ def forward(params, cfg: ModelConfig, tokens, *, frames=None, memory=None,
         L = cfg.n_layers
         dummy = jnp.zeros((L, B, 1, cfg.n_kv_heads, cfg.hd), x.dtype)
         xs = (params["dec_layers"], None, dummy, dummy)
-    x, (new_kv, new_ck, new_cv) = jax.lax.scan(body_fn, x, xs)
+    if isinstance(params["dec_layers"], list):
+        # heterogeneous decoder stack (mixed quantization recipe): loop
+        # layers, slicing the stacked caches and restacking the outputs so
+        # the cache layout matches the scan path bit-for-bit
+        layers, self_kv, ck, cv = xs
+        outs = []
+        for i, layer_p in enumerate(layers):
+            xs_i = (layer_p,
+                    None if self_kv is None
+                    else jax.tree.map(lambda a: a[i], self_kv),
+                    ck[i], cv[i])
+            x, out_i = body_fn(x, xs_i)
+            outs.append(out_i)
+        new_kv, new_ck, new_cv = jax.tree.map(
+            lambda *a: jnp.stack(a), *outs)
+    else:
+        x, (new_kv, new_ck, new_cv) = jax.lax.scan(body_fn, x, xs)
 
     if last_only:
         x = x[:, -1:]

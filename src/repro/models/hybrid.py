@@ -145,6 +145,49 @@ def _shared_attn(p, lora_g, cfg: ModelConfig, h, emb0, *, pos, kv_cache):
     return y, new_kv
 
 
+def _loop_groups(params, cfg: ModelConfig, x, emb0, cache_in, has_cache,
+                 pos, remat):
+    """Python-loop trunk for a heterogeneous (list-of-lists) mamba tree.
+
+    Cache layout in and out matches the scan path exactly — stacked
+    (n_groups, per, ...) mamba state and (n_groups, ...) shared-attn KV —
+    so jitted serving carries are structure-stable either way.
+    """
+    from repro.core import vq_linear as vql_mod
+    h = x
+    new_m_groups, new_kv_groups = [], []
+    for g, group_p in enumerate(params["mamba"]):
+        lora_g = jax.tree.map(lambda a: a[g], params["lora"])
+        a_cache = (jax.tree.map(lambda a: a[g], cache_in.attn)
+                   if has_cache and cache_in.attn is not None else None)
+
+        def one_group(h, group_p=group_p, lora_g=lora_g, a_cache=a_cache,
+                      g=g):
+            ha, new_kv = _shared_attn(params["shared"], lora_g, cfg, h,
+                                      emb0, pos=pos, kv_cache=a_cache)
+            h = h + ha
+            new_layers = []
+            for j, lp in enumerate(group_p):
+                lp = vql_mod.dequant_tree(lp, cm.DTYPES[cfg.dtype])
+                lc = jax.tree.map(lambda a: a[g, j], cache_in.mamba)
+                y, new_c = ssm.apply(
+                    lp["mixer"], cfg,
+                    cm.rmsnorm(h, lp["norm"], cfg.norm_eps), lc)
+                h = h + y
+                new_layers.append(new_c)
+            return h, (jax.tree.map(lambda *a: jnp.stack(a), *new_layers),
+                       new_kv)
+
+        fn = jax.checkpoint(one_group) if remat else one_group
+        h, (new_m_g, new_kv_g) = fn(h)
+        new_m_groups.append(new_m_g)
+        new_kv_groups.append(new_kv_g)
+    new_m = jax.tree.map(lambda *a: jnp.stack(a), *new_m_groups)
+    new_kv = (jax.tree.map(lambda *a: jnp.stack(a), *new_kv_groups)
+              if has_cache and cache_in.attn is not None else None)
+    return h, new_m, new_kv
+
+
 def forward(params, cfg: ModelConfig, tokens, *, pos=0, cache=None,
             extra_embeds=None, remat: bool = True, last_only: bool = False):
     from repro.core import vq_linear as vql_mod
@@ -185,11 +228,19 @@ def forward(params, cfg: ModelConfig, tokens, *, pos=0, cache=None,
         h, new_m = jax.lax.scan(layer_body, h, (group_p, m_cache))
         return h, (new_m, new_kv)
 
-    body = jax.checkpoint(group_body) if remat else group_body
-    x, (new_m, new_kv) = jax.lax.scan(
-        body, x, (params["mamba"], params["lora"],
-                  cache_in.mamba,
-                  cache_in.attn if cache is not None else None))
+    if isinstance(params["mamba"], list):
+        # heterogeneous trunk (mixed quantization recipe): the per-layer
+        # packed metadata cannot ride a scan, so loop groups/layers in
+        # python, slicing the (still homogeneous) stacked cache per layer
+        # and stacking the new state back into the carry layout
+        x, new_m, new_kv = _loop_groups(params, cfg, x, emb0, cache_in,
+                                        cache is not None, pos, remat)
+    else:
+        body = jax.checkpoint(group_body) if remat else group_body
+        x, (new_m, new_kv) = jax.lax.scan(
+            body, x, (params["mamba"], params["lora"],
+                      cache_in.mamba,
+                      cache_in.attn if cache is not None else None))
     if last_only:
         x = x[:, -1:]
     x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)

@@ -252,7 +252,13 @@ def forward(
     if dp and tokens.shape[0] % _axes_size(dp) == 0:
         x = jax.lax.with_sharding_constraint(x, P(dp, None, None))
 
-    if homogeneous(cfg):
+    # mixed-precision recipes (core/recipe.py) make per-layer packed
+    # metadata heterogeneous, so finalize falls back to a list of layer
+    # trees even for a homogeneous stack — the layer loop below handles
+    # that (and slices/updates a stacked cache per layer); the scan fast
+    # path needs the layers actually stacked.
+    layers_stacked = not isinstance(params["layers"], list)
+    if homogeneous(cfg) and layers_stacked:
         kind = block_kind(cfg, 0)
 
         if cache is None:
@@ -313,17 +319,31 @@ def forward(
                 params["layers"])
         aux = jnp.sum(auxs)
     else:
-        new_cache = []
+        # cache layout follows init_cache: a per-layer list for
+        # heterogeneous configs, a layer-stacked tree for homogeneous
+        # configs whose params went heterogeneous (mixed recipe)
+        cache_is_list = isinstance(cache, list)
+        new_cache = [] if cache_is_list or cache is None else cache
         aux = jnp.zeros((), jnp.float32)
         for i, layer_p in enumerate(params["layers"]):
             kind = block_kind(cfg, i)
-            c_i = cache[i] if cache is not None else None
+            if cache is None:
+                c_i = None
+            elif cache_is_list:
+                c_i = cache[i]
+            else:
+                c_i = jax.tree.map(lambda a: a[i], cache)
             fn = functools.partial(_block_apply, layer_p, cfg, kind,
                                    pos=pos, cache=c_i)
             if remat:
                 fn = jax.checkpoint(lambda h, _fn=fn: _fn(h))
             x, new_c, a = fn(x)
-            new_cache.append(new_c)
+            if cache_is_list:
+                new_cache.append(new_c)
+            elif cache is not None:
+                new_cache = jax.tree.map(
+                    lambda a, n: a.at[i].set(n.astype(a.dtype)),
+                    new_cache, new_c)
             aux = aux + a
         if cache is None:
             new_cache = None

@@ -1,0 +1,364 @@
+"""QuantRecipe semantics and the recipe-driven pipeline.
+
+Covers: first-match-wins resolution, group: patterns, strict-mode
+unmatched errors, JSON round-trip, legacy-kwarg shim bitwise equivalence,
+adapter-declared keep_dense surfacing (sLSTM r_*), shape-aware bpv
+accounting, the Hessian-budget allocator's ceiling, and a mixed recipe's
+quantize -> pack -> checkpoint -> serve round trip on dense and hybrid.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import FAMILY_REPRESENTATIVE as FAMILY_ARCH, SMOKE
+from repro.configs.base import ModelConfig
+from repro.core import vq_linear as vql
+from repro.core.bpv import PAPER_SETTINGS, VQConfig, effective_bpv
+from repro.core.pipeline import quantize_model
+from repro.core.recipe import (
+    IntQuant,
+    KeepDense,
+    QuantRecipe,
+    Quantize,
+    RecipeError,
+    Rule,
+    TargetInfo,
+    get_recipe,
+)
+from repro.data.synthetic import sample_batch
+from repro.models import model_zoo
+from repro.serve.engine import Engine, Request
+
+VQ_TINY = VQConfig(d=2, bits_per_dim=3, group_size=4096, em_iters=4,
+                   codebook_update_iters=2)
+
+
+def _tiny(setting: str) -> Quantize:
+    return Quantize(dataclasses.replace(
+        PAPER_SETTINGS[setting], em_iters=4, codebook_update_iters=0))
+
+
+def _targets(*names, group="attn", default=None):
+    return [TargetInfo(name=n, group=group, r=64, c=64, numel=4096,
+                       default_action=default) for n in names]
+
+
+def _dense_model():
+    cfg = ModelConfig(
+        name="recipe-t", family="dense", n_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=192, vocab_size=256,
+        max_seq_len=128, dtype="float32", vocab_pad_multiple=64)
+    model = model_zoo.build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    calib = sample_batch(jax.random.PRNGKey(9), cfg.vocab_size, 16, 4)
+    return cfg, model, params, calib
+
+
+# ---------------------------------------------------------------------------
+# resolution semantics (no model needed)
+# ---------------------------------------------------------------------------
+
+def test_first_match_wins():
+    rec = QuantRecipe(rules=(
+        Rule("layers.0.attn.*", KeepDense("first")),
+        Rule("layers.*.attn.*", _tiny("2.25bpv_2d")),
+    ))
+    plan = rec.resolve(_targets("layers.0.attn.wq", "layers.1.attn.wq"))
+    assert isinstance(plan["layers.0.attn.wq"].action, KeepDense)
+    assert plan["layers.0.attn.wq"].action.reason == "first"
+    assert isinstance(plan["layers.1.attn.wq"].action, Quantize)
+    assert plan["layers.1.attn.wq"].rule.startswith("rule[1]:")
+
+
+def test_group_pattern_matches_spec_group():
+    rec = QuantRecipe(rules=(Rule("group:mlp", IntQuant(4, 128)),),
+                      default=_tiny("2.25bpv_2d"))
+    plan = rec.resolve(
+        _targets("layers.0.attn.wq")
+        + _targets("layers.0.ffn.w_in", group="mlp"))
+    assert isinstance(plan["layers.0.ffn.w_in"].action, IntQuant)
+    assert plan["layers.0.attn.wq"].rule == "default"
+
+
+def test_strict_mode_unmatched_target_errors():
+    rec = QuantRecipe(rules=(Rule("layers.0.*", _tiny("2.25bpv_2d")),),
+                      default=None, strict=True)
+    with pytest.raises(RecipeError, match="layers.1.attn.wq"):
+        rec.resolve(_targets("layers.0.attn.wq", "layers.1.attn.wq"))
+    # adapter-declared defaults are explicit exclusions, not misses
+    plan = rec.resolve(
+        _targets("layers.0.attn.wq")
+        + _targets("layers.1.core.r_z", default=KeepDense("no tap")))
+    assert plan["layers.1.core.r_z"].rule == "adapter:no tap"
+
+
+def test_adapter_default_yields_only_to_explicit_rules():
+    """A by-name rule overrides an adapter-declared keep_dense; broad
+    glob / group: patterns fall through to it (a blanket group:attn rule
+    must not drag tap-less recurrent weights into quantization)."""
+    target = _targets("layers.1.core.r_z", default=KeepDense("no tap"))
+    exact = QuantRecipe(rules=(
+        Rule("layers.1.core.r_z", _tiny("2.25bpv_2d")),))
+    plan = exact.resolve(target)
+    assert isinstance(plan["layers.1.core.r_z"].action, Quantize)
+    for pattern in ("*.core.r_z", "group:attn", "layers.?.core.r_z"):
+        broad = QuantRecipe(rules=(Rule(pattern, _tiny("2.25bpv_2d")),))
+        plan = broad.resolve(target)
+        assert isinstance(plan["layers.1.core.r_z"].action, KeepDense), \
+            pattern
+        assert plan["layers.1.core.r_z"].rule == "adapter:no tap"
+
+
+def test_mixed_demo_preset_resolves_on_ssm():
+    """The shipped mixed_demo preset must not crash on families with
+    adapter-declared dense targets (3-D sLSTM r_* under group:attn)."""
+    cfg = SMOKE[FAMILY_ARCH["ssm"]].scaled(dtype="float32")
+    model = model_zoo.build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    from repro.core import adapters
+    from repro.core.pipeline import _check_plan, _collect_targets
+    blocks = adapters.get_adapter(model, params).blocks()
+    plan = get_recipe("mixed_demo").resolve(_collect_targets(blocks))
+    _check_plan(blocks, plan)  # must not raise on the 3-D r_* leaves
+    assert isinstance(plan["layers.1.core.r_z"].action, KeepDense)
+    assert isinstance(plan["layers.0.core.w_i"].action, KeepDense)
+
+
+def test_json_roundtrip_and_presets():
+    rec = QuantRecipe(
+        rules=(
+            Rule("group:attn", Quantize(PAPER_SETTINGS["2.125bpv_2d"])),
+            Rule("group:mlp", IntQuant(4, 128, method="rtn")),
+            Rule("layers.0.ffn.w_in", KeepDense("ablation")),
+        ),
+        default=Quantize(PAPER_SETTINGS["2.25bpv_2d"]), name="rt")
+    assert QuantRecipe.from_json(rec.to_json()) == rec
+    with pytest.raises(RecipeError):
+        QuantRecipe.from_json({"rules": [{"pattern": "*", "action": "zap"}]})
+    with pytest.raises(RecipeError):  # unknown override field
+        QuantRecipe.from_json({"rules": [
+            {"pattern": "*", "action": "quantize",
+             "overrides": {"em_itres": 3}}]})
+    mixed = get_recipe("mixed_demo")
+    assert any(r.pattern == "group:attn" for r in mixed.rules)
+    assert get_recipe("2.25bpv_2d").default.cfg == PAPER_SETTINGS["2.25bpv_2d"]
+    # omitting "default" never silently quantizes unmatched targets
+    nod = QuantRecipe.from_json(
+        {"rules": [{"pattern": "layers.0.*", "action": "keep_dense"}]})
+    assert nod.default is None
+    with pytest.raises(RecipeError, match="no default"):
+        nod.resolve(_targets("layers.1.attn.wq"))
+
+
+def test_effective_bpv_accounts_for_small_tensors():
+    cfg = PAPER_SETTINGS["2.25bpv_2d"]
+    # big matrix amortizes the codebook to the nominal figure
+    assert effective_bpv(cfg, 4096, 4096) == pytest.approx(
+        cfg.bits_per_value)
+    # a 64x64 tensor cannot amortize a 4D/32768-group codebook
+    cfg4 = PAPER_SETTINGS["2.25bpv_4d"]
+    assert effective_bpv(cfg4, 64, 64) > cfg4.bits_per_value + 1.0
+
+
+# ---------------------------------------------------------------------------
+# pipeline integration
+# ---------------------------------------------------------------------------
+
+def test_legacy_kwargs_shim_bitwise_identical():
+    """The deprecated (method, cfg, quantize_mlp=...) surface must produce
+    bitwise-identical packed params to the recipe it compiles to."""
+    _, model, params, calib = _dense_model()
+    with pytest.deprecated_call():
+        qp_old, rep_old = quantize_model(
+            model, params, calib, "gptvq", VQ_TINY, pack=True, chunk=4,
+            seed=3, quantize_mlp=False)
+    qp_new, rep_new = quantize_model(
+        model, params, calib, pack=True, chunk=4, seed=3,
+        recipe=QuantRecipe.from_legacy("gptvq", VQ_TINY,
+                                       quantize_mlp=False))
+    old, new = jax.tree.leaves(qp_old), jax.tree.leaves(qp_new)
+    assert len(old) == len(new)
+    assert all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(old, new))
+    # legacy bpv accounting is preserved; both report the same per-target
+    assert rep_old.bits_per_value == pytest.approx(VQ_TINY.bits_per_value)
+    assert rep_old.per_target.keys() == rep_new.per_target.keys()
+    kd = [k for k, v in rep_old.per_target.items()
+          if v["action"] == "keep_dense"]
+    assert kd and all(".ffn." in k for k in kd)
+
+
+def test_mixed_recipe_per_target_report():
+    """Different settings for attn vs mlp + a named keep_dense target all
+    show up (with rule provenance) in QuantizeReport.per_target."""
+    _, model, params, calib = _dense_model()
+    rec = QuantRecipe(
+        rules=(
+            Rule("layers.1.ffn.w_out", KeepDense("ablation")),
+            Rule("group:attn", _tiny("2.25bpv_2d")),
+            Rule("group:mlp", _tiny("4.125bpv_1d")),
+        ), default=_tiny("2.25bpv_2d"), name="mixed")
+    qp, rep = quantize_model(model, params, calib, recipe=rec, pack=True,
+                             chunk=4)
+    pt = rep.per_target
+    assert pt["layers.1.ffn.w_out"]["action"] == "keep_dense"
+    assert pt["layers.1.ffn.w_out"]["rule"] == "rule[0]:layers.1.ffn.w_out"
+    assert pt["layers.0.attn.wq"]["d"] == 2
+    assert pt["layers.0.ffn.w_in"]["d"] == 1
+    assert pt["layers.0.ffn.w_in"]["bits_per_dim"] == 4
+    assert rep.achieved_bpv == pytest.approx(
+        sum(e["numel"] * e["bpv"] for e in pt.values())
+        / sum(e["numel"] for e in pt.values()))
+    # packed leaves record the rule that produced them
+    layer0 = qp["layers"][0] if isinstance(qp["layers"], list) else \
+        jax.tree.map(lambda a: a[0], qp["layers"])
+    wq = layer0["attn"]["wq"]
+    assert isinstance(wq, vql.VQLinear)
+    assert wq.rule == "rule[1]:group:attn"
+    # the named target stayed dense
+    w_out1 = (qp["layers"][1] if isinstance(qp["layers"], list)
+              else jax.tree.map(lambda a: a[1], qp["layers"]))["ffn"]["w_out"]
+    assert not isinstance(w_out1, vql.VQLinear)
+
+
+def test_legacy_kmeans_default_cfg_is_vq():
+    """method="kmeans"/cfg=None must default to a VQConfig (regression:
+    it got the int-quant dict and crashed in bpv accounting)."""
+    cfg = ModelConfig(
+        name="km-t", family="dense", n_layers=1, d_model=64, n_heads=4,
+        n_kv_heads=2, head_dim=16, d_ff=192, vocab_size=256,
+        max_seq_len=128, dtype="float32", vocab_pad_multiple=64)
+    model = model_zoo.build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    calib = sample_batch(jax.random.PRNGKey(9), cfg.vocab_size, 16, 2)
+    _, rep = quantize_model(model, params, calib, "kmeans", chunk=2)
+    assert rep.bits_per_value == pytest.approx(VQConfig().bits_per_value)
+
+
+def test_maybe_stack_blocks_provenance_semantics():
+    """Provenance-only divergence unifies to 'mixed' and stacks; genuine
+    metadata divergence keeps the ORIGINAL per-leaf rules in the list."""
+    import jax.numpy as jnp
+    from repro.core.adapters.base import maybe_stack_blocks
+
+    def leaf(k, rule):
+        return vql.VQLinear(
+            words=jnp.zeros((4, 2), jnp.uint32),
+            codebooks=jnp.zeros((1, 1, k, 2), jnp.int8),
+            cb_scale=jnp.ones((1, 1)), scale_sint=jnp.zeros((1, 4, 1),
+                                                            jnp.int8),
+            scale_a=jnp.zeros((1,)), scale_z=jnp.zeros((1,)),
+            r=4, c=8, d=2, k=k, group_cols=8, rows_per_band=4, rule=rule)
+
+    stacked = maybe_stack_blocks([{"w": leaf(16, "rule[0]:x")},
+                                  {"w": leaf(16, "default")}])
+    assert not isinstance(stacked, list)
+    assert stacked["w"].rule == "mixed"
+    hetero = maybe_stack_blocks([{"w": leaf(16, "budget[a]")},
+                                 {"w": leaf(4, "budget[b]")}])
+    assert isinstance(hetero, list)
+    assert [b["w"].rule for b in hetero] == ["budget[a]", "budget[b]"]
+
+
+def test_strict_recipe_rejects_default():
+    with pytest.raises(RecipeError, match="cannot carry a default"):
+        QuantRecipe(rules=(), default=_tiny("2.25bpv_2d"), strict=True)
+
+
+def test_rule_provenance_alone_does_not_break_stacking():
+    """A by-name rule whose action equals the default must not force the
+    list-of-layers fallback: rules are unified to 'mixed' and the stack
+    stays scannable."""
+    _, model, params, calib = _dense_model()
+    act = _tiny("2.25bpv_2d")
+    rec = QuantRecipe(rules=(Rule("layers.0.attn.wq", act),),
+                      default=act, name="same-action")
+    qp, _ = quantize_model(model, params, calib, recipe=rec, pack=True,
+                           chunk=4)
+    assert not isinstance(qp["layers"], list), \
+        "provenance-only divergence fell back to the slow list path"
+    wq = jax.tree.map(lambda a: a[0], qp["layers"])["attn"]["wq"]
+    assert wq.rule == "mixed"
+    wk = jax.tree.map(lambda a: a[0], qp["layers"])["attn"]["wk"]
+    assert wk.rule == "default"
+
+
+def test_r_star_dense_exclusion_surfaces_in_report():
+    cfg = SMOKE[FAMILY_ARCH["ssm"]].scaled(dtype="float32")
+    model = model_zoo.build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    calib = sample_batch(jax.random.PRNGKey(9), cfg.vocab_size, 8, 4)
+    _, rep = quantize_model(model, params, calib, "gptvq", VQ_TINY, chunk=4)
+    r_targets = {k: v for k, v in rep.per_target.items()
+                 if ".core.r_" in k}
+    assert r_targets, "sLSTM r_* no longer surfaced"
+    for v in r_targets.values():
+        assert v["action"] == "keep_dense"
+        assert "lagged hidden states" in v["reason"]
+        assert v["rule"].startswith("adapter:")
+
+
+def test_budget_allocation_respects_ceiling_and_beats_uniform():
+    """--budget-bpv 2.5: model-wide achieved bpv <= budget, allocation is
+    non-uniform, and total reconstruction error beats uniform 2.25bpv_2d."""
+    _, model, params, calib = _dense_model()
+    base = dataclasses.replace(PAPER_SETTINGS["2.25bpv_2d"], em_iters=6,
+                               codebook_update_iters=2)
+    qp, rep = quantize_model(
+        model, params, calib, recipe=QuantRecipe.uniform(base),
+        budget_bpv=2.5, pack=True, chunk=4, seed=1)
+    assert rep.achieved_bpv <= 2.5 + 1e-9
+    settings = {(e["d"], e["bits_per_dim"], e["group_size"])
+                for e in rep.per_target.values()
+                if e["action"] == "quantize"}
+    assert len(settings) > 1, "budget allocation degenerated to uniform"
+    assert all(e["rule"].startswith("budget[")
+               for e in rep.per_target.values()
+               if e["action"] == "quantize")
+    _, rep_uniform = quantize_model(
+        model, params, calib, recipe=QuantRecipe.uniform(base), chunk=4,
+        seed=1)
+    assert rep.total_error() < rep_uniform.total_error(), (
+        rep.total_error(), rep_uniform.total_error())
+
+
+@pytest.mark.parametrize("family", ["dense", "hybrid"])
+def test_mixed_recipe_roundtrip_checkpoint_serve(family, tmp_path):
+    """Mixed recipe (attn 2D@2b vs mlp 1D@4b, keep_dense named target)
+    round-trips quantize -> pack -> checkpoint -> engine serving."""
+    cfg = SMOKE[FAMILY_ARCH[family]].scaled(dtype="float32")
+    model = model_zoo.build(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    calib = sample_batch(jax.random.PRNGKey(9), cfg.vocab_size, 8, 4)
+    named_dense = ("layers.0.attn.wq" if family == "dense"
+                   else "mamba.0.0.mixer.in_proj")
+    rec = QuantRecipe(
+        rules=(
+            Rule(named_dense, KeepDense("round-trip ablation")),
+            Rule("group:attn", _tiny("2.25bpv_2d")),
+            Rule("group:mlp", _tiny("4.125bpv_1d")),
+        ), default=_tiny("2.25bpv_2d"), name="mixed-rt")
+    qp, rep = quantize_model(model, params, calib, recipe=rec, pack=True,
+                             chunk=4)
+    assert rep.per_target[named_dense]["action"] == "keep_dense"
+    assert vql.tree_has_vq(qp)
+
+    ck = Checkpointer(str(tmp_path), keep=1)
+    ck.save(0, qp, metadata={"recipe": rep.recipe,
+                             "per_target": rep.per_target,
+                             "achieved_bpv": rep.achieved_bpv})
+    restored, meta = ck.restore(qp)
+    assert meta["recipe"]["name"] == "mixed-rt"
+    assert meta["per_target"][named_dense]["action"] == "keep_dense"
+    for a, b in zip(jax.tree.leaves(qp), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    rng = np.random.RandomState(0)
+    eng = Engine(model, restored, max_batch=2, max_len=64)
+    reqs = [Request(rid=i, prompt=rng.randint(0, cfg.vocab_size, size=6),
+                    max_new_tokens=4) for i in range(3)]
+    eng.run(reqs)
+    assert all(len(r.out_tokens) >= 4 for r in reqs)
