@@ -1,5 +1,6 @@
-"""Serve-throughput benchmark: paged continuous-batching engine vs the
-pre-PR-2 dense-slot engine, bf16/fp32 vs GPTVQ-packed weights.
+"""Serve-throughput benchmark: paged continuous-batching engine (gather vs
+fused paged-attention decode) vs the pre-PR-2 dense-slot engine, fp32 vs
+GPTVQ-packed weights.
 
 Workload: a burst of requests with many *distinct* prompt lengths (the
 realistic serving shape) on the qwen3-1.7b config family. Reports decode
@@ -8,6 +9,14 @@ tokens/s and time-to-first-token (TTFT) at max_batch in {1, 8}, and emits
 measurement baseline: it prefility-tiles a full max_batch-wide batch per
 admission and retraces per distinct prompt length — exactly the costs the
 paged engine removes.
+
+The ``paged-fused`` cells run the engine with ``paged_attn_impl="fused"``:
+on TPU that is the Pallas in-kernel page-gather decode kernel
+(kernels/paged_attention.py); off-TPU it resolves to the kernel's XLA
+oracle through the same fused dispatch boundary (interpret-mode Pallas is
+a correctness emulator, not a perf path — the differential suite, not this
+bench, is what validates the kernel off-TPU). Each result row records
+which backend actually ran in ``fused_backend``.
 
 Run: PYTHONPATH=src python benchmarks/serve_throughput.py --smoke
      [--out BENCH_serve.json]
@@ -152,9 +161,12 @@ class BenchCase:
 
     def __init__(self, kind, wtag, model, params, max_batch, max_len):
         self.kind, self.wtag, self.max_batch = kind, wtag, max_batch
-        if kind == "paged":
+        self.backend = None
+        if kind.startswith("paged"):
+            impl = "fused" if kind == "paged-fused" else "gather"
             self.eng = Engine(model, params, max_batch=max_batch,
-                              max_len=max_len)
+                              max_len=max_len, paged_attn_impl=impl)
+            self.backend = self.eng.paged_attn_impl
             self.runner = run_paged
         else:
             self.eng = LegacySlotEngine(model, params, max_batch=max_batch,
@@ -180,6 +192,7 @@ class BenchCase:
         med = walls[len(walls) // 2]
         return {
             "engine": self.kind, "weights": self.wtag,
+            "fused_backend": self.backend,
             "max_batch": self.max_batch, "tokens": self.tokens,
             "cold_wall_s": round(self.cold_wall_s, 4),
             "wall_s_median": round(med, 4),
@@ -227,16 +240,19 @@ def main():
 
     results = []
     for mb in (1, 8):
-        cases = [BenchCase("paged", "fp32", model, params, mb, max_len),
-                 BenchCase("paged", "vq", model, qparams, mb, max_len),
-                 BenchCase("legacy", "fp32", model, params, mb, max_len)]
+        cases = [
+            BenchCase("paged", "fp32", model, params, mb, max_len),
+            BenchCase("paged-fused", "fp32", model, params, mb, max_len),
+            BenchCase("paged-fused", "vq", model, qparams, mb, max_len),
+            BenchCase("legacy", "fp32", model, params, mb, max_len),
+        ]
         for i in range(passes + 1):  # pass 0 is the cold/compile pass
             for c in cases:
                 c.one_pass(prompts, max_new, rid0=1000 * i)
         for c in cases:
             r = c.summary()
             results.append(r)
-            print(f"  {r['engine']:6s} {r['weights']:4s} max_batch={mb}: "
+            print(f"  {r['engine']:11s} {r['weights']:4s} max_batch={mb}: "
                   f"{r['tokens_per_s']:8.1f} tok/s (median)  "
                   f"ttft_mean={r['ttft_mean_s']:.3f}s  "
                   f"cold={r['cold_wall_s']:.1f}s", flush=True)
@@ -245,6 +261,10 @@ def main():
         return next(r for r in results if r["engine"] == engine
                     and r["max_batch"] == mb and r["weights"] == wtag)
 
+    fused_b1 = round(pick("paged-fused", 1)["tokens_per_s"]
+                     / pick("legacy", 1)["tokens_per_s"], 3)
+    fused_b8 = round(pick("paged-fused", 8)["tokens_per_s"]
+                     / pick("legacy", 8)["tokens_per_s"], 3)
     report = {
         "bench": "serve_throughput",
         "config": cfg.name + ("-smoke" if args.smoke else ""),
@@ -254,11 +274,13 @@ def main():
         "paged_over_legacy_tokens_per_s_b8":
             round(pick("paged", 8)["tokens_per_s"]
                   / pick("legacy", 8)["tokens_per_s"], 3),
+        "paged_fused_over_legacy_tokens_per_s_b1": fused_b1,
+        "paged_fused_over_legacy_tokens_per_s_b8": fused_b8,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
-    print(f"wrote {os.path.abspath(args.out)}; paged/legacy tok/s @B8 = "
-          f"{report['paged_over_legacy_tokens_per_s_b8']}")
+    print(f"wrote {os.path.abspath(args.out)}; fused/legacy tok/s "
+          f"@B1 = {fused_b1}, @B8 = {fused_b8}")
 
 
 if __name__ == "__main__":

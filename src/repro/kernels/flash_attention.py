@@ -21,7 +21,7 @@ NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
-            causal, scale, nk, block_q, block_k):
+            causal, scale, nk, block_q, block_k, q_offset):
     qi = pl.program_id(1)
     kk = pl.program_id(2)
 
@@ -38,7 +38,9 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     if causal:
-        rows = qi * block_q + jax.lax.broadcasted_iota(
+        # absolute row position = q_offset + row index (a decode/chunked
+        # caller's queries start q_offset tokens into the kv range)
+        rows = q_offset + qi * block_q + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, block_k), 0)
         cols = kk * block_k + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, block_k), 1)
@@ -61,10 +63,17 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "block_q", "block_k", "interpret"))
+    static_argnames=("causal", "block_q", "block_k", "interpret",
+                     "q_offset"))
 def flash_attention_tpu(q, k, v, *, causal: bool = True, block_q: int = 128,
-                        block_k: int = 128, interpret: bool = False):
-    """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd) -> (B, Sq, H, hd)."""
+                        block_k: int = 128, interpret: bool = False,
+                        q_offset: int = 0):
+    """q: (B, Sq, H, hd); k/v: (B, Sk, KV, hd) -> (B, Sq, H, hd).
+
+    ``q_offset`` is the absolute position of q's first row within the kv
+    range (0 for self-attention over the same span; nonzero when the
+    queries continue a prefix — including the empty-cache-prefix chunked
+    case where Sk == Sq and the mask uses absolute positions)."""
     B, Sq, H, hd = q.shape
     Sk, KV = k.shape[1], k.shape[2]
     G = H // KV
@@ -85,7 +94,8 @@ def flash_attention_tpu(q, k, v, *, causal: bool = True, block_q: int = 128,
 
     out = pl.pallas_call(
         functools.partial(_kernel, causal=causal, scale=scale, nk=nk,
-                          block_q=block_q, block_k=block_k),
+                          block_q=block_q, block_k=block_k,
+                          q_offset=q_offset),
         grid=(B * H, nq, nk),
         in_specs=[
             pl.BlockSpec((1, block_q, hd), lambda b, qi, kk: (b, qi, 0)),

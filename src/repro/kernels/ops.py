@@ -38,6 +38,18 @@ def vql_matmul(x: jax.Array, vql: VQLinear, *, use_pallas: bool = True,
         rows_per_band=vql.rows_per_band, group_cols=vql.group_cols)
 
 
+def paged_attention(q, k_pool, v_pool, page_table, pos, *,
+                    use_pallas: bool = True, interpret: bool = True):
+    """Fused paged-attention decode: one query token per slot attends over
+    its page-table-mapped KV blocks (kpos <= pos masking) without
+    materializing the logical per-slot view. q (B, H, hd) -> (B, H, hd)."""
+    if use_pallas:
+        from repro.kernels.paged_attention import paged_attention_tpu
+        return paged_attention_tpu(q, k_pool, v_pool, page_table, pos,
+                                   interpret=interpret)
+    return ref.paged_attention_ref(q, k_pool, v_pool, page_table, pos)
+
+
 def assign(x, hw, codebook, *, use_pallas: bool = True,
            interpret: bool = True, tile_n: int = 1024):
     if use_pallas:

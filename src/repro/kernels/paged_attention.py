@@ -1,0 +1,131 @@
+"""Fused paged-attention decode Pallas TPU kernel.
+
+One query token per slot (S == 1 decode) attends over that slot's paged
+KV blocks *in place*: the per-slot page table rides in as a scalar-prefetch
+operand, so the k/v BlockSpec index maps resolve ``page_table[slot, page]``
+to a physical block row of the shared pool and the DMA engine streams
+exactly the pages the slot owns — the (B, n_pages*page_size, KV, hd)
+logical view the XLA gather path materializes per layer never exists.
+
+Grid (B, KV, n_pages): one program per (slot, kv-head, logical page), with
+the page dimension innermost so the online-softmax running max/sum/acc live
+in VMEM scratch across pages (same structure as kernels/flash_attention.py).
+All G = H // KV query heads of a kv head share its pages in one program, so
+GQA needs no materialized head expansion.
+
+Masking is the serving invariant ``kpos <= pos[slot]`` over *logical*
+positions: stale rows in recycled blocks, the tail of the slot's last page,
+the reserved scratch block 0 (where inactive slots' page-table entries
+point), and table rows past the slot's depth are all strictly above
+``pos`` and never contribute. An idle slot (pos == 0, table all-scratch)
+attends exactly one scratch row — defined output, discarded by the engine.
+
+``kernels/ref.py:paged_attention_ref`` is the pure-XLA oracle;
+``tests/kernels/test_paged_attention.py`` is the differential harness.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale, n_pages, page_size):
+    b = pl.program_id(0)
+    pg = pl.program_id(2)
+
+    @pl.when(pg == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)      # (G, hd)
+    k = k_ref[0, :, 0].astype(jnp.float32)   # (page_size, hd)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    # logical position of every row of this page; the single serving mask:
+    # scratch block 0, recycled-block staleness, and the last-page tail are
+    # all `kpos > pos` and die here
+    kpos = pg * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    s = jnp.where(kpos <= pos_ref[b], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(pg == n_pages - 1)
+    def _done():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_tpu(q, k_pool, v_pool, page_table, pos, *,
+                        interpret: bool = False):
+    """Fused paged decode attention.
+
+    q          : (B, H, hd)  — the decode token's query per slot
+    k_pool/v_pool : (num_blocks, page_size, KV, hd) shared block pools
+    page_table : (B, n_pages) int32 physical block per logical page
+                 (0 = reserved scratch block)
+    pos        : (B,) int32 per-slot position of the decode token; the
+                 kernel attends logical positions kpos <= pos[b]
+    returns    : (B, H, hd) in q.dtype
+    """
+    B, H, hd = q.shape
+    num_blocks, page_size, KV, _ = k_pool.shape
+    n_pages = page_table.shape[-1]
+    G = H // KV
+    scale = 1.0 / (hd ** 0.5)
+
+    qh = q.reshape(B, KV, G, hd)
+
+    def q_index(b, kv, pg, table, pos):
+        return b, kv, 0, 0
+
+    def kv_index(b, kv, pg, table, pos):
+        # the in-kernel gather: logical page pg of slot b lives in physical
+        # block table[b, pg] — resolved here, in the index map, so only the
+        # slot's own pages are ever DMA'd
+        return table[b, pg], 0, kv, 0
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), q_index),
+            pl.BlockSpec((1, page_size, 1, hd), kv_index),
+            pl.BlockSpec((1, page_size, 1, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), q_index),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, n_pages=n_pages,
+                          page_size=page_size),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), pos.astype(jnp.int32), qh,
+      k_pool, v_pool)
+    return out.reshape(B, H, hd)

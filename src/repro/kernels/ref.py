@@ -29,3 +29,30 @@ def vq_assign_ref(x, hw, codebook):
     diff = x[:, None, :] - codebook[None, :, :]
     dist = jnp.sum(hw[:, None, :] * diff * diff, axis=-1)
     return jnp.argmin(dist, axis=-1).astype(jnp.int32)
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_table, pos):
+    """Oracle for the fused paged decode kernel: gather the logical
+    (B, n_pages*page_size) K/V view through the page table, mask logical
+    positions kpos > pos per slot, dense softmax attention. This is exactly
+    the read path models/attention._paged_apply uses at decode — the kernel
+    must be bit-for-bit the same math, minus the materialized view.
+
+    q (B, H, hd); pools (num_blocks, page_size, KV, hd);
+    page_table (B, n_pages) int32; pos (B,) int32 -> (B, H, hd).
+    """
+    B, H, hd = q.shape
+    page_size, KV = k_pool.shape[1], k_pool.shape[2]
+    n_pages = page_table.shape[-1]
+    G = H // KV
+    Sk = n_pages * page_size
+    kg = k_pool[page_table].reshape(B, Sk, KV, hd)
+    vg = v_pool[page_table].reshape(B, Sk, KV, hd)
+    qh = q.reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qh.astype(jnp.float32),
+                   kg.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)
+    valid = jnp.arange(Sk)[None, None, None, :] <= pos[:, None, None, None]
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, vg.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -32,6 +32,12 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--paged-attn-impl", default="gather",
+                    choices=["gather", "fused", "xla", "pallas"],
+                    help="decode attention over the paged KV pool: the "
+                         "XLA logical-view gather (default), or the fused "
+                         "in-kernel page gather ('fused' = Pallas kernel "
+                         "on TPU, its XLA oracle elsewhere)")
     args = ap.parse_args()
 
     cfg = (SMOKE if args.smoke else ARCHS)[args.arch]
@@ -60,7 +66,8 @@ def main():
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
     eng = Engine(model, params, max_batch=args.max_batch,
-                 max_len=args.max_len)
+                 max_len=args.max_len,
+                 paged_attn_impl=args.paged_attn_impl)
     eng.run(reqs)
     tok_s = eng.stats["tokens"] / max(eng.stats["wall_s"], 1e-9)
     print(f"served {len(reqs)} requests, {eng.stats['tokens']} tokens in "

@@ -22,12 +22,34 @@ NEG_INF = -1e30
 # Flash-attention backend: "xla" (portable two-level scan, the default and
 # the dry-run path) or "pallas" (kernels/flash_attention.py — the TPU fast
 # path; runs in interpret mode off-TPU). Set via set_flash_impl().
-_FLASH_IMPL = {"impl": "xla"}
+# ``counts`` records how often each impl was *dispatched* (trace-time for
+# jitted callers) — the regression tests pin dispatch decisions against it.
+_FLASH_IMPL = {"impl": "xla", "counts": {"xla": 0, "pallas": 0}}
 
 
 def set_flash_impl(impl: str):
     assert impl in ("xla", "pallas")
     _FLASH_IMPL["impl"] = impl
+
+
+# Paged decode-attention backend for _paged_apply's S == 1 path:
+#   "gather" — scatter then attend over the page-table-gathered logical
+#              view (portable XLA; the pre-fused path and the baseline)
+#   "xla"    — kernels/ref.paged_attention_ref via kernels/ops (the oracle;
+#              same math routed through the fused dispatch boundary)
+#   "pallas" — kernels/paged_attention.py fused TPU kernel (in-kernel page
+#              gather; interpret mode off-TPU — tests only, not a perf path)
+# The serving engine threads its choice explicitly (apply(paged_impl=...),
+# captured per-engine by serve_step's jitted closures; prefill is pinned to
+# "gather" there even for width-1 chunks). This module global is only the
+# default for callers that don't pass one — it is read at trace time.
+_PAGED_IMPL = {"impl": "gather", "counts": {"gather": 0, "xla": 0,
+                                            "pallas": 0}}
+
+
+def set_paged_impl(impl: str):
+    assert impl in ("gather", "xla", "pallas")
+    _PAGED_IMPL["impl"] = impl
 
 
 def init(key, cfg: ModelConfig, dtype=jnp.float32, d_in: int | None = None):
@@ -147,11 +169,18 @@ def _plain_attention(q, k, v, mask):
 def flash_attention(q, k, v, *, causal: bool, q_offset=0,
                     q_chunk: int = 512, kv_chunk: int = 1024):
     """Two-level chunked attention with online softmax (memory O(tile))."""
-    if _FLASH_IMPL["impl"] == "pallas" and q_offset == 0:
+    if _FLASH_IMPL["impl"] == "pallas" and isinstance(q_offset, int):
+        # the kernel handles causal masking at any static row offset, so a
+        # nonzero q_offset (e.g. a chunk with an empty cache prefix, where
+        # Sk == Sq and positions are absolute) no longer silently falls
+        # back to the XLA scan. Traced offsets keep the XLA path (the
+        # kernel's mask is built at trace time).
         from repro.kernels.flash_attention import flash_attention_tpu
         on_tpu = jax.default_backend() == "tpu"
+        _FLASH_IMPL["counts"]["pallas"] += 1
         return flash_attention_tpu(q, k, v, causal=causal,
-                                   interpret=not on_tpu)
+                                   q_offset=q_offset, interpret=not on_tpu)
+    _FLASH_IMPL["counts"]["xla"] += 1
     B, Sq, H, hd = q.shape
     Sk, KV = k.shape[1], k.shape[2]
     G = H // KV
@@ -288,6 +317,7 @@ def apply(
     causal: bool = True,
     use_rope: bool = True,
     flash_threshold: int = 2048,
+    paged_impl: str | None = None,
 ):
     """Self-attention. Returns (y, new_cache).
 
@@ -312,7 +342,8 @@ def apply(
         k = cm.apply_rope(k, pos_arr, cfg.rope_theta)
 
     if isinstance(cache, PagedKVCache):
-        return _paged_apply(p, cache, q, k, v, pos_arr, x.dtype)
+        return _paged_apply(p, cache, q, k, v, pos_arr, x.dtype,
+                            impl=paged_impl)
 
     ck = jax.lax.dynamic_update_slice(
         cache.k, k.astype(cache.k.dtype), (0, jnp.asarray(pos), 0, 0))
@@ -341,7 +372,8 @@ def apply(
     return y.astype(x.dtype), new_cache
 
 
-def _paged_apply(p, cache: PagedKVCache, q, k, v, pos_arr, out_dtype):
+def _paged_apply(p, cache: PagedKVCache, q, k, v, pos_arr, out_dtype,
+                 impl: str | None = None):
     """Scatter new K/V through the page table, attend over the gathered
     logical view. ``pos_arr`` is (B, S): the absolute position of every new
     token per slot (S > 1 during chunked prefill, S == 1 at decode).
@@ -349,9 +381,17 @@ def _paged_apply(p, cache: PagedKVCache, q, k, v, pos_arr, out_dtype):
     Writes from slots whose page-table entries are 0 land in the reserved
     scratch block; reads are masked to ``kpos <= pos`` per slot, so stale
     data in recycled blocks and the scratch block never leak into live
-    rows. The gather materializes a (B, n_pages*page_size, KV, hd) view per
-    layer — same working set as the dense cache read; a fused Pallas paged
-    decode kernel is the §Perf follow-up.
+    rows.
+
+    Decode (S == 1) dispatches on ``impl`` (falling back to the
+    set_paged_impl() module default): "pallas" runs the fused kernel
+    (kernels/paged_attention.py) whose BlockSpec index maps gather K/V
+    pages in-kernel through the page table; "xla" runs the same math
+    through the oracle (kernels/ref.py). The default "gather" — and
+    chunked prefill at any impl (the engine pins prefill closures to
+    "gather", including width-1 tail chunks) — materializes the
+    (B, n_pages*page_size, KV, hd) logical view per layer, the same
+    working set as a dense cache read.
     """
     B, S = pos_arr.shape
     page_size = cache.k.shape[1]
@@ -367,6 +407,17 @@ def _paged_apply(p, cache: PagedKVCache, q, k, v, pos_arr, out_dtype):
     ck = cache.k.at[blk, off].set(k.astype(cache.k.dtype))
     cv = cache.v.at[blk, off].set(v.astype(cache.v.dtype))
     new_cache = PagedKVCache(ck, cv, cache.page_table)
+
+    impl = impl or _PAGED_IMPL["impl"]
+    if S == 1 and impl in ("xla", "pallas"):
+        from repro.kernels import ops
+        _PAGED_IMPL["counts"][impl] += 1
+        o = ops.paged_attention(
+            q[:, 0], ck, cv, cache.page_table, pos_arr[:, 0],
+            use_pallas=(impl == "pallas"),
+            interpret=jax.default_backend() != "tpu")
+        return (o.reshape(B, 1, -1) @ p["wo"]).astype(out_dtype), new_cache
+    _PAGED_IMPL["counts"]["gather"] += 1
 
     Sk = n_pages * page_size
     kg = ck[cache.page_table].reshape(B, Sk, *ck.shape[2:])

@@ -186,7 +186,8 @@ def dec_block_apply(layer_p, cfg: ModelConfig, h, memory):
 
 
 def forward(params, cfg: ModelConfig, tokens, *, frames=None, memory=None,
-            pos=0, cache=None, remat: bool = True, last_only: bool = False):
+            pos=0, cache=None, remat: bool = True, last_only: bool = False,
+            paged_impl: str | None = None):
     """Decoder forward. Provide ``frames`` (prefill/train; encoder runs) or a
     cache whose cross K/V were filled by a previous prefill."""
     from repro.core import vq_linear as vql_mod
@@ -218,7 +219,7 @@ def forward(params, cfg: ModelConfig, tokens, *, frames=None, memory=None,
         a, new_kv = attention.apply(
             layer_p["self_attn"], cfg,
             cm.rmsnorm(h, layer_p["norm1"], cfg.norm_eps),
-            pos=pos, cache=self_c, use_rope=False)
+            pos=pos, cache=self_c, use_rope=False, paged_impl=paged_impl)
         h = h + a
         if memory is not None:
             ck, cv = _cross_kv(layer_p["cross_attn"], cfg, memory)

@@ -137,16 +137,18 @@ def shared_attn_input(p, cfg: ModelConfig, h, emb0):
     return cm.rmsnorm(xin, p["norm"], cfg.norm_eps)
 
 
-def _shared_attn(p, lora_g, cfg: ModelConfig, h, emb0, *, pos, kv_cache):
+def _shared_attn(p, lora_g, cfg: ModelConfig, h, emb0, *, pos, kv_cache,
+                 paged_impl=None):
     """One invocation of the shared block with this group's LoRA delta."""
     xin = shared_attn_input(p, cfg, h, emb0)
     attn_p = lora_attn_params(p, lora_g, cfg)
-    y, new_kv = attention.apply(attn_p, cfg, xin, pos=pos, cache=kv_cache)
+    y, new_kv = attention.apply(attn_p, cfg, xin, pos=pos, cache=kv_cache,
+                                paged_impl=paged_impl)
     return y, new_kv
 
 
 def _loop_groups(params, cfg: ModelConfig, x, emb0, cache_in, has_cache,
-                 pos, remat):
+                 pos, remat, paged_impl=None):
     """Python-loop trunk for a heterogeneous (list-of-lists) mamba tree.
 
     Cache layout in and out matches the scan path exactly — stacked
@@ -164,7 +166,8 @@ def _loop_groups(params, cfg: ModelConfig, x, emb0, cache_in, has_cache,
         def one_group(h, group_p=group_p, lora_g=lora_g, a_cache=a_cache,
                       g=g):
             ha, new_kv = _shared_attn(params["shared"], lora_g, cfg, h,
-                                      emb0, pos=pos, kv_cache=a_cache)
+                                      emb0, pos=pos, kv_cache=a_cache,
+                                      paged_impl=paged_impl)
             h = h + ha
             new_layers = []
             for j, lp in enumerate(group_p):
@@ -189,7 +192,8 @@ def _loop_groups(params, cfg: ModelConfig, x, emb0, cache_in, has_cache,
 
 
 def forward(params, cfg: ModelConfig, tokens, *, pos=0, cache=None,
-            extra_embeds=None, remat: bool = True, last_only: bool = False):
+            extra_embeds=None, remat: bool = True, last_only: bool = False,
+            paged_impl: str | None = None):
     from repro.core import vq_linear as vql_mod
     n_groups, per = _groups(cfg)
     top = {k: v for k, v in params.items() if k not in ("mamba",)}
@@ -215,7 +219,8 @@ def forward(params, cfg: ModelConfig, tokens, *, pos=0, cache=None,
         from repro.core import vq_linear as vql_mod
         group_p, lora_g, m_cache, a_cache = xs
         ha, new_kv = _shared_attn(
-            params["shared"], lora_g, cfg, h, emb0, pos=pos, kv_cache=a_cache)
+            params["shared"], lora_g, cfg, h, emb0, pos=pos,
+            kv_cache=a_cache, paged_impl=paged_impl)
         h = h + ha
 
         def layer_body(hh, layer_xs):
@@ -234,7 +239,8 @@ def forward(params, cfg: ModelConfig, tokens, *, pos=0, cache=None,
         # python, slicing the (still homogeneous) stacked cache per layer
         # and stacking the new state back into the carry layout
         x, new_m, new_kv = _loop_groups(params, cfg, x, emb0, cache_in,
-                                        cache is not None, pos, remat)
+                                        cache is not None, pos, remat,
+                                        paged_impl=paged_impl)
     else:
         body = jax.checkpoint(group_body) if remat else group_body
         x, (new_m, new_kv) = jax.lax.scan(

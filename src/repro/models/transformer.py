@@ -77,7 +77,8 @@ def _block_specs(cfg: ModelConfig, kind: str):
     raise ValueError(kind)
 
 
-def _block_apply(p, cfg: ModelConfig, kind: str, x, *, pos, cache):
+def _block_apply(p, cfg: ModelConfig, kind: str, x, *, pos, cache,
+                 paged_impl=None):
     """Returns (x, new_cache, aux_loss)."""
     from jax.ad_checkpoint import checkpoint_name
 
@@ -87,7 +88,7 @@ def _block_apply(p, cfg: ModelConfig, kind: str, x, *, pos, cache):
     if kind in ("dense", "moe"):
         h, new_kv = attention.apply(
             p["attn"], cfg, cm.rmsnorm(x, p["norm1"], cfg.norm_eps),
-            pos=pos, cache=cache)
+            pos=pos, cache=cache, paged_impl=paged_impl)
         # named so the selective remat policy can save it (§Perf it.9):
         # backward then skips re-running the flash-attention scan
         h = checkpoint_name(h, "attn_out")
@@ -242,8 +243,11 @@ def forward(
     extra_embeds=None,
     remat: bool = True,
     last_only: bool = False,
+    paged_impl: str | None = None,
 ):
-    """Returns (logits, new_cache, aux_loss)."""
+    """Returns (logits, new_cache, aux_loss). ``paged_impl`` selects the
+    decode attention backend over PagedKVCache leaves (see
+    attention._paged_apply); None falls back to the module default."""
     from repro.core import vq_linear as vql_mod
     top = {k: v for k, v in params.items() if k != "layers"}
     params = {**params, **vql_mod.dequant_tree(top, cm.DTYPES[cfg.dtype])}
@@ -307,7 +311,8 @@ def forward(
                     lambda a: jax.lax.dynamic_index_in_dim(
                         a, i, 0, keepdims=False), cache_all)
                 h, new_c, aux = _block_apply(
-                    layer_p, cfg, kind, h, pos=pos, cache=layer_cache)
+                    layer_p, cfg, kind, h, pos=pos, cache=layer_cache,
+                    paged_impl=paged_impl)
                 cache_all = jax.tree.map(
                     lambda a, n: jax.lax.dynamic_update_index_in_dim(
                         a, n.astype(a.dtype), i, 0), cache_all, new_c)
@@ -334,7 +339,8 @@ def forward(
             else:
                 c_i = jax.tree.map(lambda a: a[i], cache)
             fn = functools.partial(_block_apply, layer_p, cfg, kind,
-                                   pos=pos, cache=c_i)
+                                   pos=pos, cache=c_i,
+                                   paged_impl=paged_impl)
             if remat:
                 fn = jax.checkpoint(lambda h, _fn=fn: _fn(h))
             x, new_c, a = fn(x)

@@ -65,7 +65,21 @@ class Engine:
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  max_len: int = 512, eos_id: int | None = None, seed: int = 0,
                  page_size: int = 16, num_blocks: int | None = None,
-                 prefill_chunk: int = 64):
+                 prefill_chunk: int = 64, paged_attn_impl: str = "gather"):
+        """``paged_attn_impl`` selects the decode attention read path over
+        the paged KV pool, threaded into the jitted decode closure (see
+        models/attention._paged_apply): "gather" (XLA logical-view gather,
+        the portable default), "pallas" (fused in-kernel page gather —
+        kernels/paged_attention.py; interpret mode off-TPU, tests only),
+        "xla" (the kernel's oracle routed through the same fused
+        dispatch), or "fused" (resolves to "pallas" on TPU and "xla"
+        elsewhere — what production serving should pass). Prefill always
+        uses the gather path."""
+        if paged_attn_impl == "fused":
+            paged_attn_impl = ("pallas" if jax.default_backend() == "tpu"
+                               else "xla")
+        assert paged_attn_impl in ("gather", "xla", "pallas"), paged_attn_impl
+        self.paged_attn_impl = paged_attn_impl
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -105,8 +119,10 @@ class Engine:
         # instead of copying the whole pool every tick (the engine always
         # replaces self.cache with the returned tree, so the old buffers
         # are never read again).
-        self._decode_fn = jax.jit(make_paged_decode(model, self.axes),
-                                  donate_argnums=(2,))
+        self._decode_fn = jax.jit(
+            make_paged_decode(model, self.axes,
+                              paged_impl=self.paged_attn_impl),
+            donate_argnums=(2,))
         self._prefill_fn = jax.jit(make_slot_prefill(model, self.axes),
                                    donate_argnums=(2,))
         self._sample = jax.jit(
@@ -118,7 +134,21 @@ class Engine:
         self._tokens = 0
         self._prefill_chunks = 0
         self._preemptions = 0
+        # host->device upload cache for slow-changing tick inputs (page
+        # tables, keep masks, temperatures): at steady-state decode these
+        # only change when a slot crosses a page boundary or a request
+        # enters/leaves, so re-uploading every tick was pure host overhead
+        self._dev_cache: dict = {}
         self.stats = self._snapshot(0.0)
+
+    def _dev(self, name: str, arr: np.ndarray):
+        """Device copy of ``arr``, re-uploaded only when the host value
+        changed since the last tick (cheap array_equal on tiny arrays)."""
+        ent = self._dev_cache.get(name)
+        if ent is None or not np.array_equal(ent[0], arr):
+            ent = (arr.copy(), jnp.asarray(arr))
+            self._dev_cache[name] = ent
+        return ent[1]
 
     def _snapshot(self, wall_s: float) -> dict:
         return {"wall_s": wall_s, "decode_ticks": self._decode_ticks,
@@ -196,7 +226,7 @@ class Engine:
         chunk[:real] = np.asarray(seq.req.prompt[start:start + real])
         last_logits, self.cache = self._prefill_fn(
             self.params, jnp.asarray(chunk[None]), self.cache, seq.slot,
-            start, real - 1, table)
+            start, real - 1, self._dev("table_pf", table))
         seq.pos += real
         self._prefill_chunks += 1
         return last_logits if seq.pos == seq.prompt_len else None
@@ -238,12 +268,11 @@ class Engine:
             else:
                 keep[s.slot] = True
         toks = jnp.asarray(self.last_tok[:, None], jnp.int32)
-        logits, self.cache = self._decode_fn(
+        nxt, self.key, self.cache = self._decode_fn(
             self.params, toks, self.cache, jnp.asarray(pos),
-            self._page_table(("decode",)), jnp.asarray(keep))
-        self.key, sub = jax.random.split(self.key)
-        nxt = np.asarray(self._sample(sub, logits[:, -1],
-                                      jnp.asarray(temps)))
+            self._dev("table_dec", self._page_table(("decode",))),
+            self._dev("keep", keep), self.key, self._dev("temps", temps))
+        nxt = np.asarray(nxt)
         for s in decoding:
             s.pos += 1
             self._emit(s, int(nxt[s.slot]))

@@ -45,23 +45,37 @@ def make_decode(model: Model):
     return decode
 
 
-def make_paged_decode(model: Model, axes):
+def make_paged_decode(model: Model, axes, paged_impl: str = "gather"):
     """One fully-compiled decode tick over a paged cache. ``axes`` is the
     per-leaf batch-axis tree from paged_cache.batch_axes. Folding the
-    page-table refresh and the mid-prefill row restore into the jitted
-    step keeps the tick at a single dispatch — the eager tree-map variant
-    cost more host time than the forward itself at small model scale."""
-    from repro.serve import paged_cache as pc
+    page-table refresh, the mid-prefill row restore, the PRNG split, AND
+    the per-slot sampling into the jitted step keeps the tick at a single
+    dispatch with a (B,) int32 device->host transfer — the eager tree-map
+    variant cost more host time than the forward itself, and the separate
+    sample dispatch + (B, V) logits round-trip dominated the batch=1
+    decode gap vs the legacy dense engine (BENCH_serve.json).
 
-    def decode(params, tokens, cache, pos, table, keep_mask):
+    ``paged_impl`` is captured by the closure and threaded through the
+    forward to attention._paged_apply — each engine's jitted decode bakes
+    its own backend, no module-global mutation involved."""
+    from repro.serve import paged_cache as pc
+    from repro.serve import sampling
+
+    def decode(params, tokens, cache, pos, table, keep_mask, key, temps):
         """tokens (B, 1); pos (B,) per-slot write positions; table
         (B, n_pages) page rows for decoding slots (scratch elsewhere);
         keep_mask (B,) marks slots whose recurrent-state rows must keep
-        their pre-tick values (slots still mid-prefill)."""
+        their pre-tick values (slots still mid-prefill); key is the
+        engine PRNG key (split in-graph, new key returned); temps (B,)
+        per-slot temperatures (<= 0 greedy)."""
         cache = pc.push_page_table(cache, table)
         logits, new_cache, _ = model.forward(
-            params, {"tokens": tokens}, cache=cache, pos=pos)
-        return logits, pc.restore_masked(cache, new_cache, axes, keep_mask)
+            params, {"tokens": tokens}, cache=cache, pos=pos,
+            paged_impl=paged_impl)
+        key, sub = jax.random.split(key)
+        nxt = sampling.sample(sub, logits[:, -1], temperature=temps)
+        return nxt, key, pc.restore_masked(cache, new_cache, axes,
+                                           keep_mask)
 
     return decode
 
@@ -76,9 +90,12 @@ def make_slot_prefill(model: Model, axes):
     def chunk(params, tokens, cache, slot, start, last_idx, table):
         cache = pc.push_page_table(cache, table)
         view = pc.slot_view_dyn(cache, axes, slot)
+        # prefill is pinned to the gather read path — including width-1
+        # tail chunks, which would otherwise satisfy the fused path's
+        # S == 1 shape test
         logits, new_view, _ = model.forward(
             params, {"tokens": tokens}, cache=view,
-            pos=jnp.full((1,), start, jnp.int32))
+            pos=jnp.full((1,), start, jnp.int32), paged_impl="gather")
         # only the last *real* token's logits ever get sampled (chunks may
         # be padded up to their power-of-two bucket) — returning (V,)
         # instead of (1, C, V) keeps the host transfer flat

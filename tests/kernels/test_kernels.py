@@ -157,3 +157,82 @@ class TestFlashAttentionKernel:
         np.testing.assert_allclose(
             np.asarray(o, np.float32), np.asarray(o2, np.float32),
             rtol=tol, atol=tol)
+
+    @pytest.mark.parametrize("Sq,Sk,off", [(64, 64, 32), (64, 192, 128),
+                                           (1, 64, 63)])
+    def test_q_offset_matches_xla_scan(self, Sq, Sk, off):
+        """Causal masking at a nonzero static row offset: the kernel must
+        match the XLA two-level scan's q_offset semantics (q row i is
+        absolute position off + i; k spans [0, Sk))."""
+        from repro.kernels.flash_attention import flash_attention_tpu
+        from repro.models import attention
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (2, Sq, 4, 32))
+        k = jax.random.normal(ks[1], (2, Sk, 2, 32))
+        v = jax.random.normal(ks[2], (2, Sk, 2, 32))
+        o1 = flash_attention_tpu(q, k, v, causal=True, q_offset=off,
+                                 block_q=min(64, Sq), block_k=32,
+                                 interpret=True)
+        msk = (jnp.arange(Sk)[None, :]
+               <= off + jnp.arange(Sq)[:, None])[None, None, None]
+        o2 = attention._plain_attention(q, k, v, msk)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestFlashDispatch:
+    """Regression: a nonzero q_offset with an empty cache prefix
+    (Sk == Sq, absolute-position masking) used to silently skip the
+    Pallas path. The _FLASH_IMPL counter pins which impl dispatched."""
+
+    def _counts(self):
+        from repro.models import attention
+        return dict(attention._FLASH_IMPL["counts"])
+
+    def test_q_offset_no_longer_skips_pallas(self):
+        from repro.models import attention
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q = jax.random.normal(ks[0], (1, 64, 4, 32))
+        k = jax.random.normal(ks[1], (1, 64, 4, 32))
+        v = jax.random.normal(ks[2], (1, 64, 4, 32))
+        attention.set_flash_impl("pallas")
+        try:
+            before = self._counts()
+            o_pl = attention.flash_attention(q, k, v, causal=True,
+                                             q_offset=16)
+            after = self._counts()
+            assert after["pallas"] == before["pallas"] + 1, \
+                "pallas path was silently skipped"
+            assert after["xla"] == before["xla"]
+            attention.set_flash_impl("xla")
+            before = self._counts()
+            o_xla = attention.flash_attention(q, k, v, causal=True,
+                                              q_offset=16)
+            assert self._counts()["xla"] == before["xla"] + 1
+        finally:
+            attention.set_flash_impl("xla")
+        np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_xla),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_traced_offset_falls_back_to_xla(self):
+        """A *traced* q_offset can't parameterize the static kernel mask —
+        dispatch must take the XLA scan, not crash."""
+        from repro.models import attention
+        ks = jax.random.split(jax.random.PRNGKey(4), 3)
+        q = jax.random.normal(ks[0], (1, 64, 4, 32))
+        k = jax.random.normal(ks[1], (1, 64, 4, 32))
+        v = jax.random.normal(ks[2], (1, 64, 4, 32))
+        attention.set_flash_impl("pallas")
+        try:
+            before = self._counts()
+            out = jax.jit(
+                lambda off: attention.flash_attention(
+                    q, k, v, causal=True, q_offset=off))(jnp.int32(16))
+            after = self._counts()
+            assert after["xla"] == before["xla"] + 1
+            assert after["pallas"] == before["pallas"]
+        finally:
+            attention.set_flash_impl("xla")
+        ref_o = attention.flash_attention(q, k, v, causal=True, q_offset=16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref_o),
+                                   rtol=2e-4, atol=2e-4)

@@ -8,22 +8,39 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import SMOKE
+from repro.configs import FAMILY_REPRESENTATIVE, SMOKE
 from repro.models import model_zoo
 from repro.serve.engine import Engine, Request
 from repro.serve.paged_cache import BlockAllocator
 from repro.serve.scheduler import CapacityError, next_chunk_len
 from repro.serve.serve_step import make_decode, make_prefill
 
+FAMILIES = list(FAMILY_REPRESENTATIVE)  # dense moe vlm ssm hybrid audio
+_MODELS: dict = {}
+
+
+def family_model(family: str):
+    """Cached smoke model per family (params are deterministic per key)."""
+    if family not in _MODELS:
+        if family == "dense":
+            cfg = SMOKE["llama2-7b"].scaled(
+                dtype="float32", n_layers=2, d_model=64, vocab_size=256,
+                max_seq_len=64)
+        else:
+            cfg = SMOKE[FAMILY_REPRESENTATIVE[family]].scaled(
+                dtype="float32")
+        model = model_zoo.build(cfg)
+        _MODELS[family] = (model,
+                           model.init_params(jax.random.PRNGKey(0)))
+    return _MODELS[family]
+
 
 def dense_model():
-    cfg = SMOKE["llama2-7b"].scaled(dtype="float32", n_layers=2, d_model=64,
-                                    vocab_size=256, max_seq_len=64)
-    return model_zoo.build(cfg)
+    return family_model("dense")[0]
 
 
 def hybrid_model():
-    return model_zoo.build(SMOKE["zamba2-7b"].scaled(dtype="float32"))
+    return family_model("hybrid")[0]
 
 
 def greedy_reqs(prompts, n=6, rid0=0):
@@ -124,25 +141,58 @@ class TestAdmissionAndStats:
 
 class TestMixedLengthContinuousBatching:
     """THE regression test for the shared-max-position bug: late-admitted
-    slots used to write at the oldest slot's position, leaving gaps."""
+    slots used to write at the oldest slot's position, leaving gaps.
 
-    @pytest.mark.parametrize("family", ["dense", "hybrid"])
-    def test_interleaved_matches_solo(self, family):
-        model = dense_model() if family == "dense" else hybrid_model()
-        params = model.init_params(jax.random.PRNGKey(0))
+    Runs on every zoo family (attention caches page; recurrent state stays
+    slot-resident; audio decodes against resident cross-K/V; MoE routes
+    per-row so batched rows stay independent), with the paged decode
+    attention on the fused-kernel path ("pallas", interpret off-TPU) and
+    the gather path — interleaved continuous batching must be
+    token-identical to serving each request alone under either impl."""
+
+    @pytest.mark.parametrize("impl", ["gather", "pallas"])
+    @pytest.mark.parametrize("family", FAMILIES)
+    def test_interleaved_matches_solo(self, family, impl):
+        if family == "ssm" and impl == "pallas":
+            pytest.skip("ssm has no attention KV leaves — no paged "
+                        "attention to fuse (covered by gather run)")
+        model, params = family_model(family)
         rng = np.random.RandomState(1)
         V = model.cfg.vocab_size - 1
         prompts = [rng.randint(0, V, size=s) for s in (5, 9, 3, 12)]
-        eng = Engine(model, params, max_batch=2, max_len=64, page_size=8)
+        eng = Engine(model, params, max_batch=2, max_len=64, page_size=8,
+                     paged_attn_impl=impl)
         reqs = greedy_reqs(prompts)
         eng.run(reqs)
         assert all(len(r.out_tokens) == 6 for r in reqs)
         for i, p in enumerate(prompts):
             solo = Engine(model, params, max_batch=2, max_len=64,
-                          page_size=8)
+                          page_size=8, paged_attn_impl=impl)
             r = greedy_reqs([p], rid0=100 + i)[0]
             solo.run([r])
-            assert r.out_tokens == reqs[i].out_tokens, (family, i)
+            assert r.out_tokens == reqs[i].out_tokens, (family, impl, i)
+
+    def test_width1_prefill_chunk_keeps_gather_path(self):
+        """Regression: a prompt whose pow2 decomposition ends in a width-1
+        chunk satisfies the fused path's S == 1 shape test — prefill must
+        still be pinned to the gather read path (only the decode closure
+        bakes the fused impl). Pinned via the _PAGED_IMPL dispatch
+        counters, which increment at trace time."""
+        from repro.models import attention
+        model, params = family_model("dense")
+        eng = Engine(model, params, max_batch=1, max_len=64, page_size=8,
+                     prefill_chunk=16, paged_attn_impl="pallas")
+        before = dict(attention._PAGED_IMPL["counts"])
+        rng = np.random.RandomState(7)
+        # 17 = 16 + 1: the tail prefill chunk is width 1
+        req = greedy_reqs([rng.randint(0, 255, size=17)], n=3)[0]
+        eng.run([req])
+        counts = attention._PAGED_IMPL["counts"]
+        assert len(req.out_tokens) == 3
+        # exactly one fused trace (the decode closure); every prefill
+        # trace — including the width-1 tail chunk — took gather
+        assert counts["pallas"] == before["pallas"] + 1
+        assert counts["gather"] > before["gather"]
 
     def test_padded_chunk_overhanging_max_len_matches_reference(self):
         """A prompt whose padded prefill bucket overhangs the page-table

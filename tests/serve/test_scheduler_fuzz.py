@@ -1,0 +1,189 @@
+"""Scheduler fuzz: random admit/prefill/decode/preempt sequences against
+serve/scheduler.py + the block allocator, asserting the structural
+invariants directly (no model in the loop), plus an engine-level fuzz that
+drives random workloads through oversubscribed pools and checks preempted
+prompts replay to identical greedy outputs.
+
+The host-side fuzz mirrors exactly the calls the engine makes each tick
+(admit_from_queue -> prefill_chunk_len/pos advance -> ensure_block ->
+emit/finish), so any interleaving the engine can produce is reachable.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serve.engine import Engine, Request
+from repro.serve.paged_cache import BlockAllocator
+from repro.serve.scheduler import Scheduler
+
+
+@dataclasses.dataclass
+class FuzzReq:
+    rid: int
+    prompt: np.ndarray
+    max_new_tokens: int
+    out: int = 0          # tokens emitted so far
+
+
+def check_invariants(sched: Scheduler, num_blocks: int):
+    """Structural invariants that must hold between any two ticks."""
+    alloc = sched.allocator
+    held = [b for s in sched.active() for b in s.pages]
+    # no block handed to two sequences, none both held and free, scratch
+    # block 0 never handed out
+    assert len(held) == len(set(held)), "block double-allocation"
+    assert not (set(held) & set(alloc._free)), "block both held and free"
+    assert 0 not in held and 0 not in alloc._free
+    assert len(held) + alloc.free_blocks == num_blocks - 1, \
+        "blocks leaked or conjured"
+    for s in sched.active():
+        # every written position is backed by a mapped page, and the page
+        # count never overshoots what placement (all prompt pages up
+        # front) plus the decode block supply (one page per boundary
+        # crossing) can have mapped
+        assert s.pos <= len(s.pages) * sched.page_size
+        prompt_pages = -(-s.prompt_len // sched.page_size)
+        decode_pages = -(-max(s.pos, 1) // sched.page_size) + 1
+        assert len(s.pages) <= max(prompt_pages, decode_pages)
+        assert 0 <= s.pos <= s.prompt_len + s.req.max_new_tokens
+        assert sched.running[s.slot] is s
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_scheduler_fuzz_invariants(seed):
+    rng = np.random.RandomState(seed)
+    num_blocks = int(rng.randint(4, 12))
+    page_size = int(rng.choice([2, 4, 8]))
+    max_batch = int(rng.randint(1, 4))
+    max_len = page_size * (num_blocks - 1)
+    sched = Scheduler(
+        max_batch=max_batch, max_len=max_len, page_size=page_size,
+        allocator=BlockAllocator(num_blocks),
+        prefill_chunk=int(rng.choice([4, 8, 16])),
+        pad_prefill=bool(rng.randint(2)))
+    reqs = {}
+    emitted = {}          # rid -> tokens counted where sampled (engine rule)
+    next_rid = 0
+    for step in range(300):
+        op = rng.randint(3)
+        if op == 0 and len(reqs) < 25:
+            # submit a random (sometimes infeasible) request
+            plen = int(rng.randint(1, max_len + 2))
+            mnt = int(rng.randint(1, 6))
+            r = FuzzReq(next_rid, np.zeros(plen, np.int32), mnt)
+            next_rid += 1
+            try:
+                sched.submit(r)
+                reqs[r.rid] = r
+                emitted[r.rid] = 0
+            except Exception:
+                assert plen + mnt > max_len or \
+                    -(-(plen + mnt) // page_size) > sched.allocator.capacity
+        elif op == 1:
+            # one engine tick: admissions + one prefill chunk per
+            # prefilling seq + a decode pass with block supply
+            sched.admit_from_queue()
+            for s in sorted((x for x in sched.active()
+                             if x.phase == "prefill"),
+                            key=lambda x: x.order):
+                size, real = sched.prefill_chunk_len(s)
+                assert size & (size - 1) == 0, "non-pow2 chunk"
+                assert real <= size and real <= s.prompt_len - s.pos
+                s.pos += real
+                if s.pos == s.prompt_len:
+                    s.phase = "decode"
+                    s.req.out += 1
+                    emitted[s.req.rid] += 1
+                    if s.req.out >= s.req.max_new_tokens:
+                        sched.finish(s)
+            for s in sorted((x for x in sched.active()
+                             if x.phase == "decode"),
+                            key=lambda x: x.order):
+                if sched.running[s.slot] is not s:
+                    continue  # preempted by an earlier victim this tick
+                for v in sched.ensure_block(s):
+                    emitted[v.req.rid] -= v.req.out  # recompute-style
+                    v.req.out = 0
+            for s in [x for x in sched.active() if x.phase == "decode"]:
+                s.pos += 1
+                s.req.out += 1
+                emitted[s.req.rid] += 1
+                if s.req.out >= s.req.max_new_tokens:
+                    sched.finish(s)
+        else:
+            # spontaneous preemption of a random running sequence
+            live = sched.active()
+            if live:
+                victim = live[rng.randint(len(live))]
+                sched.preempt(victim)
+                emitted[victim.req.rid] -= victim.req.out
+                victim.req.out = 0
+        check_invariants(sched, num_blocks)
+    # token accounting: every finished request emitted exactly
+    # max_new_tokens; running/queued ones no more than that
+    for r in reqs.values():
+        assert emitted[r.rid] == r.out
+        assert 0 <= r.out <= r.max_new_tokens
+    # drain: with no more fuzz preemptions everything must complete
+    for _ in range(2000):
+        if not sched.has_work():
+            break
+        sched.admit_from_queue()
+        for s in sorted((x for x in sched.active()
+                         if x.phase == "prefill"), key=lambda x: x.order):
+            _, real = sched.prefill_chunk_len(s)
+            s.pos += real
+            if s.pos == s.prompt_len:
+                s.phase = "decode"
+                s.req.out += 1
+                if s.req.out >= s.req.max_new_tokens:
+                    sched.finish(s)
+        for s in sorted((x for x in sched.active()
+                         if x.phase == "decode"), key=lambda x: x.order):
+            if sched.running[s.slot] is not s:
+                continue
+            for v in sched.ensure_block(s):
+                v.req.out = 0
+        for s in [x for x in sched.active() if x.phase == "decode"]:
+            s.pos += 1
+            s.req.out += 1
+            if s.req.out >= s.req.max_new_tokens:
+                sched.finish(s)
+        check_invariants(sched, num_blocks)
+    assert not sched.has_work(), "drain did not converge"
+    for r in reqs.values():
+        assert r.out == r.max_new_tokens
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_engine_fuzz_preemption_replay(seed):
+    """Random workloads through a tight pool: preempted prompts must
+    replay to the exact greedy outputs of an unpressured engine, and the
+    engine's token accounting must match what the requests received."""
+    import jax
+
+    from tests.serve.test_paged_serving import family_model
+
+    model, params = family_model("dense")
+    rng = np.random.RandomState(100 + seed)
+    V = model.cfg.vocab_size - 1
+    prompts = [rng.randint(0, V, size=int(rng.randint(1, 20)))
+               for _ in range(int(rng.randint(3, 7)))]
+    news = [int(rng.randint(1, 9)) for _ in prompts]
+
+    def run(num_blocks):
+        eng = Engine(model, params, max_batch=2, max_len=64, page_size=4,
+                     num_blocks=num_blocks)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=n)
+                for i, (p, n) in enumerate(zip(prompts, news))]
+        eng.run(reqs)
+        return eng, reqs
+
+    big, ref = run(num_blocks=None)        # pool holds every slot fully
+    assert big.stats["preemptions"] == 0
+    tight, out = run(num_blocks=9)         # 8 usable blocks for 2 slots
+    for a, b in zip(ref, out):
+        assert a.out_tokens == b.out_tokens, (seed, a.rid)
+        assert len(b.out_tokens) == b.max_new_tokens
+    assert tight.stats["tokens"] == sum(len(r.out_tokens) for r in out)
