@@ -5,7 +5,11 @@ GPTVQ-packed weights.
 Workload: a burst of requests with many *distinct* prompt lengths (the
 realistic serving shape) on the qwen3-1.7b config family. Reports decode
 tokens/s and time-to-first-token (TTFT) at max_batch in {1, 8}, and emits
-``BENCH_serve.json``. The legacy engine is kept here (not in serve/) as the
+``BENCH_serve.json``. Quantized-cache cells (``kv_bits`` 8/4) rerun the
+fused engine with int8/packed-int4 KV pages at a FIXED per-layer pool
+byte budget (the fp32 default pool's footprint), reporting the
+allocatable-page headroom the same bytes buy alongside the decode
+throughput cost of dequantizing on the fly. The legacy engine is kept here (not in serve/) as the
 measurement baseline: it prefility-tiles a full max_batch-wide batch per
 admission and retraces per distinct prompt length — exactly the costs the
 paged engine removes.
@@ -154,21 +158,34 @@ def run_legacy(eng, reqs):
 
 
 class BenchCase:
-    """One (engine kind, weights, max_batch) cell: a persistent warm engine
-    plus per-pass measurements. Passes of different cases are interleaved
-    and summarized by the median, so ambient machine noise hits every case
-    evenly instead of whichever ran last."""
+    """One (engine kind, weights, kv_bits, max_batch) cell: a persistent
+    warm engine plus per-pass measurements. Passes of different cases are
+    interleaved and summarized by the median, so ambient machine noise
+    hits every case evenly instead of whichever ran last.
 
-    def __init__(self, kind, wtag, model, params, max_batch, max_len):
+    ``kv_bits`` < 16 stores the paged KV pool as int8/packed-int4 code
+    pages (per-row per-kv-head scales, dequantized on the fly by the
+    fused read path); ``pool_bytes`` sizes the pool by a fixed per-layer
+    byte budget, so the quantized cells report how many extra allocatable
+    pages the same bytes buy."""
+
+    def __init__(self, kind, wtag, model, params, max_batch, max_len,
+                 kv_bits=16, pool_bytes=None, page_size=16):
         self.kind, self.wtag, self.max_batch = kind, wtag, max_batch
+        self.kv_bits = kv_bits
         self.backend = None
+        self.allocatable_pages = None
         if kind.startswith("paged"):
             impl = "fused" if kind == "paged-fused" else "gather"
             self.eng = Engine(model, params, max_batch=max_batch,
-                              max_len=max_len, paged_attn_impl=impl)
+                              max_len=max_len, paged_attn_impl=impl,
+                              kv_cache_bits=kv_bits, pool_bytes=pool_bytes,
+                              page_size=page_size)
             self.backend = self.eng.paged_attn_impl
+            self.allocatable_pages = self.eng.scheduler.allocator.capacity
             self.runner = run_paged
         else:
+            assert kv_bits == 16  # the legacy dense cache has no pages
             self.eng = LegacySlotEngine(model, params, max_batch=max_batch,
                                         max_len=max_len)
             self.runner = run_legacy
@@ -193,6 +210,8 @@ class BenchCase:
         return {
             "engine": self.kind, "weights": self.wtag,
             "fused_backend": self.backend,
+            "kv_bits": self.kv_bits,
+            "allocatable_pages": self.allocatable_pages,
             "max_batch": self.max_batch, "tokens": self.tokens,
             "cold_wall_s": round(self.cold_wall_s, 4),
             "wall_s_median": round(med, 4),
@@ -220,7 +239,12 @@ def main():
     n_req = args.requests or (8 if args.smoke else 16)
     max_new = args.max_new or (16 if args.smoke else 32)
     max_len = 128 if args.smoke else 256
-    passes = 3 if args.smoke else 5
+    # enough passes for a stable median of the paired per-pass ratios —
+    # single-pass walls are ~0.3-1s and this host's ambient load swings
+    # unpaired medians by 40% between runs (a 12-rep A/B of the fp32 vs
+    # kv8 fused cells spread paired ratios over 0.91-1.17 around a
+    # best-wall ratio of 1.00)
+    passes = 9 if args.smoke else 11
     model = model_zoo.build(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
 
@@ -238,33 +262,85 @@ def main():
     lens = [6 + 5 * i for i in range(n_req)]
     prompts = [rng.randint(0, cfg.vocab_size - 1, size=s) for s in lens]
 
+    # fixed per-layer pool byte budget for the quantized-cache cells: the
+    # byte footprint of the fp32 default pool at each max_batch, so the
+    # fp32 fused cell doubles as the fixed-bytes baseline and the kv8/kv4
+    # cells show the page headroom the same bytes buy
+    from repro.kernels import kv_quant
+
+    page_size = 16  # passed explicitly to every BenchCase engine below,
+    # so the budget arithmetic and the engines can never disagree
+    n_pages = -(-max_len // page_size)
+    blk_bytes = kv_quant.page_bytes(page_size, cfg.n_kv_heads, cfg.hd, 16,
+                                    dtype_bytes=4)
+
     results = []
+    all_cases = {}
     for mb in (1, 8):
+        budget = (mb * n_pages + 1) * blk_bytes
+        # the kv8/kv4 cells run IMMEDIATELY after their fp32 fused
+        # baseline within each pass: their headline ratio is paired
+        # per-pass, and back-to-back execution keeps minute-scale host
+        # noise out of the pair
         cases = [
-            BenchCase("paged", "fp32", model, params, mb, max_len),
-            BenchCase("paged-fused", "fp32", model, params, mb, max_len),
-            BenchCase("paged-fused", "vq", model, qparams, mb, max_len),
+            BenchCase("paged", "fp32", model, params, mb, max_len,
+                      page_size=page_size),
+            BenchCase("paged-fused", "fp32", model, params, mb, max_len,
+                      page_size=page_size),
+            BenchCase("paged-fused", "fp32", model, params, mb, max_len,
+                      kv_bits=8, pool_bytes=budget, page_size=page_size),
+            BenchCase("paged-fused", "fp32", model, params, mb, max_len,
+                      kv_bits=4, pool_bytes=budget, page_size=page_size),
+            BenchCase("paged-fused", "vq", model, qparams, mb, max_len,
+                      page_size=page_size),
             BenchCase("legacy", "fp32", model, params, mb, max_len),
         ]
         for i in range(passes + 1):  # pass 0 is the cold/compile pass
             for c in cases:
                 c.one_pass(prompts, max_new, rid0=1000 * i)
         for c in cases:
+            all_cases[(mb, c.kind, c.wtag, c.kv_bits)] = c
             r = c.summary()
             results.append(r)
-            print(f"  {r['engine']:11s} {r['weights']:4s} max_batch={mb}: "
+            pages = (f" pages={r['allocatable_pages']}"
+                     if r["allocatable_pages"] is not None else "")
+            print(f"  {r['engine']:11s} {r['weights']:4s} "
+                  f"kv{r['kv_bits']:<2d} max_batch={mb}: "
                   f"{r['tokens_per_s']:8.1f} tok/s (median)  "
                   f"ttft_mean={r['ttft_mean_s']:.3f}s  "
-                  f"cold={r['cold_wall_s']:.1f}s", flush=True)
+                  f"cold={r['cold_wall_s']:.1f}s{pages}", flush=True)
 
-    def pick(engine, mb, wtag="fp32"):
+    def pick(engine, mb, wtag="fp32", kv=16):
         return next(r for r in results if r["engine"] == engine
-                    and r["max_batch"] == mb and r["weights"] == wtag)
+                    and r["max_batch"] == mb and r["weights"] == wtag
+                    and r["kv_bits"] == kv)
+
+    def case_by(mb, kv):
+        return all_cases[(mb, "paged-fused", "fp32", kv)]
 
     fused_b1 = round(pick("paged-fused", 1)["tokens_per_s"]
                      / pick("legacy", 1)["tokens_per_s"], 3)
     fused_b8 = round(pick("paged-fused", 8)["tokens_per_s"]
                      / pick("legacy", 8)["tokens_per_s"], 3)
+    # quantized-cache cells: page headroom at FIXED pool bytes, and the
+    # decode-throughput cost of paying for on-the-fly dequant. The tok/s
+    # ratio is the median of PAIRED per-pass wall ratios (pass i of both
+    # cells runs back to back), so minute-scale ambient slowdowns on a
+    # shared bench host cancel instead of landing on whichever cell they
+    # overlapped — unpaired medians swung this ratio by 40% run to run.
+    kv8_pages_b8 = round(pick("paged-fused", 8, kv=8)["allocatable_pages"]
+                         / pick("paged-fused", 8)["allocatable_pages"], 3)
+    kv4_pages_b8 = round(pick("paged-fused", 8, kv=4)["allocatable_pages"]
+                         / pick("paged-fused", 8)["allocatable_pages"], 3)
+
+    def paired_tps_ratio(mb, kv):
+        base = case_by(mb, 16).walls
+        quant = case_by(mb, kv).walls
+        ratios = sorted(b / q for b, q in zip(base, quant))
+        return round(ratios[len(ratios) // 2], 3)
+
+    kv8_tps_b1 = paired_tps_ratio(1, 8)
+    kv8_tps_b8 = paired_tps_ratio(8, 8)
     report = {
         "bench": "serve_throughput",
         "config": cfg.name + ("-smoke" if args.smoke else ""),
@@ -276,11 +352,16 @@ def main():
                   / pick("legacy", 8)["tokens_per_s"], 3),
         "paged_fused_over_legacy_tokens_per_s_b1": fused_b1,
         "paged_fused_over_legacy_tokens_per_s_b8": fused_b8,
+        "kv8_pages_over_fp32_fixed_pool_bytes_b8": kv8_pages_b8,
+        "kv4_pages_over_fp32_fixed_pool_bytes_b8": kv4_pages_b8,
+        "kv8_fused_tokens_per_s_over_fp32_b1": kv8_tps_b1,
+        "kv8_fused_tokens_per_s_over_fp32_b8": kv8_tps_b8,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {os.path.abspath(args.out)}; fused/legacy tok/s "
-          f"@B1 = {fused_b1}, @B8 = {fused_b8}")
+          f"@B1 = {fused_b1}, @B8 = {fused_b8}; kv8 pages/fp32 @B8 = "
+          f"{kv8_pages_b8} at {kv8_tps_b1}/{kv8_tps_b8} rel tok/s @B1/B8")
 
 
 if __name__ == "__main__":

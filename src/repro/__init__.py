@@ -1,0 +1,1 @@
+"""GPTVQ reproduction: vector-quantized LLM PTQ + serving on jax/pallas."""

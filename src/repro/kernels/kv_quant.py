@@ -1,0 +1,135 @@
+"""Low-bit KV-page quantization math, shared by every paged read/write path.
+
+One module owns the code <-> value mapping so the write site
+(models/attention._paged_apply), the XLA gather read path, the oracle
+(kernels/ref.paged_attention_ref), and the fused Pallas kernel
+(kernels/paged_attention.py) stay bitwise-consistent: they all call
+``quantize_kv`` / ``dequant_rows`` here, so a page decodes to the exact
+same f32 values no matter which path reads it.
+
+Format: symmetric per-row (per written token), per-kv-head scales —
+``scale[row, kv] = amax(|x[row, kv, :]|) / qmax`` stored f32 alongside the
+page, codes ``clip(round(x / scale), -qmax, qmax)`` stored int8. int4 packs
+two codes per int8 byte along the head dim (column 2j in the low nibble,
+2j+1 in the high nibble), so an int4 page is a real byte-for-byte half of
+an int8 page, not int4-in-int8 cosplay. Per-row scales make incremental
+page writes exact: a decode tick quantizes only the token it appends and
+never re-quantizes (or re-scales) rows another tick already wrote — which
+is also what makes preemption-replay and interleaved-vs-solo serving
+bit-reproducible under a quantized pool.
+
+Zero rows get scale 0 (codes are computed against a div-safe scale of 1
+and are all 0); dequant is then exactly 0 — no NaN path. Stale rows in
+recycled blocks carry stale codes AND stale scales; both decode to finite
+garbage that the serving mask ``kpos <= pos`` discards, the same invariant
+that already covers stale fp16 keys.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# bits -> largest code magnitude (symmetric; int4 uses [-7, 7], leaving
+# -8 unused, so dequant needs no asymmetric zero-point)
+QMAX = {8: 127, 4: 7}
+PASSTHROUGH_BITS = 16
+
+
+def storage_cols(hd: int, bits: int) -> int:
+    """Last-axis width of a quantized pool holding ``hd`` head dims."""
+    if bits == 4:
+        assert hd % 2 == 0, f"int4 packing needs even head_dim, got {hd}"
+        return hd // 2
+    assert bits == 8, bits
+    return hd
+
+
+def infer_bits(stored_cols: int, hd: int) -> int:
+    """Recover the code width from the pool's stored last axis. A packed
+    int4 pool stores hd//2 bytes per row; int8 stores hd."""
+    if stored_cols == hd:
+        return 8
+    assert stored_cols == hd // 2, (stored_cols, hd)
+    return 4
+
+
+def pack_int4(codes: jnp.ndarray) -> jnp.ndarray:
+    """(..., hd) int8 codes in [-7, 7] -> (..., hd//2) int8 bytes."""
+    lo = codes[..., 0::2] & jnp.int8(0x0F)
+    hi = codes[..., 1::2] & jnp.int8(0x0F)
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4(packed: jnp.ndarray) -> jnp.ndarray:
+    """(..., hd//2) int8 bytes -> (..., hd) int8 codes (sign-extended)."""
+    lo = (packed << 4) >> 4          # arithmetic shifts sign-extend
+    hi = packed >> 4
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+
+
+def quantize_kv(x: jnp.ndarray, bits: int):
+    """Quantize fresh K or V rows for a page write.
+
+    x: (..., KV, hd) float -> (codes (..., KV, storage_cols) int8,
+    scales (..., KV) f32). Per-(row, kv-head) symmetric amax scaling.
+    """
+    qmax = QMAX[bits]
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = amax / qmax
+    safe = jnp.where(scale > 0, scale, 1.0)
+    codes = jnp.clip(jnp.round(xf / safe[..., None]), -qmax, qmax)
+    codes = codes.astype(jnp.int8)
+    if bits == 4:
+        codes = pack_int4(codes)
+    return codes, scale
+
+
+def dequant_rows(codes: jnp.ndarray, scales: jnp.ndarray,
+                 bits: int) -> jnp.ndarray:
+    """codes (..., storage_cols) int8 + scales (...,) f32 -> (..., hd) f32.
+
+    The single decode expression every read path shares (XLA gather,
+    oracle, and — op for op — the Pallas kernel's in-VMEM dequant).
+    """
+    if bits == 4:
+        codes = unpack_int4(codes)
+    return codes.astype(jnp.float32) * scales[..., None].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# byte accounting (serve-side pool sizing)
+# ---------------------------------------------------------------------------
+
+def row_bytes(hd: int, bits: int, *, dtype_bytes: int = 2) -> int:
+    """Bytes one written token costs per kv head in ONE pool (K or V),
+    including its f32 scale. ``dtype_bytes`` is the passthrough pool's
+    element size (2 for bf16 serving, 4 for the fp32 CPU bench host)."""
+    if bits == PASSTHROUGH_BITS:
+        return hd * dtype_bytes
+    return hd * bits // 8 + 4
+
+
+def page_bytes(page_size: int, n_kv_heads: int, hd: int, bits: int, *,
+               dtype_bytes: int = 2) -> int:
+    """Bytes of one physical block across BOTH K and V pools (+ scales)."""
+    return 2 * page_size * n_kv_heads * row_bytes(hd, bits,
+                                                  dtype_bytes=dtype_bytes)
+
+
+def blocks_for_bytes(pool_bytes: int, page_size: int, n_kv_heads: int,
+                     hd: int, bits: int, *, dtype_bytes: int = 2) -> int:
+    """How many physical blocks (incl. the reserved scratch block 0) a
+    per-layer byte budget buys — the allocator then exposes
+    ``blocks - 1`` usable pages, which is where the 2-4x quantized-page
+    headroom at fixed pool bytes becomes visible. An explicit budget too
+    small for scratch + one usable block is a config error, not something
+    to silently round up past."""
+    per_block = page_bytes(page_size, n_kv_heads, hd, bits,
+                           dtype_bytes=dtype_bytes)
+    n = int(pool_bytes // per_block)
+    if n < 2:
+        raise ValueError(
+            f"pool_bytes={pool_bytes} buys {n} block(s) of {per_block} B "
+            f"(page_size={page_size}, kv_bits={bits}); need >= 2 "
+            f"(scratch + one usable)")
+    return n

@@ -39,15 +39,23 @@ def vql_matmul(x: jax.Array, vql: VQLinear, *, use_pallas: bool = True,
 
 
 def paged_attention(q, k_pool, v_pool, page_table, pos, *,
+                    k_scale=None, v_scale=None,
                     use_pallas: bool = True, interpret: bool = True):
     """Fused paged-attention decode: one query token per slot attends over
     its page-table-mapped KV blocks (kpos <= pos masking) without
-    materializing the logical per-slot view. q (B, H, hd) -> (B, H, hd)."""
+    materializing the logical per-slot view. q (B, H, hd) -> (B, H, hd).
+
+    ``k_scale``/``v_scale`` mark a quantized pool (int8/int4 code pages +
+    per-row per-kv-head f32 scales): the Pallas path DMAs code pages and
+    their scale tiles and dequantizes in VMEM; the XLA path dequantizes
+    the gathered pages in the oracle. Both share kernels/kv_quant.py."""
     if use_pallas:
         from repro.kernels.paged_attention import paged_attention_tpu
         return paged_attention_tpu(q, k_pool, v_pool, page_table, pos,
+                                   k_scale=k_scale, v_scale=v_scale,
                                    interpret=interpret)
-    return ref.paged_attention_ref(q, k_pool, v_pool, page_table, pos)
+    return ref.paged_attention_ref(q, k_pool, v_pool, page_table, pos,
+                                   k_scale=k_scale, v_scale=v_scale)
 
 
 def assign(x, hw, codebook, *, use_pallas: bool = True,

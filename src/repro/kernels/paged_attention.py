@@ -13,14 +13,27 @@ in VMEM scratch across pages (same structure as kernels/flash_attention.py).
 All G = H // KV query heads of a kv head share its pages in one program, so
 GQA needs no materialized head expansion.
 
+Quantized pools (KVQuantSpec bits 8/4, kernels/kv_quant.py): the pools hold
+int8 code pages (int4 packed two codes per byte along the head dim) plus
+per-row per-kv-head f32 scales. The scale tiles are extra inputs whose
+BlockSpec index maps read the SAME scalar-prefetched page table as k/v —
+``(table[b, pg], 0, kv)`` — so a program DMAs its page's codes and the
+matching (page_size,) scale lane together and dequantizes in VMEM
+(``dequant_rows``: sign-extend/unpack, multiply by scale, f32). Quantized
+pages are decoded only inside the kernel; no fp16 logical view of the pool
+ever materializes anywhere in the serving path.
+
 Masking is the serving invariant ``kpos <= pos[slot]`` over *logical*
 positions: stale rows in recycled blocks, the tail of the slot's last page,
 the reserved scratch block 0 (where inactive slots' page-table entries
 point), and table rows past the slot's depth are all strictly above
-``pos`` and never contribute. An idle slot (pos == 0, table all-scratch)
+``pos`` and never contribute. Stale *scales* ride the same masked rows:
+they decode stale codes to finite garbage whose scores die at the mask,
+exactly like stale fp16 keys. An idle slot (pos == 0, table all-scratch)
 attends exactly one scratch row — defined output, discarded by the engine.
 
-``kernels/ref.py:paged_attention_ref`` is the pure-XLA oracle;
+``kernels/ref.py:paged_attention_ref`` is the pure-XLA oracle (same
+``dequant_rows`` expression on the gathered view);
 ``tests/kernels/test_paged_attention.py`` is the differential harness.
 """
 from __future__ import annotations
@@ -32,11 +45,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import kv_quant
+
 NEG_INF = -1e30
 
 
-def _kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-            m_scr, l_scr, acc_scr, *, scale, n_pages, page_size):
+def _kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
+            scale, n_pages, page_size, kv_bits):
+    if kv_bits < kv_quant.PASSTHROUGH_BITS:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     pg = pl.program_id(2)
 
@@ -47,14 +66,22 @@ def _kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     q = q_ref[0, 0].astype(jnp.float32)      # (G, hd)
-    k = k_ref[0, :, 0].astype(jnp.float32)   # (page_size, hd)
-    v = v_ref[0, :, 0].astype(jnp.float32)
+    if kv_bits < kv_quant.PASSTHROUGH_BITS:
+        # in-VMEM dequant: the page's int8 codes and its (page_size,)
+        # scale lane arrived by DMA through the same table-driven index
+        # maps; decode is the shared kv_quant expression, so kernel ==
+        # oracle == gather path bit for bit on the decoded values
+        k = kv_quant.dequant_rows(k_ref[0, :, 0], ks_ref[0, :, 0], kv_bits)
+        v = kv_quant.dequant_rows(v_ref[0, :, 0], vs_ref[0, :, 0], kv_bits)
+    else:
+        k = k_ref[0, :, 0].astype(jnp.float32)   # (page_size, hd)
+        v = v_ref[0, :, 0].astype(jnp.float32)
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
     # logical position of every row of this page; the single serving mask:
-    # scratch block 0, recycled-block staleness, and the last-page tail are
-    # all `kpos > pos` and die here
+    # scratch block 0, recycled-block staleness (codes AND scales), and
+    # the last-page tail are all `kpos > pos` and die here
     kpos = pg * page_size + jax.lax.broadcasted_iota(
         jnp.int32, s.shape, 1)
     s = jnp.where(kpos <= pos_ref[b], s, NEG_INF)
@@ -77,15 +104,21 @@ def _kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_attention_tpu(q, k_pool, v_pool, page_table, pos, *,
+                        k_scale=None, v_scale=None,
                         interpret: bool = False):
     """Fused paged decode attention.
 
     q          : (B, H, hd)  — the decode token's query per slot
-    k_pool/v_pool : (num_blocks, page_size, KV, hd) shared block pools
+    k_pool/v_pool : (num_blocks, page_size, KV, hd) shared block pools;
+                 with ``k_scale``/``v_scale`` given they are int8 code
+                 pools instead (last axis hd for int8, hd//2 for packed
+                 int4) and are dequantized in VMEM
     page_table : (B, n_pages) int32 physical block per logical page
                  (0 = reserved scratch block)
     pos        : (B,) int32 per-slot position of the decode token; the
                  kernel attends logical positions kpos <= pos[b]
+    k_scale/v_scale : optional (num_blocks, page_size, KV) f32 per-row
+                 per-kv-head scales of a quantized pool
     returns    : (B, H, hd) in q.dtype
     """
     B, H, hd = q.shape
@@ -93,6 +126,10 @@ def paged_attention_tpu(q, k_pool, v_pool, page_table, pos, *,
     n_pages = page_table.shape[-1]
     G = H // KV
     scale = 1.0 / (hd ** 0.5)
+    quantized = k_scale is not None
+    kv_bits = (kv_quant.infer_bits(k_pool.shape[-1], hd) if quantized
+               else kv_quant.PASSTHROUGH_BITS)
+    cols = k_pool.shape[-1]
 
     qh = q.reshape(B, KV, G, hd)
 
@@ -105,14 +142,27 @@ def paged_attention_tpu(q, k_pool, v_pool, page_table, pos, *,
         # slot's own pages are ever DMA'd
         return table[b, pg], 0, kv, 0
 
+    def scale_index(b, kv, pg, table, pos):
+        # scale tiles resolve through the SAME scalar-prefetched table, so
+        # a quantized page and its scale lane always travel together
+        return table[b, pg], 0, kv
+
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd), q_index),
+        pl.BlockSpec((1, page_size, 1, cols), kv_index),
+        pl.BlockSpec((1, page_size, 1, cols), kv_index),
+    ]
+    operands = [qh, k_pool, v_pool]
+    if quantized:
+        in_specs += [pl.BlockSpec((1, page_size, 1), scale_index),
+                     pl.BlockSpec((1, page_size, 1), scale_index)]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KV, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd), q_index),
-            pl.BlockSpec((1, page_size, 1, hd), kv_index),
-            pl.BlockSpec((1, page_size, 1, hd), kv_index),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, hd), q_index),
         scratch_shapes=[
             pltpu.VMEM((G,), jnp.float32),
@@ -122,10 +172,9 @@ def paged_attention_tpu(q, k_pool, v_pool, page_table, pos, *,
     )
     out = pl.pallas_call(
         functools.partial(_kernel, scale=scale, n_pages=n_pages,
-                          page_size=page_size),
+                          page_size=page_size, kv_bits=kv_bits),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
         interpret=interpret,
-    )(page_table.astype(jnp.int32), pos.astype(jnp.int32), qh,
-      k_pool, v_pool)
+    )(page_table.astype(jnp.int32), pos.astype(jnp.int32), *operands)
     return out.reshape(B, H, hd)

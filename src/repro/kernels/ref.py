@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import packing
+from repro.kernels import kv_quant
 
 
 def vq_dequant_matmul_ref(x, words, codebooks, *, d, code_bits,
@@ -31,7 +32,8 @@ def vq_assign_ref(x, hw, codebook):
     return jnp.argmin(dist, axis=-1).astype(jnp.int32)
 
 
-def paged_attention_ref(q, k_pool, v_pool, page_table, pos):
+def paged_attention_ref(q, k_pool, v_pool, page_table, pos,
+                        k_scale=None, v_scale=None):
     """Oracle for the fused paged decode kernel: gather the logical
     (B, n_pages*page_size) K/V view through the page table, mask logical
     positions kpos > pos per slot, dense softmax attention. This is exactly
@@ -40,14 +42,26 @@ def paged_attention_ref(q, k_pool, v_pool, page_table, pos):
 
     q (B, H, hd); pools (num_blocks, page_size, KV, hd);
     page_table (B, n_pages) int32; pos (B,) int32 -> (B, H, hd).
+
+    Quantized pools: pass ``k_scale``/``v_scale`` (num_blocks, page_size,
+    KV) f32 — pools then hold int8 codes (int4 packed two-per-byte when
+    their last axis is hd//2) and the gathered pages are dequantized
+    per-page with kernels/kv_quant.dequant_rows, the identical expression
+    the Pallas kernel evaluates in VMEM.
     """
     B, H, hd = q.shape
     page_size, KV = k_pool.shape[1], k_pool.shape[2]
     n_pages = page_table.shape[-1]
     G = H // KV
     Sk = n_pages * page_size
-    kg = k_pool[page_table].reshape(B, Sk, KV, hd)
-    vg = v_pool[page_table].reshape(B, Sk, KV, hd)
+    kg = k_pool[page_table].reshape(B, Sk, KV, -1)
+    vg = v_pool[page_table].reshape(B, Sk, KV, -1)
+    if k_scale is not None:
+        bits = kv_quant.infer_bits(k_pool.shape[-1], hd)
+        kg = kv_quant.dequant_rows(
+            kg, k_scale[page_table].reshape(B, Sk, KV), bits)
+        vg = kv_quant.dequant_rows(
+            vg, v_scale[page_table].reshape(B, Sk, KV), bits)
     qh = q.reshape(B, KV, G, hd)
     s = jnp.einsum("bkgh,bskh->bkgs", qh.astype(jnp.float32),
                    kg.astype(jnp.float32)) / jnp.sqrt(hd).astype(jnp.float32)

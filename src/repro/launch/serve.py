@@ -38,6 +38,12 @@ def main():
                          "XLA logical-view gather (default), or the fused "
                          "in-kernel page gather ('fused' = Pallas kernel "
                          "on TPU, its XLA oracle elsewhere)")
+    ap.add_argument("--kv-cache-bits", type=int, default=16,
+                    choices=[16, 8, 4],
+                    help="paged KV-cache storage: 16 = passthrough dtype, "
+                         "8/4 = int8/packed-int4 pages with per-row "
+                         "per-kv-head scales, dequantized on the fly by "
+                         "every read path (2-4x more pages per byte)")
     args = ap.parse_args()
 
     cfg = (SMOKE if args.smoke else ARCHS)[args.arch]
@@ -67,7 +73,20 @@ def main():
             for i in range(args.requests)]
     eng = Engine(model, params, max_batch=args.max_batch,
                  max_len=args.max_len,
-                 paged_attn_impl=args.paged_attn_impl)
+                 paged_attn_impl=args.paged_attn_impl,
+                 kv_cache_bits=args.kv_cache_bits)
+    if args.kv_cache_bits < 16:
+        import dataclasses as _dc
+
+        import jax.numpy as jnp
+
+        from repro.models.attention import KVQuantSpec
+        from repro.serve.paged_cache import pool_bytes_of
+        fp_layout = _dc.replace(eng.layout, kv=KVQuantSpec())
+        print(f"kv_cache_bits={args.kv_cache_bits}: per-layer pool "
+              f"{pool_bytes_of(model.cfg, eng.layout, jnp.float32)} B vs "
+              f"{pool_bytes_of(model.cfg, fp_layout, jnp.float32)} B fp32 "
+              f"at the same page count")
     eng.run(reqs)
     tok_s = eng.stats["tokens"] / max(eng.stats["wall_s"], 1e-9)
     print(f"served {len(reqs)} requests, {eng.stats['tokens']} tokens in "

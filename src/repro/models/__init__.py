@@ -1,0 +1,1 @@
+"""Model assemblies: families, attention/paged KV cache, layer stacks."""

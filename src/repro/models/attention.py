@@ -102,6 +102,32 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
+class KVQuantSpec:
+    """Storage format of the paged KV pool.
+
+    ``bits=16`` is passthrough: pages hold the cache dtype verbatim (the
+    default; bf16/fp32 depending on the engine). ``bits`` in {8, 4} stores
+    int8 code pages (int4 packed two-per-byte along the head dim) plus f32
+    per-row per-kv-head scales that page alongside them — page writes
+    quantize in-graph and every read path (gather / XLA oracle / fused
+    Pallas kernel) dequantizes on the fly through kernels/kv_quant.py, so
+    a logical fp view of the pool is never materialized.
+    """
+    bits: int = 16
+
+    def __post_init__(self):
+        assert self.bits in (16, 8, 4), self.bits
+
+    @property
+    def quantized(self) -> bool:
+        return self.bits < 16
+
+    def storage_cols(self, hd: int) -> int:
+        from repro.kernels import kv_quant
+        return kv_quant.storage_cols(hd, self.bits) if self.quantized else hd
+
+
+@dataclasses.dataclass(frozen=True)
 class PagedLayout:
     """Shape of a paged KV pool: ``num_blocks`` fixed-size blocks of
     ``page_size`` tokens each, shared by every serving slot.
@@ -110,9 +136,15 @@ class PagedLayout:
     slots point there, so their (discarded) decode writes never touch live
     data. The serve-side allocator (serve/paged_cache.py) hands out block
     ids 1..num_blocks-1.
+
+    ``kv`` is the page storage format (KVQuantSpec). Carrying it on the
+    layout means every family's ``init_cache`` builds quantized pools with
+    no signature change, and the cache leaves self-describe their format
+    to the read/write paths (the spec can never disagree with the storage).
     """
     num_blocks: int
     page_size: int
+    kv: KVQuantSpec = KVQuantSpec()
 
     def n_pages(self, max_len: int) -> int:
         return -(-max_len // self.page_size)
@@ -127,18 +159,34 @@ class PagedKVCache(NamedTuple):
     page table a cache *leaf* means the family assemblies' layer scans
     thread it exactly like any dense cache leaf — no forward-signature
     change beyond ``pos`` accepting per-slot vectors.
+
+    Quantized pools (KVQuantSpec bits < 16) store int8 code pages in
+    ``k``/``v`` (int4 packed two codes per byte, so the last axis is
+    hd//2) and per-row per-kv-head f32 scales in ``k_scale``/``v_scale``;
+    passthrough pools leave the scale leaves None (jax treats None as an
+    empty subtree, so the pytree contract of every existing caller is
+    unchanged).
     """
-    k: jax.Array           # (num_blocks, page_size, KV, hd)
-    v: jax.Array           # (num_blocks, page_size, KV, hd)
+    k: jax.Array           # (num_blocks, page_size, KV, hd | hd*bits/8)
+    v: jax.Array           # (num_blocks, page_size, KV, hd | hd*bits/8)
     page_table: jax.Array  # (B, n_pages) int32; 0 = scratch block
+    k_scale: jax.Array | None = None  # (num_blocks, page_size, KV) f32
+    v_scale: jax.Array | None = None  # (num_blocks, page_size, KV) f32
 
 
 def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
                      layout: PagedLayout, dtype=jnp.bfloat16) -> PagedKVCache:
+    table = jnp.zeros((batch, layout.n_pages(max_len)), jnp.int32)
+    if layout.kv.quantized:
+        shape = (layout.num_blocks, layout.page_size, cfg.n_kv_heads,
+                 layout.kv.storage_cols(cfg.hd))
+        sshape = shape[:-1]
+        return PagedKVCache(
+            jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8), table,
+            jnp.zeros(sshape, jnp.float32), jnp.zeros(sshape, jnp.float32))
     shape = (layout.num_blocks, layout.page_size, cfg.n_kv_heads, cfg.hd)
-    return PagedKVCache(
-        jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
-        jnp.zeros((batch, layout.n_pages(max_len)), jnp.int32))
+    return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                        table)
 
 
 # ---------------------------------------------------------------------------
@@ -392,10 +440,24 @@ def _paged_apply(p, cache: PagedKVCache, q, k, v, pos_arr, out_dtype,
     "gather", including width-1 tail chunks) — materializes the
     (B, n_pages*page_size, KV, hd) logical view per layer, the same
     working set as a dense cache read.
+
+    Quantized pools (the cache's scale leaves are present): fresh K/V rows
+    are quantized in-graph right here — per-row per-kv-head amax scales,
+    int8 codes (int4 packed two-per-byte) — and every read path dequants
+    on the fly. Stale codes AND stale scales in recycled/scratch blocks
+    decode to finite garbage that the same ``kpos <= pos`` mask discards.
+    The format is inferred from the cache leaves themselves (scales
+    present + stored column count), so it can never disagree with the
+    storage the engine allocated via PagedLayout.kv.
     """
+    from repro.kernels import kv_quant as kvq
+
     B, S = pos_arr.shape
     page_size = cache.k.shape[1]
     n_pages = cache.page_table.shape[-1]
+    quantized = cache.k_scale is not None
+    kv_bits = (kvq.infer_bits(cache.k.shape[-1], q.shape[-1])
+               if quantized else kvq.PASSTHROUGH_BITS)
     page = pos_arr // page_size
     blk = jnp.take_along_axis(
         cache.page_table, jnp.minimum(page, n_pages - 1), axis=1)  # (B, S)
@@ -404,9 +466,18 @@ def _paged_apply(p, cache: PagedKVCache, q, k, v, pos_arr, out_dtype,
     # overwrite live K/V
     blk = jnp.where(page < n_pages, blk, 0)
     off = pos_arr % page_size
-    ck = cache.k.at[blk, off].set(k.astype(cache.k.dtype))
-    cv = cache.v.at[blk, off].set(v.astype(cache.v.dtype))
-    new_cache = PagedKVCache(ck, cv, cache.page_table)
+    if quantized:
+        kc, ks = kvq.quantize_kv(k, kv_bits)
+        vc, vs = kvq.quantize_kv(v, kv_bits)
+        ck = cache.k.at[blk, off].set(kc)
+        cv = cache.v.at[blk, off].set(vc)
+        cks = cache.k_scale.at[blk, off].set(ks)
+        cvs = cache.v_scale.at[blk, off].set(vs)
+    else:
+        ck = cache.k.at[blk, off].set(k.astype(cache.k.dtype))
+        cv = cache.v.at[blk, off].set(v.astype(cache.v.dtype))
+        cks = cvs = None
+    new_cache = PagedKVCache(ck, cv, cache.page_table, cks, cvs)
 
     impl = impl or _PAGED_IMPL["impl"]
     if S == 1 and impl in ("xla", "pallas"):
@@ -414,6 +485,7 @@ def _paged_apply(p, cache: PagedKVCache, q, k, v, pos_arr, out_dtype,
         _PAGED_IMPL["counts"][impl] += 1
         o = ops.paged_attention(
             q[:, 0], ck, cv, cache.page_table, pos_arr[:, 0],
+            k_scale=cks, v_scale=cvs,
             use_pallas=(impl == "pallas"),
             interpret=jax.default_backend() != "tpu")
         return (o.reshape(B, 1, -1) @ p["wo"]).astype(out_dtype), new_cache
@@ -422,6 +494,11 @@ def _paged_apply(p, cache: PagedKVCache, q, k, v, pos_arr, out_dtype,
     Sk = n_pages * page_size
     kg = ck[cache.page_table].reshape(B, Sk, *ck.shape[2:])
     vg = cv[cache.page_table].reshape(B, Sk, *cv.shape[2:])
+    if quantized:
+        kg = kvq.dequant_rows(
+            kg, cks[cache.page_table].reshape(B, Sk, kg.shape[2]), kv_bits)
+        vg = kvq.dequant_rows(
+            vg, cvs[cache.page_table].reshape(B, Sk, vg.shape[2]), kv_bits)
     # per-slot causal + length mask over logical positions
     msk = jnp.arange(Sk)[None, None, :] <= pos_arr[:, :, None]  # (B, S, Sk)
     o = _plain_attention(q, kg, vg, msk[:, None, None])

@@ -1,0 +1,1 @@
+"""Paged continuous-batching serving engine (allocator, scheduler, steps)."""

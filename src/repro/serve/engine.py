@@ -29,6 +29,13 @@ slot views, page-table pushes). The engine executes:
 Recurrent/ssm state leaves (mamba h/conv, xLSTM C/n/m, enc-dec cross K/V)
 are O(1) per slot and stay slot-resident; only attention KV pages.
 
+Pages may be stored low-bit (``kv_cache_bits`` 8/4 — int8 or packed-int4
+codes + per-row per-kv-head scales, models/attention.KVQuantSpec): writes
+quantize in-graph at the existing scatter sites and every read path
+dequantizes on the fly, so the same pool bytes hold 2-4x the pages
+(``pool_bytes=`` sizes the allocator by budget instead of block count).
+
+
 This is the end-to-end driver used by examples/quantize_and_serve.py to
 demonstrate the paper's deployment claim: identical engine code serves
 bf16 and GPTVQ-compressed weights.
@@ -42,7 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.attention import PagedLayout
+from repro.models.attention import KVQuantSpec, PagedLayout
 from repro.models.model_zoo import Model
 from repro.serve import paged_cache as pc
 from repro.serve import sampling
@@ -65,7 +72,9 @@ class Engine:
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  max_len: int = 512, eos_id: int | None = None, seed: int = 0,
                  page_size: int = 16, num_blocks: int | None = None,
-                 prefill_chunk: int = 64, paged_attn_impl: str = "gather"):
+                 pool_bytes: int | None = None,
+                 prefill_chunk: int = 64, paged_attn_impl: str = "gather",
+                 kv_cache_bits: int = 16):
         """``paged_attn_impl`` selects the decode attention read path over
         the paged KV pool, threaded into the jitted decode closure (see
         models/attention._paged_apply): "gather" (XLA logical-view gather,
@@ -74,7 +83,20 @@ class Engine:
         "xla" (the kernel's oracle routed through the same fused
         dispatch), or "fused" (resolves to "pallas" on TPU and "xla"
         elsewhere — what production serving should pass). Prefill always
-        uses the gather path."""
+        uses the gather path.
+
+        ``kv_cache_bits`` selects the page storage format (16 =
+        passthrough dtype, 8/4 = int8/packed-int4 code pages with per-row
+        per-kv-head f32 scales; models/attention.KVQuantSpec). It rides on
+        the PagedLayout into every family's ``init_cache``, so all read
+        and write paths — including the fused kernel — see quantized
+        pages with no forward-signature change.
+
+        ``pool_bytes`` sizes the pool by a per-layer byte budget instead
+        of a block count: the allocator then exposes however many pages
+        fit, which is where a quantized cache converts its 2-4x byte
+        saving into concurrent-slot / context-length headroom. Mutually
+        exclusive with ``num_blocks``."""
         if paged_attn_impl == "fused":
             paged_attn_impl = ("pallas" if jax.default_backend() == "tpu"
                                else "xla")
@@ -86,16 +108,24 @@ class Engine:
         self.max_len = max_len
         self.eos_id = eos_id
         self.key = jax.random.PRNGKey(seed)
+        kv_spec = KVQuantSpec(bits=kv_cache_bits)
+        self.kv_cache_bits = kv_cache_bits
 
+        dtype = jnp.float32
         n_pages = -(-max_len // page_size)
-        if num_blocks is None:
+        if pool_bytes is not None:
+            assert num_blocks is None, \
+                "pass num_blocks or pool_bytes, not both"
+            num_blocks = pc.pool_blocks_for_bytes(
+                pool_bytes, model.cfg, page_size, kv_cache_bits, dtype)
+        elif num_blocks is None:
             # default pool holds every slot at full depth (+ scratch);
             # pass a smaller pool to oversubscribe and exercise preemption
             num_blocks = max_batch * n_pages + 1
-        self.layout = PagedLayout(num_blocks=num_blocks, page_size=page_size)
+        self.layout = PagedLayout(num_blocks=num_blocks,
+                                  page_size=page_size, kv=kv_spec)
         self.n_pages = n_pages
 
-        dtype = jnp.float32
         self.cache = model.init_cache(max_batch, max_len, dtype=dtype,
                                       paged=self.layout)
         self.axes = pc.batch_axes(model, max_batch, max_len, dtype,
@@ -103,7 +133,8 @@ class Engine:
         # B=1 template for resetting a slot's recurrent rows on admission
         # (tiny pool: slot_merge(shared=False) never reads template pools)
         self._slot_template = model.init_cache(
-            1, max_len, dtype=dtype, paged=PagedLayout(2, page_size))
+            1, max_len, dtype=dtype, paged=PagedLayout(2, page_size,
+                                                       kv=kv_spec))
 
         self.scheduler = Scheduler(
             max_batch=max_batch, max_len=max_len, page_size=page_size,

@@ -140,14 +140,43 @@ def restore_masked(old, new, axes, keep_mask):
 
 def push_page_table(cache, table: np.ndarray):
     """Broadcast the host (max_batch, n_pages) table into every
-    PagedKVCache leaf (replicated over any leading layer/group axes)."""
+    PagedKVCache leaf (replicated over any leading layer/group axes);
+    pools and quantized-page scale leaves pass through untouched."""
     t = jnp.asarray(table, jnp.int32)
 
     def f(leaf):
         if isinstance(leaf, PagedKVCache):
-            return PagedKVCache(
-                leaf.k, leaf.v, jnp.broadcast_to(t, leaf.page_table.shape))
+            return leaf._replace(
+                page_table=jnp.broadcast_to(t, leaf.page_table.shape))
         return leaf
 
     return jax.tree.map(f, cache,
                         is_leaf=lambda x: isinstance(x, PagedKVCache))
+
+
+# ---------------------------------------------------------------------------
+# byte-denominated pool sizing
+# ---------------------------------------------------------------------------
+
+def pool_blocks_for_bytes(pool_bytes: int, cfg, layout_page_size: int,
+                          kv_bits: int, dtype=jnp.bfloat16) -> int:
+    """Blocks a per-layer byte budget buys for this model's K/V pool
+    (incl. the reserved scratch block). Quantized pages cost
+    ``hd * bits/8 + 4`` bytes per (token, kv-head) per pool (codes + f32
+    scale) instead of ``hd * itemsize``, so the same budget exposes
+    ~2-4x the allocatable pages — the whole point of low-bit pages."""
+    from repro.kernels import kv_quant
+    dtype_bytes = jnp.zeros((), dtype).dtype.itemsize
+    return kv_quant.blocks_for_bytes(
+        pool_bytes, layout_page_size, cfg.n_kv_heads, cfg.hd, kv_bits,
+        dtype_bytes=dtype_bytes)
+
+
+def pool_bytes_of(cfg, layout: PagedLayout, dtype=jnp.bfloat16) -> int:
+    """Per-layer byte size of a pool with the given layout (both pools +
+    scale overhead; the page table is negligible and excluded)."""
+    from repro.kernels import kv_quant
+    dtype_bytes = jnp.zeros((), dtype).dtype.itemsize
+    return layout.num_blocks * kv_quant.page_bytes(
+        layout.page_size, cfg.n_kv_heads, cfg.hd, layout.kv.bits,
+        dtype_bytes=dtype_bytes)

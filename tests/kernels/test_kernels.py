@@ -12,6 +12,8 @@ from repro.kernels import ops, ref
 
 from tests.core.test_quant_core import make_problem
 
+pytestmark = pytest.mark.kernels
+
 
 def make_vq_inputs(key, *, N, K, d, bits, rows_per_band, group_cols, k_c=None):
     k_c = k_c or 2 ** (d * bits)

@@ -1,8 +1,10 @@
 """Paged serving subsystem tests: block allocator, chunked-prefill plan,
-capacity-aware admission, token accounting, preemption, and the
-mixed-length continuous-batching regression (the shared-max-position bug:
-interleaved admission of staggered-length prompts must be token-identical
-to serving each request alone)."""
+capacity-aware admission, token accounting, preemption, the mixed-length
+continuous-batching regression (the shared-max-position bug: interleaved
+admission of staggered-length prompts must be token-identical to serving
+each request alone), and quantized KV pages (int8/int4 pools: solo-vs-
+interleaved token identity, an explicit int8 logit-drift bound vs the
+fp32-cache anchor, and byte-denominated pool sizing headroom)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -255,6 +257,117 @@ class TestMixedLengthContinuousBatching:
             ref.append(tok)
             pos += 1
         assert ref == req.out_tokens
+
+
+class TestQuantizedKVPages:
+    """int8/int4 paged KV pools (KVQuantSpec): serving correctness on top
+    of the kernel-level differential suite — interleaved continuous
+    batching must stay token-identical to solo serving under a quantized
+    pool (quantization is deterministic per written row, so the codes a
+    slot produces do not depend on its neighbors), and int8 logits must
+    stay within an explicit drift bound of the fp32-cache anchor."""
+
+    @pytest.mark.parametrize("family,impl", [
+        ("dense", "gather"),   # portable write+read path
+        ("dense", "pallas"),   # fused in-kernel dequant, interpret mode
+        ("hybrid", "xla"),     # fused dispatch via the oracle + ssm state
+    ])
+    def test_interleaved_matches_solo_int8(self, family, impl):
+        model, params = family_model(family)
+        rng = np.random.RandomState(4)
+        V = model.cfg.vocab_size - 1
+        prompts = [rng.randint(0, V, size=s) for s in (5, 9, 3, 12)]
+        eng = Engine(model, params, max_batch=2, max_len=64, page_size=8,
+                     paged_attn_impl=impl, kv_cache_bits=8)
+        reqs = greedy_reqs(prompts)
+        eng.run(reqs)
+        assert all(len(r.out_tokens) == 6 for r in reqs)
+        for i, p in enumerate(prompts):
+            solo = Engine(model, params, max_batch=2, max_len=64,
+                          page_size=8, paged_attn_impl=impl,
+                          kv_cache_bits=8)
+            r = greedy_reqs([p], rid0=200 + i)[0]
+            solo.run([r])
+            assert r.out_tokens == reqs[i].out_tokens, (family, impl, i)
+
+    @pytest.mark.parametrize("family", ["dense", "hybrid"])
+    def test_int8_logit_drift_vs_fp32_anchor(self, family):
+        """Greedy decode over an int8-page pool, logits compared step by
+        step against the identical loop over a passthrough fp32 pool.
+        Measured drift is ~0.03-0.07 on a ~3-4 logit scale for these
+        models; 0.25 is a >3x margin that still fails on any masking or
+        scale-handling bug (those blow drift past the logit scale)."""
+        from repro.models.attention import KVQuantSpec, PagedLayout
+        from repro.serve import paged_cache as pc
+
+        model, params = family_model(family)
+        max_len, page_size = 48, 8
+        n_pages = max_len // page_size
+        rng = np.random.RandomState(5)
+        prompt = rng.randint(0, model.cfg.vocab_size - 1, size=9)
+        table = np.arange(1, n_pages + 1, dtype=np.int32)[None]
+
+        def logit_trace(bits):
+            layout = PagedLayout(n_pages + 1, page_size, KVQuantSpec(bits))
+            cache = model.init_cache(1, max_len, dtype=jnp.float32,
+                                     paged=layout)
+            cache = pc.push_page_table(cache, table)
+            logits, cache, _ = model.forward(
+                params, {"tokens": jnp.asarray(prompt, jnp.int32)[None]},
+                cache=cache, pos=jnp.zeros((1,), jnp.int32))
+            out, pos = [logits[0, -1]], len(prompt)
+            tok = int(jnp.argmax(logits[0, -1]))
+            for _ in range(6):
+                logits, cache, _ = model.forward(
+                    params, {"tokens": jnp.asarray([[tok]], jnp.int32)},
+                    cache=cache, pos=jnp.full((1,), pos, jnp.int32))
+                out.append(logits[0, -1])
+                tok = int(jnp.argmax(logits[0, -1]))
+                pos += 1
+            return out
+
+        anchor = logit_trace(16)
+        quant = logit_trace(8)
+        drift = max(float(jnp.max(jnp.abs(a - b)))
+                    for a, b in zip(anchor, quant))
+        assert drift < 0.25, (family, drift)
+
+    def test_pool_bytes_headroom(self):
+        """Byte-denominated sizing: at a fixed pool budget the quantized
+        formats must expose the page-count headroom that motivates them
+        (int8 ~3.5x, int4 ~6x over the fp32 CPU-host pools; both >= 2x)."""
+        from repro.serve.paged_cache import pool_blocks_for_bytes
+
+        model = dense_model()
+        cfg = model.cfg
+        budget = 1 << 20
+        fp = pool_blocks_for_bytes(budget, cfg, 8, 16, jnp.float32)
+        i8 = pool_blocks_for_bytes(budget, cfg, 8, 8, jnp.float32)
+        i4 = pool_blocks_for_bytes(budget, cfg, 8, 4, jnp.float32)
+        # at this smoke config's hd=16 the f32 scale overhead is 4/20 of
+        # an int8 row and 4/12 of an int4 row, so the exact ratios are
+        # 3.2x / 5.3x (not 4x / 8x) — the accounting must reflect that
+        assert i8 >= 3 * fp and i4 >= 5 * fp
+
+    def test_engine_pool_bytes_ctor(self):
+        """Engine(pool_bytes=...) sizes the allocator from bytes; the
+        quantized engine gets more usable pages from the same budget and
+        still serves correctly."""
+        model, params = family_model("dense")
+        cfg = model.cfg
+        from repro.kernels import kv_quant
+        budget = 40 * kv_quant.page_bytes(8, cfg.n_kv_heads, cfg.hd, 16,
+                                          dtype_bytes=4)
+        fp = Engine(model, params, max_batch=2, max_len=64, page_size=8,
+                    pool_bytes=budget)
+        q8 = Engine(model, params, max_batch=2, max_len=64, page_size=8,
+                    pool_bytes=budget, kv_cache_bits=8)
+        assert fp.scheduler.allocator.capacity == 39
+        assert q8.scheduler.allocator.capacity >= 2 * 39
+        rng = np.random.RandomState(6)
+        reqs = greedy_reqs([rng.randint(0, 255, size=7)], n=4)
+        q8.run(reqs)
+        assert len(reqs[0].out_tokens) == 4
 
 
 class TestPreemption:

@@ -187,3 +187,47 @@ def test_engine_fuzz_preemption_replay(seed):
         assert a.out_tokens == b.out_tokens, (seed, a.rid)
         assert len(b.out_tokens) == b.max_new_tokens
     assert tight.stats["tokens"] == sum(len(r.out_tokens) for r in out)
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_engine_fuzz_quantized_pool(seed):
+    """The same random admit/tick/preempt workload with kv_cache_bits=8:
+    the allocator/accounting invariants must hold between every engine
+    tick of an oversubscribed *quantized* pool (recycled blocks now carry
+    stale codes AND stale scales), and preemption-replay must reproduce
+    the exact greedy tokens of a solo run with the same spec — per-row
+    quantization is deterministic, so a replayed prefill re-creates
+    byte-identical pages no matter which physical blocks it lands on."""
+    import jax
+
+    from tests.serve.test_paged_serving import family_model
+
+    model, params = family_model("dense")
+    rng = np.random.RandomState(200 + seed)
+    V = model.cfg.vocab_size - 1
+    prompts = [rng.randint(0, V, size=int(rng.randint(1, 20)))
+               for _ in range(int(rng.randint(3, 6)))]
+    news = [int(rng.randint(1, 8)) for _ in prompts]
+
+    def run_checked(num_blocks):
+        eng = Engine(model, params, max_batch=2, max_len=64, page_size=4,
+                     num_blocks=num_blocks, kv_cache_bits=8)
+        reqs = [Request(rid=i, prompt=p, max_new_tokens=n)
+                for i, (p, n) in enumerate(zip(prompts, news))]
+        for r in reqs:
+            eng.scheduler.submit(r)
+        while eng.scheduler.has_work() and eng.ticks < 10_000:
+            eng.step()
+            check_invariants(eng.scheduler, eng.layout.num_blocks)
+        eng.stats = eng._snapshot(0.0)
+        return eng, reqs
+
+    tight, out = run_checked(num_blocks=9)   # 8 usable blocks for 2 slots
+    assert tight.stats["tokens"] == sum(len(r.out_tokens) for r in out)
+    for i, (p, n) in enumerate(zip(prompts, news)):
+        solo = Engine(model, params, max_batch=2, max_len=64, page_size=4,
+                      kv_cache_bits=8)
+        r = Request(rid=500 + i, prompt=p, max_new_tokens=n)
+        solo.run([r])
+        assert r.out_tokens == out[i].out_tokens, (seed, i)
+        assert len(r.out_tokens) == n
