@@ -22,6 +22,15 @@ a correctness emulator, not a perf path — the differential suite, not this
 bench, is what validates the kernel off-TPU). Each result row records
 which backend actually ran in ``fused_backend``.
 
+The ``vq_fused`` cells rerun the VQ-packed engine with
+``vq_matmul_impl="fused"`` (kernels/vq_dequant_matmul.py on TPU, the
+prep-folded XLA oracle elsewhere — ``vq_backend`` records which) against
+the ``vq`` dequant baseline (per-layer dense materialization inside the
+forward, the pre-fused path). Their headline ratio is the median of
+PAIRED per-pass wall ratios, same methodology as the kv8 cells, and the
+report carries the HBM payload accounting: bytes the packed weights
+stream per decode tick vs the dense fp32 weights they replace.
+
 Run: PYTHONPATH=src python benchmarks/serve_throughput.py --smoke
      [--out BENCH_serve.json]
 """
@@ -170,18 +179,21 @@ class BenchCase:
     pages the same bytes buy."""
 
     def __init__(self, kind, wtag, model, params, max_batch, max_len,
-                 kv_bits=16, pool_bytes=None, page_size=16):
+                 kv_bits=16, pool_bytes=None, page_size=16,
+                 vq_impl="gather"):
         self.kind, self.wtag, self.max_batch = kind, wtag, max_batch
         self.kv_bits = kv_bits
         self.backend = None
+        self.vq_backend = None
         self.allocatable_pages = None
         if kind.startswith("paged"):
             impl = "fused" if kind == "paged-fused" else "gather"
             self.eng = Engine(model, params, max_batch=max_batch,
                               max_len=max_len, paged_attn_impl=impl,
                               kv_cache_bits=kv_bits, pool_bytes=pool_bytes,
-                              page_size=page_size)
+                              page_size=page_size, vq_matmul_impl=vq_impl)
             self.backend = self.eng.paged_attn_impl
+            self.vq_backend = self.eng.vq_matmul_impl
             self.allocatable_pages = self.eng.scheduler.allocator.capacity
             self.runner = run_paged
         else:
@@ -210,6 +222,7 @@ class BenchCase:
         return {
             "engine": self.kind, "weights": self.wtag,
             "fused_backend": self.backend,
+            "vq_backend": self.vq_backend,
             "kv_bits": self.kv_bits,
             "allocatable_pages": self.allocatable_pages,
             "max_batch": self.max_batch, "tokens": self.tokens,
@@ -291,8 +304,12 @@ def main():
                       kv_bits=8, pool_bytes=budget, page_size=page_size),
             BenchCase("paged-fused", "fp32", model, params, mb, max_len,
                       kv_bits=4, pool_bytes=budget, page_size=page_size),
+            # the vq_fused cell runs IMMEDIATELY after its vq dequant
+            # baseline: the fused-over-dequant ratio is paired per-pass
             BenchCase("paged-fused", "vq", model, qparams, mb, max_len,
                       page_size=page_size),
+            BenchCase("paged-fused", "vq_fused", model, qparams, mb,
+                      max_len, page_size=page_size, vq_impl="fused"),
             BenchCase("legacy", "fp32", model, params, mb, max_len),
         ]
         for i in range(passes + 1):  # pass 0 is the cold/compile pass
@@ -333,14 +350,45 @@ def main():
     kv4_pages_b8 = round(pick("paged-fused", 8, kv=4)["allocatable_pages"]
                          / pick("paged-fused", 8)["allocatable_pages"], 3)
 
-    def paired_tps_ratio(mb, kv):
-        base = case_by(mb, 16).walls
-        quant = case_by(mb, kv).walls
-        ratios = sorted(b / q for b, q in zip(base, quant))
+    def paired_walls_ratio(case_base, case_new):
+        """Median of paired per-pass wall ratios: > 1 means ``case_new``
+        decodes faster than ``case_base`` (pass i of both ran back to
+        back, so ambient host noise cancels within each pair)."""
+        ratios = sorted(b / q for b, q in zip(case_base.walls,
+                                              case_new.walls))
         return round(ratios[len(ratios) // 2], 3)
+
+    def paired_tps_ratio(mb, kv):
+        return paired_walls_ratio(case_by(mb, 16), case_by(mb, kv))
 
     kv8_tps_b1 = paired_tps_ratio(1, 8)
     kv8_tps_b8 = paired_tps_ratio(8, 8)
+
+    # fused VQ serving path: paired ratios vs the dequant baseline (the
+    # 0.65x decode gap this path exists to close) and vs fp32 weights,
+    # plus the HBM payload the packed weights stream per decode tick vs
+    # the dense fp32 weights they replace (every weight is read once per
+    # token at decode, so bytes-per-tick is the roofline quantity)
+    from repro.core import vq_linear as vql_mod
+
+    vq_fused_over_dequant = {
+        mb: paired_walls_ratio(all_cases[(mb, "paged-fused", "vq", 16)],
+                               all_cases[(mb, "paged-fused", "vq_fused",
+                                          16)])
+        for mb in (1, 8)}
+    vq_fused_over_fp32 = {
+        mb: paired_walls_ratio(all_cases[(mb, "paged-fused", "fp32", 16)],
+                               all_cases[(mb, "paged-fused", "vq_fused",
+                                          16)])
+        for mb in (1, 8)}
+    prepped = vql_mod.prepare_fused_tree(qparams)
+    vq_leaves = [l for l in jax.tree.leaves(prepped,
+                                            is_leaf=vql_mod._is_vq_leaf)
+                 if vql_mod._is_vq_leaf(l)]
+    vq_payload = sum(l.payload_bytes() for l in vq_leaves)
+    dense_bytes = sum(  # leading stack dims (experts/layers) multiply
+        int(np.prod(l.words.shape[:-2])) * l.r * l.c * 4
+        for l in vq_leaves)
     report = {
         "bench": "serve_throughput",
         "config": cfg.name + ("-smoke" if args.smoke else ""),
@@ -356,12 +404,21 @@ def main():
         "kv4_pages_over_fp32_fixed_pool_bytes_b8": kv4_pages_b8,
         "kv8_fused_tokens_per_s_over_fp32_b1": kv8_tps_b1,
         "kv8_fused_tokens_per_s_over_fp32_b8": kv8_tps_b8,
+        "vq_fused_over_vq_dequant_tokens_per_s_b1": vq_fused_over_dequant[1],
+        "vq_fused_over_vq_dequant_tokens_per_s_b8": vq_fused_over_dequant[8],
+        "vq_fused_tokens_per_s_over_fp32_b1": vq_fused_over_fp32[1],
+        "vq_fused_tokens_per_s_over_fp32_b8": vq_fused_over_fp32[8],
+        "vq_payload_bytes": vq_payload,
+        "dense_weight_bytes": dense_bytes,
+        "hbm_bytes_saved_per_decode_tick": dense_bytes - vq_payload,
     }
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print(f"wrote {os.path.abspath(args.out)}; fused/legacy tok/s "
           f"@B1 = {fused_b1}, @B8 = {fused_b8}; kv8 pages/fp32 @B8 = "
-          f"{kv8_pages_b8} at {kv8_tps_b1}/{kv8_tps_b8} rel tok/s @B1/B8")
+          f"{kv8_pages_b8} at {kv8_tps_b1}/{kv8_tps_b8} rel tok/s @B1/B8; "
+          f"vq fused/dequant tok/s @B1 = {vq_fused_over_dequant[1]}, "
+          f"@B8 = {vq_fused_over_dequant[8]}")
 
 
 if __name__ == "__main__":

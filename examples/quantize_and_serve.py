@@ -7,8 +7,14 @@ run the identical `quantize_model` call on a non-transformer architecture
 (ssm/xlstm, hybrid mamba+attention, audio enc-dec, moe, vlm) and report
 its packed-vs-fp perplexity.
 
+The VQ serving passes run twice: once on the portable gather path
+(densify per layer inside the forward) and once with
+``--vq-matmul-impl fused`` — the fused VQ-dequant matmul serving path
+(Pallas kernel on TPU, prep-folded XLA oracle elsewhere), token-identical
+greedy outputs.
+
 Run: PYTHONPATH=src python examples/quantize_and_serve.py [--steps 200]
-     [--family ssm]
+     [--family ssm] [--vq-matmul-impl fused]
 """
 import argparse
 import time
@@ -62,6 +68,12 @@ def main():
                     choices=[16, 8, 4],
                     help="page storage for the quantized-KV serving pass "
                          "(int8/int4 pages, dequantized on the fly)")
+    ap.add_argument("--vq-matmul-impl", default="fused",
+                    choices=["gather", "fused", "xla", "pallas"],
+                    help="VQ weight execution for the fused serving pass: "
+                         "gather = densify per layer inside the forward; "
+                         "fused = the fused dequant-matmul path (Pallas "
+                         "kernel on TPU, prep-folded XLA oracle elsewhere)")
     args = ap.parse_args()
 
     cfg = ModelConfig(
@@ -119,9 +131,17 @@ def main():
 
     rng = np.random.RandomState(0)
     prompts = [rng.randint(0, cfg.vocab_size, size=8 + i % 5) for i in range(6)]
-    for tag, params in (("bf16/fp32", state.params), ("gptvq-packed", qparams)):
+    # the third pass serves the SAME packed checkpoint through the fused
+    # VQ-dequant matmul path (Engine preps VQLinear -> FusedVQLinear once
+    # at load; greedy outputs are token-identical to the gather pass)
+    passes = (("bf16/fp32", state.params, "gather"),
+              ("gptvq-packed", qparams, "gather"),
+              (f"gptvq-{args.vq_matmul_impl}", qparams,
+               args.vq_matmul_impl))
+    for tag, params, vq_impl in passes:
         print(f"== serving 6 batched requests [{tag}] ==")
-        eng = Engine(model, params, max_batch=4, max_len=128)
+        eng = Engine(model, params, max_batch=4, max_len=128,
+                     vq_matmul_impl=vq_impl)
         reqs = [Request(rid=i, prompt=p, max_new_tokens=16)
                 for i, p in enumerate(prompts)]
         eng.run(reqs)

@@ -17,25 +17,35 @@ from repro.kernels.vq_assign import vq_assign
 from repro.kernels.vq_dequant_matmul import vq_dequant_matmul
 
 
-def vql_matmul(x: jax.Array, vql: VQLinear, *, use_pallas: bool = True,
+def vql_matmul(x: jax.Array, vql, *, use_pallas: bool = True,
                interpret: bool = True, tile_m: int = 128, tile_n: int = 128,
                tile_k: int = 256) -> jax.Array:
-    """y = x @ W^T for a VQLinear (scale_block=0 layouts), fused on TPU."""
-    assert vql.scale_block == 0, "fold blockwise scales before the kernel"
-    C = vql.codebooks.astype(jnp.float32) * vql.cb_scale[..., None, None]
-    kw = dict(
-        d=vql.d, k_c=vql.k, code_bits=vql.code_bits,
-        container_bits=packing.container_bits(vql.code_bits),
-        rows_per_band=vql.rows_per_band, group_cols=vql.group_cols,
-    )
+    """y = x @ W^T for a VQLinear, fused on TPU.
+
+    Blockwise-normalized layouts (scale_block != 0) are folded here: the
+    scale plane is pre-expanded by core/vq_linear.prepare_fused and applied
+    inside the kernel tile — no layout is rejected anymore. Accepts an
+    already-prepped FusedVQLinear directly (serving path: fold once at
+    engine load instead of per call)."""
+    from repro.core import vq_linear as vql_mod
+
+    if isinstance(vql, VQLinear):
+        vql = vql_mod.prepare_fused(vql)
+        assert isinstance(vql, vql_mod.FusedVQLinear), \
+            "rows not packed on word boundaries — no fused layout"
     if use_pallas:
         return vq_dequant_matmul(
-            x, vql.words, C, tile_m=tile_m,
+            x, vql.words, vql.codebooks_f, vql.scales,
+            d=vql.d, k_c=vql.k, code_bits=vql.code_bits,
+            container_bits=packing.container_bits(vql.code_bits),
+            rows_per_band=vql.rows_per_band, group_cols=vql.group_cols,
+            scale_block=vql.scale_block, tile_m=tile_m,
             tile_n=min(tile_n, vql.r), tile_k=min(tile_k, vql.c),
-            interpret=interpret, **kw)
+            interpret=interpret)
     return ref.vq_dequant_matmul_ref(
-        x, vql.words, C, d=vql.d, code_bits=vql.code_bits,
-        rows_per_band=vql.rows_per_band, group_cols=vql.group_cols)
+        x, vql.words, vql.codebooks_f, vql.scales, d=vql.d,
+        code_bits=vql.code_bits, rows_per_band=vql.rows_per_band,
+        group_cols=vql.group_cols, scale_block=vql.scale_block)
 
 
 def paged_attention(q, k_pool, v_pool, page_table, pos, *,

@@ -8,9 +8,23 @@ from repro.core import packing
 from repro.kernels import kv_quant
 
 
-def vq_dequant_matmul_ref(x, words, codebooks, *, d, code_bits,
-                          rows_per_band, group_cols):
-    """Oracle: unpack -> gather -> dense matmul."""
+def vq_dequant_matmul_ref(x, words, codebooks, scales=None, *, d, code_bits,
+                          rows_per_band, group_cols, scale_block=0):
+    """Oracle: unpack -> gather -> (blockwise scale) -> dense matmul.
+
+    Same scale semantics as the Pallas kernel: ``scales`` is the
+    pre-expanded (N, K // scale_block) normalization plane. Leading stack
+    dims (MoE experts, scanned layers) vmap away."""
+    if words.ndim > 2:  # stacked leaves: (E/L/..., N, W) — map over the stack
+        out = []
+        for i in range(words.shape[0]):
+            out.append(vq_dequant_matmul_ref(
+                x[i], words[i],
+                codebooks[i] if codebooks.ndim > 4 else codebooks,
+                None if scales is None else scales[i],
+                d=d, code_bits=code_bits, rows_per_band=rows_per_band,
+                group_cols=group_cols, scale_block=scale_block))
+        return jnp.stack(out)
     M, K = x.shape
     N = words.shape[0]
     n_cg, n_bands, k_c, _ = codebooks.shape
@@ -22,6 +36,9 @@ def vq_dequant_matmul_ref(x, words, codebooks, *, d, code_bits,
     b_ix = jnp.arange(n_bands)[:, None, None, None]
     W = codebooks[g_ix, b_ix, idx4].reshape(n_bands, rows_per_band,
                                             n_cg, group_cols).reshape(N, K)
+    if scale_block:
+        W = (W.reshape(N, K // scale_block, scale_block)
+             * scales[:, :, None]).reshape(N, K)
     return x.astype(jnp.float32) @ W.T
 
 

@@ -14,11 +14,22 @@ Layout contract (matches core/vq_linear.VQLinear):
   x          (M, K)                      activations
   words      (N, K/d * bits / 32)        packed uint32 codes, row-major
   codebooks  (n_cg, n_bands, k_c, d)     fp32 (int8 codebook * scale folded)
+  scales     (N, K/Ns) fp32, optional    blockwise normalization plane
 with N = n_bands * rows_per_band, K = n_cg * group_cols.
-Tile sizes must align: tile_k % group_cols == 0 (or group_cols % tile_k == 0
-with tile_k % d == 0), tile_n % rows_per_band == 0.
-Blockwise normalization scales are folded by ops.py (scale_block=0 path) or
-applied via the optional scales ref.
+
+Shape handling (serving reality, not benchmark reality):
+  * M is padded up to a sublane-aligned tile (decode batches are 1..8 rows;
+    the old ``assert M % tile_m == 0`` rejected them) and the output is
+    sliced back.
+  * tile_n / tile_k are snapped DOWN to the largest band- / group-aligned
+    divisors of N / K, so ragged layer shapes never trip an assert. Row
+    bands always divide N and column groups always divide K, so a legal
+    tiling always exists; k-tiles additionally snap to the uint32 word
+    boundary of the packed rows.
+  * Blockwise normalization scales enter as a (N, K/Ns) fp32 plane
+    (pre-expanded once at engine load by core/vq_linear.prepare_fused) and
+    multiply the decoded tile in VMEM — scale_block != 0 recipes no longer
+    fall off the fused path.
 """
 from __future__ import annotations
 
@@ -29,8 +40,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, w_ref, c_ref, o_ref, *, d, k_c, code_bits, container_bits,
-            rows_per_band, n_k_tiles):
+def _kernel(x_ref, w_ref, c_ref, *rest, d, k_c, code_bits, container_bits,
+            rows_per_band, scale_block, n_k_tiles):
+    if scale_block:
+        s_ref, o_ref = rest
+    else:
+        (o_ref,) = rest
     kk = pl.program_id(2)
 
     @pl.when(kk == 0)
@@ -70,6 +85,10 @@ def _kernel(x_ref, w_ref, c_ref, o_ref, *, d, k_c, code_bits, container_bits,
         .transpose(1, 2, 0, 3, 4)
         .reshape(tn, tk)
     )
+    if scale_block:
+        s = s_ref[...]        # (tn, tk // Ns)
+        w_tile = (w_tile.reshape(tn, tk // scale_block, scale_block)
+                  * s[:, :, None]).reshape(tn, tk)
 
     o_ref[...] += jax.lax.dot_general(
         x.astype(jnp.float32), w_tile,
@@ -78,16 +97,48 @@ def _kernel(x_ref, w_ref, c_ref, o_ref, *, d, k_c, code_bits, container_bits,
     )
 
 
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _snap_tile_n(N: int, rows_per_band: int, tile_n: int) -> int:
+    """Largest band-aligned divisor of N that fits in tile_n (>= one band)."""
+    bands = N // rows_per_band
+    for bt in range(min(bands, max(1, tile_n // rows_per_band)), 0, -1):
+        if bands % bt == 0:
+            return bt * rows_per_band
+    return rows_per_band
+
+
+def _snap_tile_k(K: int, group_cols: int, d: int, lanes: int,
+                 tile_k: int) -> int:
+    """Largest group-aligned divisor of K fitting tile_k whose per-row code
+    count lands on a packed-word boundary; falls back to growing the tile
+    (full K always aligns — rows are packed whole)."""
+    n_cg = K // group_cols
+    cap = min(n_cg, max(1, tile_k // group_cols))
+    for gk in range(cap, 0, -1):
+        if n_cg % gk == 0 and (gk * group_cols // d) % lanes == 0:
+            return gk * group_cols
+    for gk in range(cap + 1, n_cg + 1):
+        if n_cg % gk == 0 and (gk * group_cols // d) % lanes == 0:
+            return gk * group_cols
+    raise ValueError(
+        f"no word-aligned k-tiling for K={K} cg={group_cols} d={d} "
+        f"lanes={lanes}")
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("d", "k_c", "code_bits", "container_bits",
-                     "rows_per_band", "group_cols", "tile_m", "tile_n",
-                     "tile_k", "interpret"),
+                     "rows_per_band", "group_cols", "scale_block", "tile_m",
+                     "tile_n", "tile_k", "interpret"),
 )
 def vq_dequant_matmul(
     x: jax.Array,
     words: jax.Array,
     codebooks: jax.Array,
+    scales: jax.Array | None = None,
     *,
     d: int,
     k_c: int,
@@ -95,39 +146,57 @@ def vq_dequant_matmul(
     container_bits: int,
     rows_per_band: int,
     group_cols: int,
+    scale_block: int = 0,
     tile_m: int = 128,
     tile_n: int = 128,
     tile_k: int = 256,
     interpret: bool = False,
 ) -> jax.Array:
-    """y = x @ dequant(words, codebooks).T ; returns (M, N) fp32."""
+    """y = x @ dequant(words, codebooks).T ; returns (M, N) fp32.
+
+    ``scales`` (required iff scale_block != 0) is the pre-expanded blockwise
+    normalization plane (N, K // scale_block)."""
     M, K = x.shape
     N = words.shape[0]
-    n_cg, n_bands = codebooks.shape[0], codebooks.shape[1]
-    tile_m = min(tile_m, M)
-    tile_n = min(tile_n, N)
-    tile_k = min(tile_k, K)
-    assert K % tile_k == 0 and N % tile_n == 0 and M % tile_m == 0
-    assert tile_k % group_cols == 0, (tile_k, group_cols)
-    assert tile_n % rows_per_band == 0
+    assert (scales is not None) == bool(scale_block)
     lanes = 32 // container_bits
+
+    tile_n = _snap_tile_n(N, rows_per_band, tile_n)
+    tile_k = _snap_tile_k(K, group_cols, d, lanes, tile_k)
+    if scale_block:
+        assert tile_k % scale_block == 0, (tile_k, scale_block)
+    # decode-shaped M: pad rows to a sublane-aligned tile, slice after
+    tile_m = min(tile_m, _round_up(M, 8))
+    Mp = _round_up(M, tile_m)
+    if Mp != M:
+        x = jnp.pad(x, ((0, Mp - M), (0, 0)))
+
     wk = tile_k // d // lanes  # words per row per k-tile
     gk = tile_k // group_cols
     bands_t = tile_n // rows_per_band
-    grid = (M // tile_m, N // tile_n, K // tile_k)
+    grid = (Mp // tile_m, N // tile_n, K // tile_k)
 
-    return pl.pallas_call(
+    in_specs = [
+        pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((tile_n, wk), lambda i, j, kk: (j, kk)),
+        pl.BlockSpec((gk, bands_t, k_c, d), lambda i, j, kk: (kk, j, 0, 0)),
+    ]
+    operands = [x, words, codebooks]
+    if scale_block:
+        in_specs.append(
+            pl.BlockSpec((tile_n, tile_k // scale_block),
+                         lambda i, j, kk: (j, kk)))
+        operands.append(scales)
+
+    y = pl.pallas_call(
         functools.partial(
             _kernel, d=d, k_c=k_c, code_bits=code_bits,
             container_bits=container_bits, rows_per_band=rows_per_band,
-            n_k_tiles=grid[2]),
+            scale_block=scale_block, n_k_tiles=grid[2]),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((tile_n, wk), lambda i, j, kk: (j, kk)),
-            pl.BlockSpec((gk, bands_t, k_c, d), lambda i, j, kk: (kk, j, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), jnp.float32),
         interpret=interpret,
-    )(x, words, codebooks)
+    )(*operands)
+    return y[:M] if Mp != M else y

@@ -38,6 +38,14 @@ def main():
                          "XLA logical-view gather (default), or the fused "
                          "in-kernel page gather ('fused' = Pallas kernel "
                          "on TPU, its XLA oracle elsewhere)")
+    ap.add_argument("--vq-matmul-impl", default="gather",
+                    choices=["gather", "fused", "xla", "pallas"],
+                    help="execution path for VQ-packed weight leaves: "
+                         "per-layer dense dequantization (default), or the "
+                         "fused VQ-dequant matmul over engine-prepped "
+                         "FusedVQLinear leaves ('fused' = Pallas kernel on "
+                         "TPU, its XLA oracle elsewhere); with --vq this "
+                         "skips the per-tick dense-weight materialization")
     ap.add_argument("--kv-cache-bits", type=int, default=16,
                     choices=[16, 8, 4],
                     help="paged KV-cache storage: 16 = passthrough dtype, "
@@ -74,7 +82,8 @@ def main():
     eng = Engine(model, params, max_batch=args.max_batch,
                  max_len=args.max_len,
                  paged_attn_impl=args.paged_attn_impl,
-                 kv_cache_bits=args.kv_cache_bits)
+                 kv_cache_bits=args.kv_cache_bits,
+                 vq_matmul_impl=args.vq_matmul_impl)
     if args.kv_cache_bits < 16:
         import dataclasses as _dc
 

@@ -341,9 +341,9 @@ def _project_qkv(p, cfg: ModelConfig, x, kv_x=None):
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     kv_x = x if kv_x is None else kv_x
     Skv = kv_x.shape[1]
-    q = x @ p["wq"]
-    k = kv_x @ p["wk"]
-    v = kv_x @ p["wv"]
+    q = cm.matmul(x, p["wq"])
+    k = cm.matmul(kv_x, p["wk"])
+    v = cm.matmul(kv_x, p["wv"])
     if cfg.qkv_bias:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(B, S, H, hd)
@@ -382,7 +382,7 @@ def apply(
         # cache-free path shares its math with the quantizer's Hessian tap
         o = pre_out(p, cfg, x, pos=pos, causal=causal, use_rope=use_rope,
                     flash_threshold=flash_threshold)
-        return (o @ p["wo"]).astype(x.dtype), None
+        return cm.matmul(o, p["wo"]).astype(x.dtype), None
     q, k, v = _project_qkv(p, cfg, x)
     pos_arr = cm.position_ids(pos, B, S)  # (B, S)
     if use_rope:
@@ -403,7 +403,7 @@ def apply(
         Sk = ck.shape[1]
         valid = (jnp.arange(Sk) <= jnp.asarray(pos))[None, None, None, None, :]
         o = _plain_attention(q, ck, cv, valid)
-        return (o.reshape(B, S, -1) @ p["wo"]).astype(x.dtype), new_cache
+        return cm.matmul(o.reshape(B, S, -1), p["wo"]).astype(x.dtype), new_cache
     k, v = ck[:, : S + 0], cv[:, : S + 0]  # prefill from position 0
 
     if S > flash_threshold:
@@ -416,7 +416,7 @@ def apply(
         else:
             msk = jnp.ones((1, 1, 1, S, Sk), bool)
         o = _plain_attention(q, k, v, msk)
-    y = o.reshape(B, S, -1) @ p["wo"]
+    y = cm.matmul(o.reshape(B, S, -1), p["wo"])
     return y.astype(x.dtype), new_cache
 
 
@@ -488,7 +488,7 @@ def _paged_apply(p, cache: PagedKVCache, q, k, v, pos_arr, out_dtype,
             k_scale=cks, v_scale=cvs,
             use_pallas=(impl == "pallas"),
             interpret=jax.default_backend() != "tpu")
-        return (o.reshape(B, 1, -1) @ p["wo"]).astype(out_dtype), new_cache
+        return cm.matmul(o.reshape(B, 1, -1), p["wo"]).astype(out_dtype), new_cache
     _PAGED_IMPL["counts"]["gather"] += 1
 
     Sk = n_pages * page_size
@@ -502,10 +502,10 @@ def _paged_apply(p, cache: PagedKVCache, q, k, v, pos_arr, out_dtype,
     # per-slot causal + length mask over logical positions
     msk = jnp.arange(Sk)[None, None, :] <= pos_arr[:, :, None]  # (B, S, Sk)
     o = _plain_attention(q, kg, vg, msk[:, None, None])
-    return (o.reshape(B, S, -1) @ p["wo"]).astype(out_dtype), new_cache
+    return cm.matmul(o.reshape(B, S, -1), p["wo"]).astype(out_dtype), new_cache
 
 
 def cross_apply(p, cfg: ModelConfig, x, memory, *, flash_threshold=2048):
     """Cross-attention (whisper decoder): keys/values from encoder memory."""
     o = cross_pre_out(p, cfg, x, memory, flash_threshold=flash_threshold)
-    return (o @ p["wo"]).astype(x.dtype)
+    return cm.matmul(o, p["wo"]).astype(x.dtype)

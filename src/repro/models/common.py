@@ -35,6 +35,48 @@ def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# weight application: dense arrays or fused VQ leaves
+# ---------------------------------------------------------------------------
+
+def matmul(x: jax.Array, w) -> jax.Array:
+    """``x @ w`` where ``w`` is a dense (in, out) kernel OR an engine-prepped
+    ``core/vq_linear.FusedVQLinear`` (fused VQ-dequant matmul; the dense
+    weight is never materialized in HBM on the Pallas path). Every model
+    matmul site routes through here so a single prep pass at engine load
+    switches the whole zoo onto the fused serving path."""
+    from repro.core import vq_linear as vql_mod
+
+    if isinstance(w, vql_mod.FusedVQLinear):
+        return vql_mod.fused_matmul(x, w).astype(x.dtype)
+    return x @ w
+
+
+def expert_matmul(x: jax.Array, w) -> jax.Array:
+    """Per-expert matmul: einsum('...ecd,edf->...ecf') for dense (E, d, f)
+    stacks, or a stacked FusedVQLinear (leading E on every leaf) mapped
+    expert-by-expert through the fused path — routed experts skip the
+    per-expert dequant round-trip."""
+    from repro.core import vq_linear as vql_mod
+
+    if not isinstance(w, vql_mod.FusedVQLinear):
+        if x.ndim == 3:
+            return jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype))
+        return jnp.einsum("becd,edf->becf", x, w.astype(x.dtype))
+
+    def one(args):
+        xe, we = args
+        return vql_mod.fused_matmul(xe, we)
+
+    if x.ndim == 3:  # (E, C, D)
+        y = jax.lax.map(one, (x.astype(jnp.float32), w))
+        return y.astype(x.dtype)
+    B, E, C, D = x.shape  # (B, E, C, D)
+    xt = x.transpose(1, 0, 2, 3).reshape(E, B * C, D)
+    y = jax.lax.map(one, (xt.astype(jnp.float32), w))
+    return y.reshape(E, B, C, -1).transpose(1, 0, 2, 3).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
 # norms
 # ---------------------------------------------------------------------------
 

@@ -148,8 +148,8 @@ def cache_specs(cfg: ModelConfig):
 def _cross_kv(layer_p, cfg, memory):
     B, S, _ = memory.shape
     KV, hd = cfg.n_kv_heads, cfg.hd
-    k = (memory @ layer_p["wk"]).reshape(B, S, KV, hd)
-    v = (memory @ layer_p["wv"]).reshape(B, S, KV, hd)
+    k = cm.matmul(memory, layer_p["wk"]).reshape(B, S, KV, hd)
+    v = cm.matmul(memory, layer_p["wv"]).reshape(B, S, KV, hd)
     if cfg.qkv_bias:
         k = k + layer_p["bk"].reshape(KV, hd)
         v = v + layer_p["bv"].reshape(KV, hd)
@@ -159,12 +159,12 @@ def _cross_kv(layer_p, cfg, memory):
 def _cross_attend(layer_p, cfg, x, ck, cv):
     B, S, D = x.shape
     H, hd = cfg.n_heads, cfg.hd
-    q = (x @ layer_p["wq"]).reshape(B, S, H, hd)
+    q = cm.matmul(x, layer_p["wq"]).reshape(B, S, H, hd)
     if cfg.qkv_bias:
         q = q + layer_p["bq"].reshape(H, hd)
     msk = jnp.ones((1, 1, 1, S, ck.shape[1]), bool)
     o = attention._plain_attention(q, ck, cv, msk)
-    return (o.reshape(B, S, H * hd) @ layer_p["wo"]).astype(x.dtype)
+    return cm.matmul(o.reshape(B, S, H * hd), layer_p["wo"]).astype(x.dtype)
 
 
 def dec_block_apply(layer_p, cfg: ModelConfig, h, memory):
@@ -187,10 +187,13 @@ def dec_block_apply(layer_p, cfg: ModelConfig, h, memory):
 
 def forward(params, cfg: ModelConfig, tokens, *, frames=None, memory=None,
             pos=0, cache=None, remat: bool = True, last_only: bool = False,
-            paged_impl: str | None = None):
+            paged_impl: str | None = None,
+            vq_matmul_impl: str | None = None):
     """Decoder forward. Provide ``frames`` (prefill/train; encoder runs) or a
     cache whose cross K/V were filled by a previous prefill."""
     from repro.core import vq_linear as vql_mod
+    if vq_matmul_impl is not None:
+        params = vql_mod.retag_fused(params, vq_matmul_impl)
     assert frames is not None or cache is not None
     top = {k: v for k, v in params.items()
            if k not in ("enc_layers", "dec_layers")}

@@ -193,11 +193,19 @@ def _loop_groups(params, cfg: ModelConfig, x, emb0, cache_in, has_cache,
 
 def forward(params, cfg: ModelConfig, tokens, *, pos=0, cache=None,
             extra_embeds=None, remat: bool = True, last_only: bool = False,
-            paged_impl: str | None = None):
+            paged_impl: str | None = None,
+            vq_matmul_impl: str | None = None):
     from repro.core import vq_linear as vql_mod
+    if vq_matmul_impl is not None:
+        params = vql_mod.retag_fused(params, vq_matmul_impl)
     n_groups, per = _groups(cfg)
     top = {k: v for k, v in params.items() if k not in ("mamba",)}
-    params = {**params, **vql_mod.dequant_tree(top, cm.DTYPES[cfg.dtype])}
+    # the shared attention block must be DENSE at apply time (per-group
+    # LoRA deltas are added onto the base q/k/v matrices), so fused leaves
+    # in the top tree densify here; the mamba trunk keeps its fused leaves
+    params = {**params,
+              **vql_mod.dequant_tree(top, cm.DTYPES[cfg.dtype],
+                                     densify_fused=True)}
     x = params["embed"][tokens]
     # pin batch sharding after the embedding gather — GSPMD otherwise falls
     # back to replication ("involuntary full rematerialization"), blowing
@@ -250,6 +258,6 @@ def forward(params, cfg: ModelConfig, tokens, *, pos=0, cache=None,
     if last_only:
         x = x[:, -1:]
     x = cm.rmsnorm(x, params["final_norm"], cfg.norm_eps)
-    logits = (x @ params["lm_head"]).astype(jnp.float32)
+    logits = cm.matmul(x, params["lm_head"]).astype(jnp.float32)
     new_cache = HybridCache(mamba=new_m, attn=new_kv) if cache is not None else None
     return logits, new_cache, jnp.zeros((), jnp.float32)

@@ -32,13 +32,13 @@ def pre_out(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
     """Hidden activations entering ``w_out`` — the Hessian tap for the down
     projection (core/adapters/*)."""
     act = cm.act_fn(cfg.activation)
-    h = x @ p["w_in"]
+    h = cm.matmul(x, p["w_in"])
     if cm.is_gated(cfg.activation):
-        h = act(x @ p["w_gate"]) * h
+        h = act(cm.matmul(x, p["w_gate"])) * h
     else:
         h = act(h)
     return h
 
 
 def apply(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
-    return (pre_out(p, cfg, x) @ p["w_out"]).astype(x.dtype)
+    return cm.matmul(pre_out(p, cfg, x), p["w_out"]).astype(x.dtype)

@@ -82,13 +82,13 @@ def _dispatch_one(xf, p, cfg: ModelConfig, C: int):
     hbuf = buf[:, :C]  # (E, C, D)
 
     act = cm.act_fn(cfg.activation)
-    h = jnp.einsum("ecd,edf->ecf", hbuf, p["w_in"].astype(xf.dtype))
+    h = cm.expert_matmul(hbuf, p["w_in"])
     if cm.is_gated(cfg.activation):
-        g = jnp.einsum("ecd,edf->ecf", hbuf, p["w_gate"].astype(xf.dtype))
+        g = cm.expert_matmul(hbuf, p["w_gate"])
         h = act(g) * h
     else:
         h = act(h)
-    out = jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(xf.dtype))  # (E,C,D)
+    out = cm.expert_matmul(h, p["w_out"])  # (E,C,D)
 
     out_pad = jnp.concatenate([out, jnp.zeros((E, 1, D), out.dtype)], axis=1)
     y_slots = out_pad[eid, sid].reshape(S, K, D)
@@ -184,8 +184,13 @@ def apply(p, cfg: ModelConfig, x: jax.Array):
     dbrx-132b prefill_32k temp 217 GB -> fits). Otherwise the pure-pjit
     batched dispatch below runs (CPU tests, degenerate meshes).
     """
+    from repro.core import vq_linear as vql_mod
+
     mesh = _ambient_mesh()
-    if mesh is not None and "model" in mesh.axis_names:
+    # the shard_map EP path moves raw weight arrays through in_specs —
+    # fused-VQ expert stacks stay on the pjit path (expert_matmul dispatch)
+    fused = isinstance(p["w_in"], vql_mod.FusedVQLinear)
+    if mesh is not None and "model" in mesh.axis_names and not fused:
         tp = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
         if cfg.n_experts % tp == 0 and tp > 1:
             return _apply_ep(p, cfg, x, mesh)
@@ -222,14 +227,14 @@ def apply(p, cfg: ModelConfig, x: jax.Array):
                             (("pod", "data"), "model", None, None))  # <- a2a
 
     act = cm.act_fn(cfg.activation)
-    h = jnp.einsum("becd,edf->becf", hbuf, p["w_in"].astype(x.dtype))
+    h = cm.expert_matmul(hbuf, p["w_in"])
     if cm.is_gated(cfg.activation):
-        g = jnp.einsum("becd,edf->becf", hbuf, p["w_gate"].astype(x.dtype))
+        g = cm.expert_matmul(hbuf, p["w_gate"])
         h = act(g) * h
     else:
         h = act(h)
     h = _maybe_constrain(h, (("pod", "data"), "model", None, None))
-    out = jnp.einsum("becf,efd->becd", h, p["w_out"].astype(x.dtype))
+    out = cm.expert_matmul(h, p["w_out"])
     # combine all-to-all back to data-sharded so the gather below is local
     out = _maybe_constrain(out, (("pod", "data"), None, None, None))
 

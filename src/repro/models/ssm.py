@@ -211,7 +211,7 @@ def pre_out(p, cfg: ModelConfig, x: jax.Array, cache: SSMCache | None = None):
     Bsz, S, D = x.shape
     d_inner, heads, conv_ch = _dims(cfg)
     N, hd, w = cfg.ssm_state, cfg.ssm_head_dim, cfg.ssm_conv_width
-    proj = x @ p["in_proj"]
+    proj = cm.matmul(x, p["in_proj"])
     z, xc, Bc, Cc, dt = _split_proj(cfg, proj)
     A = -jnp.exp(p["A_log"])  # (P,)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
@@ -253,5 +253,5 @@ def pre_out(p, cfg: ModelConfig, x: jax.Array, cache: SSMCache | None = None):
 def apply(p, cfg: ModelConfig, x: jax.Array, cache: SSMCache | None = None):
     """Mamba2 mixer. x: (B,S,D). Returns (y, new_cache)."""
     y, new_cache = pre_out(p, cfg, x, cache)
-    out = y @ p["out_proj"]
+    out = cm.matmul(y, p["out_proj"])
     return out.astype(x.dtype), new_cache

@@ -230,7 +230,7 @@ def embed_tokens(params, cfg: ModelConfig, tokens, extra_embeds=None):
 
 def unembed(params, cfg: ModelConfig, x):
     w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    return (x @ w).astype(jnp.float32)
+    return cm.matmul(x, w).astype(jnp.float32)
 
 
 def forward(
@@ -244,11 +244,17 @@ def forward(
     remat: bool = True,
     last_only: bool = False,
     paged_impl: str | None = None,
+    vq_matmul_impl: str | None = None,
 ):
     """Returns (logits, new_cache, aux_loss). ``paged_impl`` selects the
     decode attention backend over PagedKVCache leaves (see
-    attention._paged_apply); None falls back to the module default."""
+    attention._paged_apply); None falls back to the module default.
+    ``vq_matmul_impl`` re-stamps FusedVQLinear leaves ("gather" | "xla" |
+    "pallas" | "fused") — static metadata only, so each jitted closure
+    bakes its own VQ backend (see core/vq_linear)."""
     from repro.core import vq_linear as vql_mod
+    if vq_matmul_impl is not None:
+        params = vql_mod.retag_fused(params, vq_matmul_impl)
     top = {k: v for k, v in params.items() if k != "layers"}
     params = {**params, **vql_mod.dequant_tree(top, cm.DTYPES[cfg.dtype])}
     x = embed_tokens(params, cfg, tokens, extra_embeds)

@@ -136,23 +136,23 @@ def mlstm_pre_down(p, cfg: ModelConfig, x, cache: MLSTMCache | None = None):
     """
     B, S, D = x.shape
     d_inner, H, hd = _mlstm_dims(cfg)
-    u = x @ p["up"]
-    g = x @ p["up_gate"]
-    q = (u @ p["wq"]).reshape(B, S, H, hd)
-    k = (u @ p["wk"]).reshape(B, S, H, hd)
-    v = (u @ p["wv"]).reshape(B, S, H, hd)
+    u = cm.matmul(x, p["up"])
+    g = cm.matmul(x, p["up_gate"])
+    q = cm.matmul(u, p["wq"]).reshape(B, S, H, hd)
+    k = cm.matmul(u, p["wk"]).reshape(B, S, H, hd)
+    v = cm.matmul(u, p["wv"]).reshape(B, S, H, hd)
     i_raw = u.astype(jnp.float32) @ p["w_i"] + p["b_i"]
     f_raw = u.astype(jnp.float32) @ p["w_f"] + p["b_f"]
     state = cache if cache is not None else mlstm_cache(cfg, B)
     h, new_state = _mlstm_core(q, k, v, i_raw, f_raw, state)
-    o = jax.nn.sigmoid(u @ p["w_o"])
+    o = jax.nn.sigmoid(cm.matmul(u, p["w_o"]))
     h = (h.reshape(B, S, d_inner).astype(x.dtype) * o) * jax.nn.silu(g)
     return u, h, new_state
 
 
 def mlstm_apply(p, cfg: ModelConfig, x, cache: MLSTMCache | None = None):
     _, h, new_state = mlstm_pre_down(p, cfg, x, cache)
-    y = h @ p["down"]
+    y = cm.matmul(h, p["down"])
     return y.astype(x.dtype), (new_state if cache is not None else None)
 
 
@@ -224,10 +224,10 @@ def _blockdiag(h, R):
 
 def slstm_apply(p, cfg: ModelConfig, x, cache: SLSTMCache | None = None):
     B, S, D = x.shape
-    wz = x @ p["w_z"] + p["b_z"]
-    wi = x @ p["w_i"] + p["b_i"]
-    wf = x @ p["w_f"] + p["b_f"]
-    wo = x @ p["w_o"] + p["b_o"]
+    wz = cm.matmul(x, p["w_z"]) + p["b_z"]
+    wi = cm.matmul(x, p["w_i"]) + p["b_i"]
+    wf = cm.matmul(x, p["w_f"]) + p["b_f"]
+    wo = cm.matmul(x, p["w_o"]) + p["b_o"]
     state = cache if cache is not None else slstm_cache(cfg, B)
 
     def step(carry, xs):
@@ -264,9 +264,10 @@ def slstm_apply(p, cfg: ModelConfig, x, cache: SLSTMCache | None = None):
 
 def slstm_ffn_pre_out(p, cfg: ModelConfig, x):
     """Gated-FFN hidden state entering ``ffn.w_out`` (Hessian tap)."""
-    return jax.nn.silu(x @ p["ffn"]["w_gate"]) * (x @ p["ffn"]["w_in"])
+    return (jax.nn.silu(cm.matmul(x, p["ffn"]["w_gate"]))
+            * cm.matmul(x, p["ffn"]["w_in"]))
 
 
 def slstm_ffn(p, cfg: ModelConfig, x):
     h = slstm_ffn_pre_out(p, cfg, x)
-    return (h @ p["ffn"]["w_out"]).astype(x.dtype)
+    return cm.matmul(h, p["ffn"]["w_out"]).astype(x.dtype)

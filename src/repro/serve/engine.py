@@ -74,7 +74,7 @@ class Engine:
                  page_size: int = 16, num_blocks: int | None = None,
                  pool_bytes: int | None = None,
                  prefill_chunk: int = 64, paged_attn_impl: str = "gather",
-                 kv_cache_bits: int = 16):
+                 kv_cache_bits: int = 16, vq_matmul_impl: str = "gather"):
         """``paged_attn_impl`` selects the decode attention read path over
         the paged KV pool, threaded into the jitted decode closure (see
         models/attention._paged_apply): "gather" (XLA logical-view gather,
@@ -96,12 +96,34 @@ class Engine:
         of a block count: the allocator then exposes however many pages
         fit, which is where a quantized cache converts its 2-4x byte
         saving into concurrent-slot / context-length headroom. Mutually
-        exclusive with ``num_blocks``."""
+        exclusive with ``num_blocks``.
+
+        ``vq_matmul_impl`` selects the execution path for VQ-packed
+        (GPTVQ) weight leaves: "gather" (per-layer-slice dense
+        materialization via core/vq_linear.dequant_tree — the portable
+        default), "xla" (fused-boundary reconstruct-per-matmul over
+        engine-prepped FusedVQLinear leaves), "pallas" (the fused
+        VMEM-decode kernel, kernels/vq_dequant_matmul.py), or "fused"
+        (resolves to "pallas" on TPU, "xla" elsewhere). Any non-"gather"
+        choice runs the one-time ``prepare_fused_tree`` prep pass at
+        construction — cb_scale folding, code unpack+offset folding, and
+        blockwise-scale-plane expansion all happen here ONCE, so per-tick
+        work is zero (see core/vq_linear's module docstring for the
+        contract)."""
+        from repro.core import vq_linear as vql_mod
+
         if paged_attn_impl == "fused":
             paged_attn_impl = ("pallas" if jax.default_backend() == "tpu"
                                else "xla")
         assert paged_attn_impl in ("gather", "xla", "pallas"), paged_attn_impl
         self.paged_attn_impl = paged_attn_impl
+        if vq_matmul_impl == "fused":
+            vq_matmul_impl = ("pallas" if jax.default_backend() == "tpu"
+                              else "xla")
+        assert vq_matmul_impl in ("gather", "xla", "pallas"), vq_matmul_impl
+        self.vq_matmul_impl = vq_matmul_impl
+        if vq_matmul_impl != "gather" and vql_mod.tree_has_vq(params):
+            params = vql_mod.prepare_fused_tree(params, impl=vq_matmul_impl)
         self.model = model
         self.params = params
         self.max_batch = max_batch
@@ -152,10 +174,13 @@ class Engine:
         # are never read again).
         self._decode_fn = jax.jit(
             make_paged_decode(model, self.axes,
-                              paged_impl=self.paged_attn_impl),
+                              paged_impl=self.paged_attn_impl,
+                              vq_impl=self.vq_matmul_impl),
             donate_argnums=(2,))
-        self._prefill_fn = jax.jit(make_slot_prefill(model, self.axes),
-                                   donate_argnums=(2,))
+        self._prefill_fn = jax.jit(
+            make_slot_prefill(model, self.axes,
+                              vq_impl=self.vq_matmul_impl),
+            donate_argnums=(2,))
         self._sample = jax.jit(
             lambda k, logits, t: sampling.sample(k, logits, temperature=t))
 

@@ -1,10 +1,12 @@
 """Prefill / decode step builders.
 
-Parameter trees may contain ``VQLinear`` leaves (bit-packed GPTVQ weights);
-the model assemblies dequantize them per layer-slice inside their layer scan
-(core/vq_linear.dequant_tree), so these steps are agnostic to whether the
-model is dense bf16 or VQ-compressed — the paper's technique is a drop-in
-serving format.
+Parameter trees may contain ``VQLinear`` leaves (bit-packed GPTVQ
+weights), dequantized per layer-slice inside the layer scan
+(core/vq_linear.dequant_tree — the "gather" path), or engine-prepped
+``FusedVQLinear`` leaves whose matmuls run fused (``vq_impl`` "xla" /
+"pallas": the dense weight never materializes; see core/vq_linear). Either
+way these steps are agnostic to whether the model is dense bf16 or
+VQ-compressed — the paper's technique is a drop-in serving format.
 
 ``make_paged_decode`` / ``make_slot_prefill`` are the paged serving
 engine's fully-compiled tick functions (per-slot position vectors, page
@@ -45,7 +47,8 @@ def make_decode(model: Model):
     return decode
 
 
-def make_paged_decode(model: Model, axes, paged_impl: str = "gather"):
+def make_paged_decode(model: Model, axes, paged_impl: str = "gather",
+                      vq_impl: str | None = None):
     """One fully-compiled decode tick over a paged cache. ``axes`` is the
     per-leaf batch-axis tree from paged_cache.batch_axes. Folding the
     page-table refresh, the mid-prefill row restore, the PRNG split, AND
@@ -57,7 +60,10 @@ def make_paged_decode(model: Model, axes, paged_impl: str = "gather"):
 
     ``paged_impl`` is captured by the closure and threaded through the
     forward to attention._paged_apply — each engine's jitted decode bakes
-    its own backend, no module-global mutation involved."""
+    its own backend, no module-global mutation involved. ``vq_impl`` does
+    the same for VQ-packed weight leaves (core/vq_linear.fused_matmul
+    dispatch): the impl re-stamp is static metadata, so the backend is
+    part of the traced graph."""
     from repro.serve import paged_cache as pc
     from repro.serve import sampling
 
@@ -71,7 +77,7 @@ def make_paged_decode(model: Model, axes, paged_impl: str = "gather"):
         cache = pc.push_page_table(cache, table)
         logits, new_cache, _ = model.forward(
             params, {"tokens": tokens}, cache=cache, pos=pos,
-            paged_impl=paged_impl)
+            paged_impl=paged_impl, vq_matmul_impl=vq_impl)
         key, sub = jax.random.split(key)
         nxt = sampling.sample(sub, logits[:, -1], temperature=temps)
         return nxt, key, pc.restore_masked(cache, new_cache, axes,
@@ -80,7 +86,7 @@ def make_paged_decode(model: Model, axes, paged_impl: str = "gather"):
     return decode
 
 
-def make_slot_prefill(model: Model, axes):
+def make_slot_prefill(model: Model, axes, vq_impl: str | None = None):
     """One fully-compiled chunked-prefill step: push the page table, slice
     a B=1 view of ``slot`` (traced — one trace serves every slot), run the
     chunk from position ``start``, merge the view back. Retraces only per
@@ -95,7 +101,8 @@ def make_slot_prefill(model: Model, axes):
         # S == 1 shape test
         logits, new_view, _ = model.forward(
             params, {"tokens": tokens}, cache=view,
-            pos=jnp.full((1,), start, jnp.int32), paged_impl="gather")
+            pos=jnp.full((1,), start, jnp.int32), paged_impl="gather",
+            vq_matmul_impl=vq_impl)
         # only the last *real* token's logits ever get sampled (chunks may
         # be padded up to their power-of-two bucket) — returning (V,)
         # instead of (1, C, V) keeps the host transfer flat

@@ -87,6 +87,170 @@ class TestVQDequantMatmul:
         np.testing.assert_allclose(np.asarray(y_kernel), np.asarray(y_dense),
                                    rtol=2e-2, atol=2e-2)
 
+    @pytest.mark.parametrize("M", [1, 3, 5, 17])
+    def test_decode_shaped_m(self, M):
+        """Decode batches (M = 1..batch, not tile-aligned) must not trip the
+        tile_m divisibility assert: the wrapper pads M up and slices back."""
+        key = jax.random.PRNGKey(6)
+        words, C, code_bits = make_vq_inputs(
+            key, N=64, K=256, d=2, bits=2, rows_per_band=8, group_cols=256)
+        x = jax.random.normal(jax.random.PRNGKey(7), (M, 256))
+        from repro.kernels.vq_dequant_matmul import vq_dequant_matmul
+        y = vq_dequant_matmul(
+            x, words, C, d=2, k_c=16, code_bits=code_bits,
+            container_bits=4, rows_per_band=8, group_cols=256,
+            tile_m=128, tile_n=64, tile_k=256, interpret=True)
+        assert y.shape == (M, 64)
+        y_ref = ref.vq_dequant_matmul_ref(
+            x, words, C, d=2, code_bits=code_bits, rows_per_band=8,
+            group_cols=256)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_ragged_n_k_snap_to_layout(self):
+        """N/K not divisible by the requested tile sizes: the wrapper snaps
+        tile_n to a band multiple and tile_k to a lane-aligned group
+        multiple instead of asserting."""
+        key = jax.random.PRNGKey(8)
+        words, C, code_bits = make_vq_inputs(
+            key, N=96, K=384, d=2, bits=2, rows_per_band=8, group_cols=128)
+        x = jax.random.normal(jax.random.PRNGKey(9), (4, 384))
+        from repro.kernels.vq_dequant_matmul import vq_dequant_matmul
+        y = vq_dequant_matmul(
+            x, words, C, d=2, k_c=16, code_bits=code_bits,
+            container_bits=4, rows_per_band=8, group_cols=128,
+            tile_m=128, tile_n=128, tile_k=256, interpret=True)
+        y_ref = ref.vq_dequant_matmul_ref(
+            x, words, C, d=2, code_bits=code_bits, rows_per_band=8,
+            group_cols=128)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("Ns,tk", [(16, 256), (64, 128), (32, 64)])
+    def test_blockwise_scales(self, Ns, tk):
+        """scale_block != 0: the pre-expanded (N, K/Ns) normalization plane
+        is applied to the decoded tile inside the kernel."""
+        key = jax.random.PRNGKey(10)
+        words, C, code_bits = make_vq_inputs(
+            key, N=64, K=512, d=2, bits=2, rows_per_band=8, group_cols=256)
+        scales = jnp.exp2(jax.random.normal(
+            jax.random.PRNGKey(11), (64, 512 // Ns)) * 0.5)
+        x = jax.random.normal(jax.random.PRNGKey(12), (8, 512))
+        from repro.kernels.vq_dequant_matmul import vq_dequant_matmul
+        y = vq_dequant_matmul(
+            x, words, C, scales, d=2, k_c=16, code_bits=code_bits,
+            container_bits=4, rows_per_band=8, group_cols=256,
+            scale_block=Ns, tile_m=8, tile_n=64, tile_k=tk, interpret=True)
+        y_ref = ref.vq_dequant_matmul_ref(
+            x, words, C, scales, d=2, code_bits=code_bits, rows_per_band=8,
+            group_cols=256, scale_block=Ns)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestFusedVQLinear:
+    """prepare_fused / fused_matmul: the engine-load prep pass and the
+    per-matmul dispatch that serve/engine.Engine(vq_matmul_impl=...) uses."""
+
+    def _quantized(self, *, scale_block=0, r=64, c=256):
+        W, X, H, U = make_problem(r=r, c=c)
+        cfg = VQConfig(d=2, bits_per_dim=2, group_size=2048, em_iters=8,
+                       codebook_update_iters=0, scale_block=scale_block)
+        return vql_mod.quantize_array(W, H, cfg)
+
+    @pytest.mark.parametrize("sb", [0, 8])
+    def test_prepare_matches_dequantize(self, sb):
+        """fused_dequantize(prepare_fused(v)) == dequantize(v): prep folds
+        cb_scale + the exp2 scale plane without changing the weights."""
+        vql = self._quantized(scale_block=sb)
+        fvl = vql_mod.prepare_fused(vql)
+        assert isinstance(fvl, vql_mod.FusedVQLinear)
+        assert (fvl.scales is not None) == bool(sb)
+        W_f = vql_mod.fused_dequantize(fvl, jnp.float32)
+        W_g = vql_mod.dequantize(vql, jnp.float32)
+        np.testing.assert_allclose(np.asarray(W_f), np.asarray(W_g),
+                                   rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("sb", [0, 8])
+    @pytest.mark.parametrize("impl", ["xla", "pallas"])
+    def test_fused_matmul_matches_dense(self, sb, impl):
+        """Both fused impls == x @ dequantize(v).T, with and without
+        blockwise normalization, for decode-shaped and prefill-shaped x."""
+        vql = self._quantized(scale_block=sb)
+        fvl = vql_mod.prepare_fused(vql)
+        W = vql_mod.dequantize(vql, jnp.float32)
+        for M in (1, 8):
+            x = jax.random.normal(jax.random.PRNGKey(M), (M, 256))
+            y = vql_mod.fused_matmul(x, fvl, impl=impl, interpret=True,
+                                     tile_n=64, tile_k=256)
+            np.testing.assert_allclose(
+                np.asarray(y), np.asarray(x @ W.T), rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("impl", ["xla", "pallas"])
+    def test_stacked_expert_leaves(self, impl):
+        """MoE-style stacked leaves (leading E on every array) route through
+        models/common.expert_matmul and match the per-expert dense einsum."""
+        from repro.models import common as cm
+        v1, v2 = self._quantized(), self._quantized(r=64, c=256)
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), v1, v2)
+        fvl = vql_mod.prepare_fused(stacked, impl=impl)
+        assert isinstance(fvl, vql_mod.FusedVQLinear)
+        assert fvl.words.shape[0] == 2
+        x = jax.random.normal(jax.random.PRNGKey(5), (2, 4, 256))
+        y = cm.expert_matmul(x, fvl)
+        W = jnp.stack([vql_mod.dequantize(v, jnp.float32).T
+                       for v in (v1, v2)])  # (E, in, out)
+        y_ref = jnp.einsum("ecd,edf->ecf", x, W)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_dispatch_counters(self):
+        """_VQ_IMPL counts pin which path traced: fused_matmul bumps its
+        impl; dequant_tree bumps "gather" per densified VQLinear leaf."""
+        vql = self._quantized()
+        fvl = vql_mod.prepare_fused(vql)
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 256))
+        counts = vql_mod._VQ_IMPL["counts"]
+        before = dict(counts)
+        vql_mod.fused_matmul(x, fvl, impl="xla")
+        assert counts["xla"] == before["xla"] + 1
+        vql_mod.fused_matmul(x, fvl, impl="pallas", interpret=True,
+                             tile_n=64, tile_k=256)
+        assert counts["pallas"] == before["pallas"] + 1
+        vql_mod.dequant_tree({"w": vql}, jnp.float32)
+        assert counts["gather"] == before["gather"] + 1
+        # leaf stamp is the default when no explicit impl is passed
+        before = dict(counts)
+        vql_mod.fused_matmul(x, vql_mod.prepare_fused(vql, impl="xla"))
+        assert counts["xla"] == before["xla"] + 1
+
+    def test_unaligned_rows_stay_gather(self):
+        """Rows not packed on uint32 word boundaries (flat-packed leaf):
+        prepare_fused must leave the leaf as VQLinear (gather path) rather
+        than produce a layout the kernel cannot tile."""
+        r, c, d, k = 4, 24, 2, 16  # nspans=12, lanes=8 -> unaligned
+        code_bits = 4
+        codes = jax.random.randint(jax.random.PRNGKey(1), (r, c // d), 0, k)
+        # 48 codes / 8 lanes = 6 words: rows straddle word boundaries, so
+        # the pack is flat (1, n_words) rather than per-row
+        words = packing.pack(codes.reshape(-1), code_bits).reshape(1, -1)
+        vql = vql_mod.VQLinear(
+            words=words,
+            codebooks=jax.random.randint(
+                jax.random.PRNGKey(2), (2, 2, k, d), -127, 128
+            ).astype(jnp.int8),
+            cb_scale=jnp.full((2, 2), 0.05, jnp.float32),
+            scale_sint=jnp.zeros((2, r, 1), jnp.int8),
+            scale_a=jnp.zeros((2,), jnp.float32),
+            scale_z=jnp.zeros((2,), jnp.float32),
+            r=r, c=c, d=d, k=k, group_cols=12, rows_per_band=2)
+        out = vql_mod.prepare_fused(vql)
+        assert out is vql
+        tree = vql_mod.prepare_fused_tree({"w": vql})
+        assert isinstance(tree["w"], vql_mod.VQLinear)
+        dense = vql_mod.dequant_tree(tree, jnp.float32)
+        assert dense["w"].shape == (c, r)
+
 
 class TestVQAssign:
     @pytest.mark.parametrize("n,d,k", [(256, 2, 16), (1024, 4, 64),

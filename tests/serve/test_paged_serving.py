@@ -2,9 +2,12 @@
 capacity-aware admission, token accounting, preemption, the mixed-length
 continuous-batching regression (the shared-max-position bug: interleaved
 admission of staggered-length prompts must be token-identical to serving
-each request alone), and quantized KV pages (int8/int4 pools: solo-vs-
+each request alone), quantized KV pages (int8/int4 pools: solo-vs-
 interleaved token identity, an explicit int8 logit-drift bound vs the
-fp32-cache anchor, and byte-denominated pool sizing headroom)."""
+fp32-cache anchor, and byte-denominated pool sizing headroom), and the
+fused VQ-dequant matmul serving path (vq_matmul_impl: gather/xla/pallas
+greedy token identity over VQ-packed checkpoints + dispatch-counter
+pinning)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -368,6 +371,99 @@ class TestQuantizedKVPages:
         reqs = greedy_reqs([rng.randint(0, 255, size=7)], n=4)
         q8.run(reqs)
         assert len(reqs[0].out_tokens) == 4
+
+
+_VQ_PACKED: dict = {}
+
+
+def vq_packed_params(family: str):
+    """Cached VQ-packed (GPTVQ + pack) params per family — the checkpoints
+    the fused serving tests decode against."""
+    if family not in _VQ_PACKED:
+        from repro.core.bpv import VQConfig
+        from repro.core.pipeline import quantize_model
+        from repro.data.calibration import calibration_tokens
+
+        model, params = family_model(family)
+        calib = calibration_tokens(model.cfg.vocab_size, n_sequences=4,
+                                   seq_len=32)
+        cfg = VQConfig(d=2, bits_per_dim=2, group_size=2048, em_iters=3,
+                       codebook_update_iters=0)
+        _VQ_PACKED[family], _ = quantize_model(model, params, calib,
+                                               "gptvq", cfg, pack=True)
+    return _VQ_PACKED[family]
+
+
+class TestFusedVQServing:
+    """The fused VQ-dequant matmul serving path (Engine vq_matmul_impl=):
+    greedy decode over a VQ-packed checkpoint must be token-identical
+    across the gather (per-layer densify), XLA-fused, and Pallas-fused
+    paths, on dense, MoE (stacked expert leaves), and hybrid (fused trunk
+    + densified shared-attention LoRA) families — and the _VQ_IMPL
+    dispatch counters must pin which path actually traced."""
+
+    @pytest.mark.parametrize("family,impl", [
+        ("dense", "xla"),     # fused-boundary oracle
+        ("dense", "pallas"),  # in-VMEM decode kernel, interpret mode
+        ("moe", "xla"),       # stacked expert leaves via expert_matmul
+        ("hybrid", "xla"),    # fused trunk + dense shared-attn LoRA
+    ])
+    def test_fused_matches_gather(self, family, impl):
+        from repro.core import vq_linear as vql_mod
+
+        model, _ = family_model(family)
+        qparams = vq_packed_params(family)
+        rng = np.random.RandomState(8)
+        V = model.cfg.vocab_size - 1
+        prompts = [rng.randint(0, V, size=s) for s in (5, 9, 3)]
+
+        ref = Engine(model, qparams, max_batch=2, max_len=64, page_size=8,
+                     vq_matmul_impl="gather")
+        ref_reqs = greedy_reqs(prompts)
+        ref.run(ref_reqs)
+        assert all(len(r.out_tokens) == 6 for r in ref_reqs)
+
+        before = dict(vql_mod._VQ_IMPL["counts"])
+        eng = Engine(model, qparams, max_batch=2, max_len=64, page_size=8,
+                     vq_matmul_impl=impl)
+        reqs = greedy_reqs(prompts, rid0=300)
+        eng.run(reqs)
+        counts = vql_mod._VQ_IMPL["counts"]
+        assert counts[impl] > before[impl], \
+            f"{impl} path never traced — silent fallback"
+        for a, b in zip(ref_reqs, reqs):
+            assert a.out_tokens == b.out_tokens, (family, impl, a.rid)
+
+    def test_interleaved_matches_solo_vq_fused(self):
+        """Continuous batching on the fused path: interleaved admission of
+        staggered prompts over a VQ-packed checkpoint must stay
+        token-identical to serving each request alone ("fused" resolves
+        per-backend: Pallas on TPU, the XLA oracle elsewhere)."""
+        model, _ = family_model("dense")
+        qparams = vq_packed_params("dense")
+        rng = np.random.RandomState(9)
+        prompts = [rng.randint(0, 255, size=s) for s in (5, 9, 3, 12)]
+        eng = Engine(model, qparams, max_batch=2, max_len=64, page_size=8,
+                     vq_matmul_impl="fused")
+        reqs = greedy_reqs(prompts)
+        eng.run(reqs)
+        assert all(len(r.out_tokens) == 6 for r in reqs)
+        for i, p in enumerate(prompts):
+            solo = Engine(model, qparams, max_batch=2, max_len=64,
+                          page_size=8, vq_matmul_impl="fused")
+            r = greedy_reqs([p], rid0=400 + i)[0]
+            solo.run([r])
+            assert r.out_tokens == reqs[i].out_tokens, i
+
+    def test_fused_resolves_per_backend(self):
+        """Engine(vq_matmul_impl="fused") resolves to the concrete impl at
+        ctor time: off-TPU that is the XLA oracle, never Pallas."""
+        model, _ = family_model("dense")
+        qparams = vq_packed_params("dense")
+        eng = Engine(model, qparams, max_batch=1, max_len=64, page_size=8,
+                     vq_matmul_impl="fused")
+        expected = "pallas" if jax.default_backend() == "tpu" else "xla"
+        assert eng.vq_matmul_impl == expected
 
 
 class TestPreemption:
