@@ -31,6 +31,15 @@ PAIRED per-pass wall ratios, same methodology as the kv8 cells, and the
 report carries the HBM payload accounting: bytes the packed weights
 stream per decode tick vs the dense fp32 weights they replace.
 
+Measurement comes from the engine's own telemetry (obs/): per-pass wall
+and token counts are ``Engine.stats`` deltas, TTFT comes from drained
+request records, and each paged cell reports the host/device split of
+its decode ticks from the ``span.decode_tick/*`` histograms. The
+``fp32-noobs`` cell reruns the fused fp32 engine with
+``Telemetry(enabled=False)`` back-to-back against the telemetry-on cell;
+the paired ``obs_overhead`` ratio pins the cost of the instrumentation
+itself (the 2% budget the obs/ subsystem is held to).
+
 Run: PYTHONPATH=src python benchmarks/serve_throughput.py --smoke
      [--out BENCH_serve.json]
 """
@@ -50,6 +59,7 @@ from repro.core.bpv import VQConfig
 from repro.core.pipeline import quantize_model
 from repro.data.synthetic import sample_batch
 from repro.models import model_zoo
+from repro.obs import Telemetry
 from repro.serve import sampling
 from repro.serve.engine import Engine, Request
 from repro.serve.serve_step import make_decode, make_prefill
@@ -134,18 +144,21 @@ def _merge_slot(old_cache, new_cache, slot, batch):
 # ---------------------------------------------------------------------------
 
 def run_paged(eng, reqs):
+    """Drive one burst through the paged engine, measured by the engine's
+    own telemetry: wall/token counts are ``Engine.stats`` deltas (the
+    stats accumulate continuously, so deltas isolate this pass on a warm
+    persistent engine) and TTFT comes from the drained request records
+    (enqueue -> first sampled token, per request, not polled at tick
+    granularity like the old perf_counter stitching)."""
+    tokens0, wall0 = eng.stats["tokens"], eng.stats["wall_s"]
     for r in reqs:
-        eng.scheduler.submit(r)
-    ttft = {}
-    t0 = time.perf_counter()
+        eng.submit(r)
     while eng.scheduler.has_work() and eng.ticks < 100_000:
         eng.step()
-        now = time.perf_counter() - t0
-        for r in reqs:
-            if r.out_tokens and r.rid not in ttft:
-                ttft[r.rid] = now
-    wall = time.perf_counter() - t0
-    return wall, sum(len(r.out_tokens) for r in reqs), ttft
+    ttft = {rec.rid: rec.ttft_s for rec in eng.drain_request_records()
+            if rec.ttft_s is not None}
+    return (eng.stats["wall_s"] - wall0, eng.stats["tokens"] - tokens0,
+            ttft)
 
 
 def run_legacy(eng, reqs):
@@ -180,9 +193,10 @@ class BenchCase:
 
     def __init__(self, kind, wtag, model, params, max_batch, max_len,
                  kv_bits=16, pool_bytes=None, page_size=16,
-                 vq_impl="gather"):
+                 vq_impl="gather", telemetry_enabled=True):
         self.kind, self.wtag, self.max_batch = kind, wtag, max_batch
         self.kv_bits = kv_bits
+        self.telemetry_enabled = telemetry_enabled
         self.backend = None
         self.vq_backend = None
         self.allocatable_pages = None
@@ -191,7 +205,9 @@ class BenchCase:
             self.eng = Engine(model, params, max_batch=max_batch,
                               max_len=max_len, paged_attn_impl=impl,
                               kv_cache_bits=kv_bits, pool_bytes=pool_bytes,
-                              page_size=page_size, vq_matmul_impl=vq_impl)
+                              page_size=page_size, vq_matmul_impl=vq_impl,
+                              telemetry=Telemetry(
+                                  enabled=telemetry_enabled))
             self.backend = self.eng.paged_attn_impl
             self.vq_backend = self.eng.vq_matmul_impl
             self.allocatable_pages = self.eng.scheduler.allocator.capacity
@@ -201,37 +217,70 @@ class BenchCase:
             self.eng = LegacySlotEngine(model, params, max_batch=max_batch,
                                         max_len=max_len)
             self.runner = run_legacy
+            self.telemetry_enabled = False  # no telemetry in the baseline
         self.cold_wall_s = None
         self.walls, self.ttfts = [], []
         self.tokens = 0
+        self.host_prep_s = 0.0
+        self.device_s = 0.0
+
+    def _span_sums(self):
+        """(host_prep, device) cumulative seconds from the decode-tick
+        span histograms; (0, 0) for the legacy engine / disabled obs."""
+        tel = getattr(self.eng, "telemetry", None)
+        if tel is None or not tel.enabled:
+            return 0.0, 0.0
+        snap = tel.registry.snapshot()
+
+        def ssum(name):
+            h = snap.get(name)
+            return h["sum"] if isinstance(h, dict) else 0.0
+
+        return (ssum("span.decode_tick/host_prep"),
+                ssum("span.decode_tick/device"))
 
     def one_pass(self, prompts, max_new, rid0):
         reqs = [Request(rid=rid0 + i, prompt=p, max_new_tokens=max_new)
                 for i, p in enumerate(prompts)]
+        h0, d0 = self._span_sums()
         wall, tokens, ttft = self.runner(self.eng, reqs)
+        h1, d1 = self._span_sums()
         if self.cold_wall_s is None:
             self.cold_wall_s = wall  # first pass includes jit compiles
         else:
             self.walls.append(wall)
-            self.ttfts.append(float(np.mean(sorted(ttft.values()))))
+            if ttft:
+                self.ttfts.append(float(np.mean(sorted(ttft.values()))))
             self.tokens = tokens
+            self.host_prep_s += h1 - h0
+            self.device_s += d1 - d0
 
     def summary(self):
         walls = sorted(self.walls)
         med = walls[len(walls) // 2]
+        split = self.host_prep_s + self.device_s
         return {
             "engine": self.kind, "weights": self.wtag,
             "fused_backend": self.backend,
             "vq_backend": self.vq_backend,
             "kv_bits": self.kv_bits,
+            "telemetry": self.telemetry_enabled,
             "allocatable_pages": self.allocatable_pages,
             "max_batch": self.max_batch, "tokens": self.tokens,
             "cold_wall_s": round(self.cold_wall_s, 4),
             "wall_s_median": round(med, 4),
             "tokens_per_s": round(self.tokens / med, 2),
             "tokens_per_s_best": round(self.tokens / walls[0], 2),
-            "ttft_mean_s": round(sorted(self.ttfts)[len(self.ttfts) // 2],
-                                 4),
+            "ttft_mean_s": (round(sorted(self.ttfts)[len(self.ttfts) // 2],
+                                  4) if self.ttfts else None),
+            # decode-tick host/device split over all measured passes (the
+            # device span closes after the sampled-token download — the
+            # tick's sync point — so it accounts device time under jax
+            # async dispatch)
+            "decode_host_prep_s": round(self.host_prep_s, 4),
+            "decode_device_s": round(self.device_s, 4),
+            "decode_device_frac": (round(self.device_s / split, 3)
+                                   if split > 0 else None),
         }
 
 
@@ -300,6 +349,12 @@ def main():
                       page_size=page_size),
             BenchCase("paged-fused", "fp32", model, params, mb, max_len,
                       page_size=page_size),
+            # same engine with telemetry disabled, run IMMEDIATELY after
+            # the telemetry-on cell: the paired ratio is the cost of the
+            # obs/ instrumentation itself
+            BenchCase("paged-fused", "fp32-noobs", model, params, mb,
+                      max_len, page_size=page_size,
+                      telemetry_enabled=False),
             BenchCase("paged-fused", "fp32", model, params, mb, max_len,
                       kv_bits=8, pool_bytes=budget, page_size=page_size),
             BenchCase("paged-fused", "fp32", model, params, mb, max_len,
@@ -321,11 +376,15 @@ def main():
             results.append(r)
             pages = (f" pages={r['allocatable_pages']}"
                      if r["allocatable_pages"] is not None else "")
-            print(f"  {r['engine']:11s} {r['weights']:4s} "
+            ttft = (f"{r['ttft_mean_s']:.3f}s"
+                    if r["ttft_mean_s"] is not None else "n/a")
+            dev = (f" dev={r['decode_device_frac']:.0%}"
+                   if r["decode_device_frac"] is not None else "")
+            print(f"  {r['engine']:11s} {r['weights']:10s} "
                   f"kv{r['kv_bits']:<2d} max_batch={mb}: "
                   f"{r['tokens_per_s']:8.1f} tok/s (median)  "
-                  f"ttft_mean={r['ttft_mean_s']:.3f}s  "
-                  f"cold={r['cold_wall_s']:.1f}s{pages}", flush=True)
+                  f"ttft_mean={ttft}  "
+                  f"cold={r['cold_wall_s']:.1f}s{pages}{dev}", flush=True)
 
     def pick(engine, mb, wtag="fp32", kv=16):
         return next(r for r in results if r["engine"] == engine
@@ -363,6 +422,16 @@ def main():
 
     kv8_tps_b1 = paired_tps_ratio(1, 8)
     kv8_tps_b8 = paired_tps_ratio(8, 8)
+
+    # observability overhead: telemetry-on over telemetry-off, paired
+    # per-pass (the cells run back to back). ~1.0 means the obs/
+    # instrumentation is free at decode granularity; < 0.98 would blow
+    # the 2% budget the subsystem is held to.
+    obs_overhead = {
+        mb: paired_walls_ratio(
+            all_cases[(mb, "paged-fused", "fp32-noobs", 16)],
+            all_cases[(mb, "paged-fused", "fp32", 16)])
+        for mb in (1, 8)}
 
     # fused VQ serving path: paired ratios vs the dequant baseline (the
     # 0.65x decode gap this path exists to close) and vs fp32 weights,
@@ -404,6 +473,8 @@ def main():
         "kv4_pages_over_fp32_fixed_pool_bytes_b8": kv4_pages_b8,
         "kv8_fused_tokens_per_s_over_fp32_b1": kv8_tps_b1,
         "kv8_fused_tokens_per_s_over_fp32_b8": kv8_tps_b8,
+        "obs_overhead_tokens_per_s_on_over_off_b1": obs_overhead[1],
+        "obs_overhead_tokens_per_s_on_over_off_b8": obs_overhead[8],
         "vq_fused_over_vq_dequant_tokens_per_s_b1": vq_fused_over_dequant[1],
         "vq_fused_over_vq_dequant_tokens_per_s_b8": vq_fused_over_dequant[8],
         "vq_fused_tokens_per_s_over_fp32_b1": vq_fused_over_fp32[1],
@@ -418,7 +489,8 @@ def main():
           f"@B1 = {fused_b1}, @B8 = {fused_b8}; kv8 pages/fp32 @B8 = "
           f"{kv8_pages_b8} at {kv8_tps_b1}/{kv8_tps_b8} rel tok/s @B1/B8; "
           f"vq fused/dequant tok/s @B1 = {vq_fused_over_dequant[1]}, "
-          f"@B8 = {vq_fused_over_dequant[8]}")
+          f"@B8 = {vq_fused_over_dequant[8]}; obs on/off tok/s "
+          f"@B1 = {obs_overhead[1]}, @B8 = {obs_overhead[8]}")
 
 
 if __name__ == "__main__":

@@ -13,6 +13,24 @@ The VQ serving passes run twice: once on the portable gather path
 (Pallas kernel on TPU, prep-folded XLA oracle elsewhere), token-identical
 greedy outputs.
 
+Telemetry rides along for free (PR 7): every Engine carries an obs/
+Telemetry bundle, so each serving pass below also reports **TTFT**
+(time to first token, measured from *enqueue* — queue wait counts, and
+the first request of a cold engine pays jit compile) and **ITL**
+(inter-token latency: mean gap between consecutive decoded tokens,
+undefined for single-token requests), drained per request via
+``eng.drain_request_records()``. The decode host/device split comes
+from the ``span.decode_tick/host_prep`` and ``span.decode_tick/device``
+histograms (the device span closes at the tick's token download — jax
+dispatch is async, so "device" reads as dispatch + device wait). The
+quantization calls report per-stage wall seconds
+(``report.stage_seconds``: hessian_capture / column_sweep — which
+includes the jitted EM init — / codebook_update / advance). The same
+data streams to files on the launchers: ``--events-out`` (JSONL
+lifecycle events), ``--metrics-out`` (snapshot), ``--trace-dir``
+(jax.profiler traces) on ``repro.launch.serve`` /
+``repro.launch.quantize``.
+
 Run: PYTHONPATH=src python examples/quantize_and_serve.py [--steps 200]
      [--family ssm] [--vq-matmul-impl fused]
 """
@@ -107,6 +125,9 @@ def main():
                                      vq_cfg, pack=True)
     print(f"  quantized in {time.time()-t0:.1f}s at "
           f"{report.bits_per_value:.3f} bits/value")
+    stages = sorted(report.stage_seconds.items(), key=lambda kv: -kv[1])
+    print("  stage breakdown: " + " ".join(f"{k}={v:.1f}s" for k, v in stages)
+          + " (column_sweep includes the jitted EM init)")
     ppl_vq = perplexity(model, qparams, heldout)
     print(f"  VQ perplexity: {ppl_vq:.2f} (fp32 {ppl_fp:.2f})")
 
@@ -148,6 +169,21 @@ def main():
         print(f"  {eng.stats['tokens']} tokens in {eng.stats['wall_s']:.2f}s "
               f"({eng.stats['decode_ticks']} ticks); "
               f"sample: {reqs[0].out_tokens[:8]}")
+        # per-request telemetry: TTFT counts queue wait (and, on the
+        # first pass of a cold engine, jit compile); ITL is the mean
+        # inter-token gap once decoding starts
+        recs = eng.drain_request_records()
+        ttfts = sorted(r.ttft_s for r in recs if r.ttft_s is not None)
+        itls = [r.itl_mean_s for r in recs if r.itl_mean_s is not None]
+        snap = eng.telemetry.registry.snapshot()
+        host = snap.get("span.decode_tick/host_prep", {}).get("sum", 0.0)
+        dev = snap.get("span.decode_tick/device", {}).get("sum", 0.0)
+        frac = dev / (host + dev) if host + dev else 0.0
+        print(f"  TTFT med={1e3*ttfts[len(ttfts)//2]:.0f}ms "
+              f"worst={1e3*ttfts[-1]:.0f}ms | "
+              f"ITL mean={1e3*np.mean(itls):.1f}ms/tok | "
+              f"decode device frac {frac:.2f} "
+              f"(device span = dispatch + device wait)")
 
     # low-bit KV pages: the SAME engine + VQ-packed weights, but the paged
     # KV pool stores int8 (or packed-int4) code pages with per-row scales

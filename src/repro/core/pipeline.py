@@ -44,6 +44,7 @@ stores (r=out, c=in) — see core/vq_linear.dequant_tree.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 import warnings
@@ -82,6 +83,10 @@ class QuantizeReport:
     per_target: dict = dataclasses.field(default_factory=dict)
     achieved_bpv: float = 0.0   # numel-weighted model-wide bpv, overhead incl.
     recipe: dict | None = None  # the resolved recipe, JSON-able
+    # host-side seconds per pipeline stage (hessian_capture, column_sweep,
+    # codebook_update, advance). Approximate under jax async dispatch, but
+    # each block ends in a float() sync so drift stays within a block.
+    stage_seconds: dict = dataclasses.field(default_factory=dict)
 
     def total_error(self) -> float:
         """Summed Hessian-weighted reconstruction error over all targets."""
@@ -90,29 +95,41 @@ class QuantizeReport:
             if k not in ("layer", "block")))
 
 
-def _apply_action(W_io, H, action, key):
+def _null_stage(name):
+    return contextlib.nullcontext()
+
+
+def _apply_action(W_io, H, action, key, stage=_null_stage):
     """W_io: (in, out) kernel. Returns (fake-quant (in,out), VQLinear|None).
 
     Dispatch mirrors the legacy method strings exactly (same ops, same
     jitted functions) so shim-compiled recipes stay bitwise-identical.
+
+    ``stage(name)`` yields a context manager timing one pipeline stage
+    (telemetry span + stage-seconds accumulation). EM codebook init runs
+    inside the jitted column sweep's fori_loop, so ``column_sweep`` covers
+    both — it cannot be timed separately without splitting the jit.
     """
     W = W_io.T.astype(jnp.float32)  # (out, in)
     if isinstance(action, IntQuant):
         if action.method == "rtn":
-            q = rtn_quantize(W, action.bits, action.group_size)
+            with stage("column_sweep"):
+                q = rtn_quantize(W, action.bits, action.group_size)
             return q.T.astype(W_io.dtype), None
         U = hes.inv_hessian_cholesky(
             H if H is not None else jnp.eye(W.shape[1], dtype=jnp.float32))
-        Q = gptq_quantize(W, U, bits=action.bits,
-                          group_size=action.group_size)
+        with stage("column_sweep"):
+            Q = gptq_quantize(W, U, bits=action.bits,
+                              group_size=action.group_size)
         return Q.T.astype(W_io.dtype), None
     assert isinstance(action, Quantize)
     cfg = action.cfg
     if action.method == "kmeans":
         # Table-1 baseline: plain k-means clustering, no Hessian weighting,
         # no error feedback (identity H => EM == k-means, U == I)
-        res = gptvq_quantize_matrix(
-            W, jnp.eye(W.shape[1], dtype=jnp.float32), cfg, key)
+        with stage("column_sweep"):
+            res = gptvq_quantize_matrix(
+                W, jnp.eye(W.shape[1], dtype=jnp.float32), cfg, key)
         return res.arrays.Q.T.astype(W_io.dtype), None
     U = hes.inv_hessian_cholesky(
         H if H is not None else jnp.eye(W.shape[1], dtype=jnp.float32))
@@ -120,14 +137,17 @@ def _apply_action(W_io, H, action, key):
         # Table-1 middle row: k-means WITH layer input data (Hessian-weighted
         # EM/assignment) but no GPTQ-style error feedback: diagonal-only U
         Ud = jnp.diag(jnp.diagonal(U))
-        res = gptvq_quantize_matrix(W, Ud, cfg, key)
+        with stage("column_sweep"):
+            res = gptvq_quantize_matrix(W, Ud, cfg, key)
         return res.arrays.Q.T.astype(W_io.dtype), None
     assert action.method == "gptvq"
-    res = gptvq_quantize_matrix(W, U, cfg, key)
-    if H is not None:
-        res = codebook_update(res, W, H)
-    res = quantize_codebooks(res)
-    packed = vql_mod.from_vq_result(res)
+    with stage("column_sweep"):
+        res = gptvq_quantize_matrix(W, U, cfg, key)
+    with stage("codebook_update"):
+        if H is not None:
+            res = codebook_update(res, W, H)
+        res = quantize_codebooks(res)
+        packed = vql_mod.from_vq_result(res)
     return res.arrays.Q.T.astype(W_io.dtype), packed
 
 
@@ -140,7 +160,8 @@ def _recon_error(W_io, q_io, H) -> float:
     return float(layer_error(W, Q, H))
 
 
-def _quantize_expert_stack(Ws, tap, action, key, pack, rule: str):
+def _quantize_expert_stack(Ws, tap, action, key, pack, rule: str,
+                           stage=_null_stage):
     """Quantize an (E, in, out) expert stack, one routed-token Hessian per
     expert. Returns (key, new leaf, summed reconstruction error)."""
     E = Ws.shape[0]
@@ -151,7 +172,7 @@ def _quantize_expert_stack(Ws, tap, action, key, pack, rule: str):
     for e in range(E):
         key, sub = jax.random.split(key)
         He = Hs[e] / jnp.maximum(n[e], 1.0) if Hs is not None else None
-        q, packed = _apply_action(Ws[e], He, action, sub)
+        q, packed = _apply_action(Ws[e], He, action, sub, stage)
         qs.append(q)
         if packed is not None:
             packed = dataclasses.replace(packed, rule=rule)
@@ -304,6 +325,7 @@ def quantize_model(
     quantize_mlp: bool = True,    # deprecated: use a recipe rule instead
     seed: int = 0,
     progress: Callable[[str], None] | None = None,
+    telemetry=None,               # obs.Telemetry: spans + quant_* events
 ):
     """Quantize any registered model family. Returns (new_params, report).
 
@@ -314,8 +336,30 @@ def quantize_model(
     activations for the taps the plan actually needs, (2) per-target
     application of the resolved action, (3) advancing the activations
     through the quantized block.
+
+    With ``telemetry`` set, each stage additionally records a
+    ``span.quant/<stage>`` histogram and the event log gains
+    ``quant_stage`` (per block) and ``quant_target`` (per target) rows;
+    ``report.stage_seconds`` aggregates stage wall time either way.
     """
     t0 = time.time()
+    stage_seconds: dict[str, float] = {}
+
+    @contextlib.contextmanager
+    def _stage(name: str, block: str | None = None):
+        ts = time.perf_counter()
+        with contextlib.ExitStack() as cm:
+            if telemetry is not None:
+                # nested spans -> "span.quant/<stage>" flame-graph paths
+                cm.enter_context(telemetry.spans.span("quant"))
+                cm.enter_context(telemetry.spans.span(name))
+            yield
+        dt = time.perf_counter() - ts
+        stage_seconds[name] = stage_seconds.get(name, 0.0) + dt
+        if telemetry is not None and block is not None:
+            telemetry.events.emit("quant_stage", stage=name, block=block,
+                                  seconds=dt)
+
     legacy = recipe is None
     if not legacy and (method != "gptvq" or cfg is not None):
         raise ValueError(
@@ -356,6 +400,7 @@ def quantize_model(
         specs = blk.targets()
         resolved = {spec.name: plan[f"{prefix}.{spec.name}"]
                     for spec in specs}
+        blk_stage = lambda name: _stage(name, blk.name)  # noqa: B023
 
         # ---- pass 1: Hessian taps the plan needs --------------------------
         needed = frozenset(
@@ -363,8 +408,9 @@ def quantize_model(
             if resolved[spec.name].needs_hessian and spec.tap is not None)
         taps: dict = {}
         if needed:
-            for st in states:
-                taps = blk.capture(st, taps, needed)
+            with _stage("hessian_capture", blk.name):
+                for st in states:
+                    taps = blk.capture(st, taps, needed)
 
         # ---- pass 2: apply each target's resolved action ------------------
         new_block = blk.params()
@@ -384,17 +430,22 @@ def quantize_model(
                 raise KeyError(
                     f"block {blk.name!r}: Hessian tap {spec.tap!r} for "
                     f"target {spec.name!r} was never captured")
+            t_tgt = time.perf_counter()
             if spec.per_expert:
                 key, leaf, err = _quantize_expert_stack(
-                    W, tap, res.action, key, pack, res.rule)
+                    W, tap, res.action, key, pack, res.rule, blk_stage)
             else:
                 H = hes.finalize(tap) if tap is not None else None
                 key, sub = jax.random.split(key)
-                q, packed = _apply_action(W, H, res.action, sub)
+                q, packed = _apply_action(W, H, res.action, sub, blk_stage)
                 if packed is not None:
                     packed = dataclasses.replace(packed, rule=res.rule)
                 leaf = packed if (pack and packed is not None) else q
                 err = _recon_error(W, q, H)
+            if telemetry is not None:
+                telemetry.events.emit(
+                    "quant_target", name=name, action=entry["action"],
+                    seconds=time.perf_counter() - t_tgt)
             new_block = adapters.tree_set(new_block, spec.path, leaf)
             row[spec.name] = err
             entry["error"] = err
@@ -402,7 +453,8 @@ def quantize_model(
         blk.install(new_block)
 
         # ---- pass 3: advance activations through the quantized block ------
-        states = [blk.advance(st) for st in states]
+        with _stage("advance", blk.name):
+            states = [blk.advance(st) for st in states]
         if progress:
             progress(f"block {bi + 1}/{len(blocks)} [{blk.name}] done")
         report_rows.append(row)
@@ -421,7 +473,7 @@ def quantize_model(
     return new_params, QuantizeReport(
         report_rows, time.time() - t0, label, bpv,
         per_target=per_target, achieved_bpv=achieved,
-        recipe=recipe.to_json())
+        recipe=recipe.to_json(), stage_seconds=stage_seconds)
 
 
 def _target_entry(res: Resolved, spec, W) -> dict:

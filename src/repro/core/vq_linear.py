@@ -68,6 +68,7 @@ import jax.numpy as jnp
 from repro.core import packing
 from repro.core.bpv import VQConfig
 from repro.core.gptvq import VQResult
+from repro.obs import dispatch as obs_dispatch
 
 
 @jax.tree_util.register_dataclass
@@ -259,7 +260,10 @@ def tree_has_vq(tree) -> bool:
 # counts bump when a path is *traced* into a computation, pinning regressions
 # where a requested impl silently falls back. "gather" counts dense
 # materializations in dequant_tree; "xla"/"pallas" count fused matmuls.
-_VQ_IMPL = {"impl": "gather", "counts": {"gather": 0, "xla": 0, "pallas": 0}}
+# Registered in obs.dispatch so snapshot/reset_dispatch_counters cover it.
+_VQ_IMPL = {"impl": "gather",
+            "counts": obs_dispatch.register_dispatch(
+                "vq", ("gather", "xla", "pallas"))}
 
 
 def set_vq_impl(impl: str) -> None:

@@ -45,6 +45,7 @@ from repro.core.pipeline import quantize_model
 from repro.core.recipe import PRESET_RECIPES, QuantRecipe, get_recipe
 from repro.data.calibration import calibration_tokens, shard_for_worker
 from repro.models import model_zoo
+from repro.obs import Telemetry
 from repro.train.loss import perplexity
 
 
@@ -72,6 +73,12 @@ def main():
     ap.add_argument("--out", default="/tmp/repro_vq_ckpt")
     ap.add_argument("--worker", type=int, default=0)
     ap.add_argument("--n-workers", type=int, default=1)
+    ap.add_argument("--events-out", default=None,
+                    help="write per-stage/per-target quant_* telemetry "
+                         "events as JSONL here")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the span.quant/* metrics snapshot as JSON "
+                         "here")
     args = ap.parse_args()
 
     cfg = (SMOKE if args.smoke else ARCHS)[args.arch]
@@ -109,15 +116,28 @@ def main():
     # more than tokens; {} for everyone else
     extras = adapters.calib_extras(cfg, heldout)
     ppl_fp = perplexity(model, params, heldout, batch_extra=extras)
+    telemetry = Telemetry(events_out=args.events_out)
     t0 = time.time()
     qparams, rep = quantize_model(
         model, params, calib, recipe=recipe, budget_bpv=args.budget_bpv,
-        pack=True, progress=lambda msg: print(f"  {msg}", flush=True))
+        pack=True, progress=lambda msg: print(f"  {msg}", flush=True),
+        telemetry=telemetry)
     dt = time.time() - t0
     ppl_vq = perplexity(model, qparams, heldout, batch_extra=extras)
     print(f"quantized in {dt:.1f}s | ppl fp={ppl_fp:.3f} vq={ppl_vq:.3f} "
           f"| recon err={rep.total_error():.4f} "
           f"| achieved {rep.achieved_bpv:.3f} bpv")
+    if rep.stage_seconds:
+        total = sum(rep.stage_seconds.values())
+        parts = "  ".join(
+            f"{k}={v:.1f}s ({100*v/max(total, 1e-9):.0f}%)"
+            for k, v in sorted(rep.stage_seconds.items(),
+                               key=lambda kv: -kv[1]))
+        print(f"  stages: {parts}  (column_sweep includes jitted EM init)")
+    if args.metrics_out:
+        telemetry.write_metrics(args.metrics_out)
+        print(f"  metrics snapshot -> {args.metrics_out}")
+    telemetry.close()
     dense = [k for k, v in rep.per_target.items()
              if v["action"] == "keep_dense"]
     if dense:
@@ -130,6 +150,7 @@ def main():
         "achieved_bpv": rep.achieved_bpv, "per_target": rep.per_target,
         "budget_bpv": args.budget_bpv, "ppl_fp": float(ppl_fp),
         "ppl_vq": float(ppl_vq), "seconds": dt,
+        "stage_seconds": rep.stage_seconds,
     })
     print(f"packed checkpoint written to {args.out}")
 

@@ -17,6 +17,7 @@ from repro.core.pipeline import quantize_model
 from repro.core.recipe import get_recipe
 from repro.data.calibration import calibration_tokens
 from repro.models import model_zoo
+from repro.obs import Telemetry
 from repro.serve.engine import Engine, Request
 
 
@@ -52,6 +53,16 @@ def main():
                          "8/4 = int8/packed-int4 pages with per-row "
                          "per-kv-head scales, dequantized on the fly by "
                          "every read path (2-4x more pages per byte)")
+    ap.add_argument("--events-out", default=None,
+                    help="write the request-lifecycle JSONL event stream "
+                         "(enqueue/admit/first_token/preempt/finish) here")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the final metrics-registry snapshot "
+                         "(gauges/counters/histograms + dispatch counts) "
+                         "as JSON here")
+    ap.add_argument("--trace-dir", default=None,
+                    help="capture a jax profiler trace of the serve loop; "
+                         "host spans become StepTraceAnnotations")
     args = ap.parse_args()
 
     cfg = (SMOKE if args.smoke else ARCHS)[args.arch]
@@ -79,11 +90,14 @@ def main():
     reqs = [Request(rid=i, prompt=rng.randint(0, cfg.vocab_size, size=6 + i % 5),
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
+    telemetry = Telemetry(events_out=args.events_out,
+                          trace_dir=args.trace_dir)
     eng = Engine(model, params, max_batch=args.max_batch,
                  max_len=args.max_len,
                  paged_attn_impl=args.paged_attn_impl,
                  kv_cache_bits=args.kv_cache_bits,
-                 vq_matmul_impl=args.vq_matmul_impl)
+                 vq_matmul_impl=args.vq_matmul_impl,
+                 telemetry=telemetry)
     if args.kv_cache_bits < 16:
         import dataclasses as _dc
 
@@ -100,6 +114,32 @@ def main():
     tok_s = eng.stats["tokens"] / max(eng.stats["wall_s"], 1e-9)
     print(f"served {len(reqs)} requests, {eng.stats['tokens']} tokens in "
           f"{eng.stats['wall_s']:.2f}s ({tok_s:.1f} tok/s host-CPU)")
+
+    records = eng.drain_request_records()
+    ttfts = sorted(r.ttft_s for r in records if r.ttft_s is not None)
+    itls = sorted(r.itl_mean_s for r in records if r.itl_mean_s is not None)
+    if ttfts:
+        mid = ttfts[len(ttfts) // 2]
+        print(f"TTFT: median {mid*1e3:.1f}ms  worst {ttfts[-1]*1e3:.1f}ms "
+              f"(enqueue -> first sampled token; first TTFT pays jit "
+              f"compilation on this synthetic run)")
+    if itls:
+        mid = itls[len(itls) // 2]
+        print(f"ITL:  median {mid*1e3:.1f}ms/token  worst "
+              f"{itls[-1]*1e3:.1f}ms/token")
+    preempted = sum(r.preemptions for r in records)
+    if preempted:
+        print(f"preemptions: {preempted} (recompute-style; preempted "
+              f"tokens were discarded and regenerated)")
+
+    if args.metrics_out:
+        telemetry.write_metrics(args.metrics_out)
+        print(f"metrics snapshot -> {args.metrics_out}")
+    if args.events_out:
+        print(f"event stream -> {args.events_out}")
+    if args.trace_dir:
+        print(f"profiler trace -> {args.trace_dir}")
+    telemetry.close()
     for r in reqs[:2]:
         print(f"  req {r.rid}: {list(r.prompt)[:4]}... -> {r.out_tokens[:8]}")
 

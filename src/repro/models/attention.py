@@ -16,6 +16,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import common as cm
+from repro.obs import dispatch as obs_dispatch
 
 NEG_INF = -1e30
 
@@ -23,8 +24,13 @@ NEG_INF = -1e30
 # the dry-run path) or "pallas" (kernels/flash_attention.py — the TPU fast
 # path; runs in interpret mode off-TPU). Set via set_flash_impl().
 # ``counts`` records how often each impl was *dispatched* (trace-time for
-# jitted callers) — the regression tests pin dispatch decisions against it.
-_FLASH_IMPL = {"impl": "xla", "counts": {"xla": 0, "pallas": 0}}
+# jitted callers) — the regression tests pin dispatch decisions against it
+# through the obs.dispatch API (snapshot_dispatch_counters /
+# reset_dispatch_counters); the registered dict here IS the live counter,
+# so the bump sites stay one plain increment on the trace path.
+_FLASH_IMPL = {"impl": "xla",
+               "counts": obs_dispatch.register_dispatch(
+                   "flash", ("xla", "pallas"))}
 
 
 def set_flash_impl(impl: str):
@@ -43,8 +49,9 @@ def set_flash_impl(impl: str):
 # captured per-engine by serve_step's jitted closures; prefill is pinned to
 # "gather" there even for width-1 chunks). This module global is only the
 # default for callers that don't pass one — it is read at trace time.
-_PAGED_IMPL = {"impl": "gather", "counts": {"gather": 0, "xla": 0,
-                                            "pallas": 0}}
+_PAGED_IMPL = {"impl": "gather",
+               "counts": obs_dispatch.register_dispatch(
+                   "paged", ("gather", "xla", "pallas"))}
 
 
 def set_paged_impl(impl: str):

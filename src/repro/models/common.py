@@ -16,8 +16,18 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.obs import dispatch as obs_dispatch
+
 Params = dict
 DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+# Trace-time counts of which weight form each model matmul site dispatched
+# on (dense array vs engine-prepped FusedVQLinear) — same contract as the
+# flash/paged/vq counters: bumps happen at trace time, so a jitted serving
+# tick contributes once per matmul site it baked, and a silent densify of
+# a leaf that should have stayed fused shows up as a count regression.
+_MATMUL_DISPATCH = obs_dispatch.register_dispatch(
+    "matmul", ("dense", "fused_vq", "expert_dense", "expert_fused_vq"))
 
 
 # ---------------------------------------------------------------------------
@@ -47,7 +57,9 @@ def matmul(x: jax.Array, w) -> jax.Array:
     from repro.core import vq_linear as vql_mod
 
     if isinstance(w, vql_mod.FusedVQLinear):
+        _MATMUL_DISPATCH["fused_vq"] += 1
         return vql_mod.fused_matmul(x, w).astype(x.dtype)
+    _MATMUL_DISPATCH["dense"] += 1
     return x @ w
 
 
@@ -59,9 +71,12 @@ def expert_matmul(x: jax.Array, w) -> jax.Array:
     from repro.core import vq_linear as vql_mod
 
     if not isinstance(w, vql_mod.FusedVQLinear):
+        _MATMUL_DISPATCH["expert_dense"] += 1
         if x.ndim == 3:
             return jnp.einsum("ecd,edf->ecf", x, w.astype(x.dtype))
         return jnp.einsum("becd,edf->becf", x, w.astype(x.dtype))
+
+    _MATMUL_DISPATCH["expert_fused_vq"] += 1
 
     def one(args):
         xe, we = args

@@ -1,0 +1,52 @@
+"""Telemetry subsystem: metrics registry, trace spans, JSONL event
+stream, per-request latency records, and kernel-dispatch counters.
+
+This is the measurement layer the serving engine, kernels, and the
+quantization pipeline report into — see obs/telemetry.py for the facade
+the engine owns, obs/metrics.py for the instrument semantics, and
+ROADMAP.md "Serving > Telemetry" for the operator-facing story
+(``--events-out`` / ``--metrics-out`` / ``--trace-dir``).
+"""
+from repro.obs.dispatch import (
+    register_dispatch,
+    reset_dispatch_counters,
+    snapshot_dispatch_counters,
+)
+from repro.obs.events import (
+    EVENT_FIELDS,
+    EventLog,
+    RequestRecord,
+    read_jsonl,
+    validate_event,
+)
+from repro.obs.metrics import (
+    COUNT_BUCKETS,
+    LATENCY_BUCKETS_S,
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    validate_metrics_snapshot,
+)
+from repro.obs.spans import SpanTimer
+from repro.obs.telemetry import Telemetry
+
+__all__ = [
+    "COUNT_BUCKETS",
+    "Counter",
+    "EVENT_FIELDS",
+    "EventLog",
+    "Gauge",
+    "Histogram",
+    "LATENCY_BUCKETS_S",
+    "MetricsRegistry",
+    "RequestRecord",
+    "SpanTimer",
+    "Telemetry",
+    "read_jsonl",
+    "register_dispatch",
+    "reset_dispatch_counters",
+    "snapshot_dispatch_counters",
+    "validate_event",
+    "validate_metrics_snapshot",
+]

@@ -1,0 +1,51 @@
+"""Kernel-dispatch counter registry.
+
+The dispatch counters (`models/attention._FLASH_IMPL`/`_PAGED_IMPL`,
+`core/vq_linear._VQ_IMPL`, `models/common` matmul sites) bump at *trace*
+time: they pin which implementation was actually baked into a jitted
+computation, catching silent fallbacks (a requested Pallas path quietly
+taking the XLA branch). Before this module each site owned a raw module
+global that tests mutated and diffed ad hoc, leaking counts across test
+packages; now every site registers its counts dict here once at import
+and the supported surface is:
+
+* ``register_dispatch(source, impls)`` — called by the owning module at
+  import; returns the (shared, live) counts dict it should bump. The dict
+  identity is stable across ``reset_dispatch_counters()`` so the bump
+  sites stay one plain ``counts[impl] += 1`` with zero indirection on the
+  trace path.
+* ``snapshot_dispatch_counters()`` — deep copy of every source's counts
+  ({source: {impl: n}}), fed into telemetry metric snapshots.
+* ``reset_dispatch_counters()`` — zero all counts in place (the shared
+  test fixture; suites no longer leak counts into each other).
+
+This module is dependency-free (no jax) so any layer can import it.
+"""
+from __future__ import annotations
+
+_COUNTERS: dict[str, dict[str, int]] = {}
+
+
+def register_dispatch(source: str, impls) -> dict[str, int]:
+    """Get-or-create the live counts dict for ``source``. Idempotent:
+    re-registration (module reload) returns the existing dict so every
+    holder keeps bumping the same object."""
+    d = _COUNTERS.get(source)
+    if d is None:
+        d = _COUNTERS[source] = {impl: 0 for impl in impls}
+    else:
+        for impl in impls:
+            d.setdefault(impl, 0)
+    return d
+
+
+def snapshot_dispatch_counters() -> dict[str, dict[str, int]]:
+    """Deep copy of every registered source's counts."""
+    return {src: dict(counts) for src, counts in _COUNTERS.items()}
+
+
+def reset_dispatch_counters() -> None:
+    """Zero every registered counter IN PLACE (dict identities survive)."""
+    for counts in _COUNTERS.values():
+        for impl in counts:
+            counts[impl] = 0

@@ -1,0 +1,90 @@
+"""Trace spans: context-manager wall-clock timers with nesting.
+
+``SpanTimer.span("decode_tick")`` times a host-side phase and records it
+into the owning registry under ``span.<dotted/path>`` — nested spans
+record their full path (``span.decode_tick/upload``), so a snapshot reads
+as a flame-graph-shaped breakdown: each name carries a fixed-bucket
+latency histogram (count, sum, p50/p99) and the parent/child sums expose
+how much of a tick went to upload vs dispatch vs sampling.
+
+Device alignment: when a profiler trace is active (``start_trace`` /
+``--trace-dir``), every span additionally enters a
+``jax.profiler.StepTraceAnnotation`` so the host spans line up with
+device timelines in TensorBoard/xprof. The annotation is only constructed
+while a trace is running — with no trace the span costs two
+``perf_counter`` calls and one histogram observe.
+
+Spans do NOT force device sync: jax dispatch is async, so a span around a
+bare dispatch measures host time only. Phases that should account device
+time must contain their own sync point (the engine's decode tick does —
+it downloads the sampled tokens before the span closes).
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+from repro.obs.metrics import LATENCY_BUCKETS_S, MetricsRegistry
+
+
+class SpanTimer:
+    def __init__(self, registry: MetricsRegistry, step_ref=None):
+        self.registry = registry
+        self._stack: list[str] = []
+        self._tracing = False
+        # optional 0-arg callable giving the current step number for
+        # StepTraceAnnotation (the engine passes its tick counter)
+        self._step_ref = step_ref
+
+    # -- profiler integration ------------------------------------------------
+
+    def start_trace(self, trace_dir: str):
+        """Begin a device profiler trace; host spans become step
+        annotations inside it. No-op (with a warning flag) when the jax
+        profiler is unavailable on this backend."""
+        import jax
+
+        jax.profiler.start_trace(trace_dir)
+        self._tracing = True
+
+    def stop_trace(self):
+        if self._tracing:
+            import jax
+
+            jax.profiler.stop_trace()
+            self._tracing = False
+
+    # -- spans ---------------------------------------------------------------
+
+    @property
+    def current_path(self) -> str:
+        return "/".join(self._stack)
+
+    @contextmanager
+    def span(self, name: str):
+        assert "/" not in name, "span names must be single segments"
+        self._stack.append(name)
+        path = "/".join(self._stack)
+        ann = None
+        if self._tracing:
+            import jax
+
+            step = self._step_ref() if self._step_ref is not None else None
+            ann = jax.profiler.StepTraceAnnotation(path, step_num=step)
+            ann.__enter__()
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            dt = time.perf_counter() - t0
+            if ann is not None:
+                ann.__exit__(None, None, None)
+            popped = self._stack.pop()
+            assert popped == name, (popped, name)
+            self.registry.histogram(f"span.{path}",
+                                    LATENCY_BUCKETS_S).observe(dt)
+
+    def timed(self, name: str, fn, *args, **kwargs):
+        """Run ``fn`` under a span; returns its result."""
+        with self.span(name):
+            return fn(*args, **kwargs)

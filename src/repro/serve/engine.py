@@ -35,6 +35,17 @@ quantize in-graph at the existing scatter sites and every read path
 dequantizes on the fly, so the same pool bytes hold 2-4x the pages
 (``pool_bytes=`` sizes the allocator by budget instead of block count).
 
+Telemetry (PR 7): every engine owns an ``obs.Telemetry`` (pass your own
+to share a registry, write a JSONL event stream, or disable it). Each
+tick feeds the metrics registry — queue depth, pool occupancy, prefill
+chunk widths, preemptions, device-upload cache hit rate — and host-side
+phases run under trace spans (``span.decode_tick/…``; the device span
+closes after the sampled-token download, so it accounts device time).
+Per-request lifecycle records (enqueue -> admit -> first token ->
+finish) accumulate TTFT / inter-token latency and drain via
+``drain_request_records()``; ``stats`` is a live property now —
+counters and wall time accumulate per tick, so callers driving
+``step()`` directly always read current numbers.
 
 This is the end-to-end driver used by examples/quantize_and_serve.py to
 demonstrate the paper's deployment claim: identical engine code serves
@@ -51,6 +62,7 @@ import numpy as np
 
 from repro.models.attention import KVQuantSpec, PagedLayout
 from repro.models.model_zoo import Model
+from repro.obs import COUNT_BUCKETS, Telemetry
 from repro.serve import paged_cache as pc
 from repro.serve import sampling
 from repro.serve.scheduler import CapacityError, Scheduler, Sequence
@@ -74,7 +86,8 @@ class Engine:
                  page_size: int = 16, num_blocks: int | None = None,
                  pool_bytes: int | None = None,
                  prefill_chunk: int = 64, paged_attn_impl: str = "gather",
-                 kv_cache_bits: int = 16, vq_matmul_impl: str = "gather"):
+                 kv_cache_bits: int = 16, vq_matmul_impl: str = "gather",
+                 telemetry: Telemetry | None = None):
         """``paged_attn_impl`` selects the decode attention read path over
         the paged KV pool, threaded into the jitted decode closure (see
         models/attention._paged_apply): "gather" (XLA logical-view gather,
@@ -109,7 +122,13 @@ class Engine:
         construction — cb_scale folding, code unpack+offset folding, and
         blockwise-scale-plane expansion all happen here ONCE, so per-tick
         work is zero (see core/vq_linear's module docstring for the
-        contract)."""
+        contract).
+
+        ``telemetry`` is the obs.Telemetry sink the engine reports into
+        (metrics registry + spans + request records + optional JSONL
+        event stream). None constructs a private enabled one; pass
+        ``Telemetry(enabled=False)`` to measure the instrumentation cost
+        itself (the bench's ``obs_overhead`` cell)."""
         from repro.core import vq_linear as vql_mod
 
         if paged_attn_impl == "fused":
@@ -158,6 +177,24 @@ class Engine:
             1, max_len, dtype=dtype, paged=PagedLayout(2, page_size,
                                                        kv=kv_spec))
 
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        if self.telemetry.spans._step_ref is None:
+            # StepTraceAnnotation step numbers line up with engine ticks
+            self.telemetry.spans._step_ref = lambda: self.ticks
+        self._spans = self.telemetry.spans
+        reg = self.telemetry.registry
+        self._m_queue = reg.gauge("serve.queue_depth")
+        self._m_used = reg.gauge("serve.pool_used_blocks")
+        self._m_free = reg.gauge("serve.pool_free_blocks")
+        self._m_occ = reg.gauge("serve.pool_occupancy")
+        self._m_slots = reg.gauge("serve.slots_active")
+        self._m_dec_batch = reg.histogram("serve.decode_batch",
+                                          COUNT_BUCKETS)
+        self._m_chunk = reg.histogram("serve.prefill_chunk_tokens",
+                                      COUNT_BUCKETS)
+        self._m_dev_hit = reg.counter("serve.dev_cache_hits")
+        self._m_dev_miss = reg.counter("serve.dev_cache_misses")
+
         self.scheduler = Scheduler(
             max_batch=max_batch, max_len=max_len, page_size=page_size,
             allocator=pc.BlockAllocator(num_blocks),
@@ -165,7 +202,11 @@ class Engine:
             # attention-only families pad the final prefill chunk to its
             # power-of-two bucket (masked out exactly); recurrent-state
             # families must feed exact tokens (see scheduler module doc)
-            pad_prefill=model.cfg.family not in ("ssm", "hybrid"))
+            pad_prefill=model.cfg.family not in ("ssm", "hybrid"),
+            # direct scheduler.submit callers (bench, fuzz suites) still
+            # get enqueue records — the hook is the single entry point
+            on_submit=lambda req: self.telemetry.on_enqueue(
+                req.rid, len(req.prompt), req.max_new_tokens))
         # fully-compiled tick fns: decode traces once at (max_batch, 1);
         # prefill traces per power-of-two chunk width — O(log) variants.
         # The cache arg is donated: XLA updates the block pools in place
@@ -190,29 +231,51 @@ class Engine:
         self._tokens = 0
         self._prefill_chunks = 0
         self._preemptions = 0
+        self._wall_s = 0.0
         # host->device upload cache for slow-changing tick inputs (page
         # tables, keep masks, temperatures): at steady-state decode these
         # only change when a slot crosses a page boundary or a request
         # enters/leaves, so re-uploading every tick was pure host overhead
         self._dev_cache: dict = {}
-        self.stats = self._snapshot(0.0)
 
     def _dev(self, name: str, arr: np.ndarray):
         """Device copy of ``arr``, re-uploaded only when the host value
         changed since the last tick (cheap array_equal on tiny arrays)."""
         ent = self._dev_cache.get(name)
         if ent is None or not np.array_equal(ent[0], arr):
+            self._m_dev_miss.inc()
             ent = (arr.copy(), jnp.asarray(arr))
             self._dev_cache[name] = ent
+        else:
+            self._m_dev_hit.inc()
         return ent[1]
 
-    def _snapshot(self, wall_s: float) -> dict:
-        return {"wall_s": wall_s, "decode_ticks": self._decode_ticks,
+    @property
+    def stats(self) -> dict:
+        """Live counters — always current, whether the engine is driven
+        by ``run()`` or tick-by-tick via ``step()`` (wall time and every
+        counter accumulate continuously inside ``step``)."""
+        alloc = self.scheduler.allocator
+        return {"wall_s": self._wall_s, "decode_ticks": self._decode_ticks,
                 "tokens": self._tokens, "ticks": self.ticks,
                 "prefill_chunks": self._prefill_chunks,
-                "preemptions": self._preemptions}
+                "preemptions": self._preemptions,
+                "queue_depth": len(self.scheduler.queue),
+                "pool_used_blocks": alloc.capacity - alloc.free_blocks,
+                "pool_free_blocks": alloc.free_blocks}
+
+    def drain_request_records(self):
+        """Return-and-clear finished per-request lifecycle records
+        (obs.RequestRecord: TTFT, mean ITL, tokens, preemptions, finish
+        reason)."""
+        return self.telemetry.drain_finished()
 
     # -- admission ---------------------------------------------------------
+
+    def submit(self, req: Request):
+        """Queue a request (telemetry records the enqueue). Raises
+        CapacityError if it can never fit this engine configuration."""
+        self.scheduler.submit(req)
 
     def admit(self, req: Request) -> bool:
         """Place a request into a free slot (no prefill compute yet —
@@ -223,6 +286,7 @@ class Engine:
         seq = self.scheduler.try_place(req)
         if seq is None:
             return False
+        self.telemetry.on_admit(req.rid, seq.slot)
         self._reset_slot(seq)
         return True
 
@@ -242,7 +306,9 @@ class Engine:
     # -- one tick ----------------------------------------------------------
 
     def step(self):
+        t0 = time.perf_counter()
         for seq in self.scheduler.admit_from_queue():
+            self.telemetry.on_admit(seq.req.rid, seq.slot)
             self._reset_slot(seq)
         # one chunk per prefilling slot per tick: a burst of admissions
         # drains its prompts concurrently, while a single long prompt can
@@ -255,28 +321,41 @@ class Engine:
             # one table serves every chunk this tick: nothing allocates or
             # finishes between chunks of the same tick
             table = self._page_table(("prefill", "decode"))
-            for seq in prefilling:
-                last_logits = self._prefill_chunk(seq, table)
-                if last_logits is not None:
-                    done.append((seq, last_logits))
+            with self._spans.span("prefill"):
+                for seq in prefilling:
+                    last_logits = self._prefill_chunk(seq, table)
+                    if last_logits is not None:
+                        done.append((seq, last_logits))
         if done:
             # sample every prompt that completed this tick in ONE batched
             # draw: per-completion syncs serialized the prefill pipeline
-            self.key, sub = jax.random.split(self.key)
-            toks = np.asarray(self._sample(
-                sub, jnp.stack([l for _, l in done]),
-                jnp.asarray([s.req.temperature for s, _ in done],
-                            jnp.float32)))
+            with self._spans.span("prompt_sample"):
+                self.key, sub = jax.random.split(self.key)
+                toks = np.asarray(self._sample(
+                    sub, jnp.stack([l for _, l in done]),
+                    jnp.asarray([s.req.temperature for s, _ in done],
+                                jnp.float32)))
             for (seq, _), t in zip(done, toks):
                 seq.phase = "decode"
                 self._emit(seq, int(t))
         self._decode_tick()
         self.ticks += 1
+        # per-tick registry feed: queue/occupancy gauges mirror the
+        # scheduler + allocator accounting exactly (fuzz-tested invariant)
+        alloc = self.scheduler.allocator
+        used = alloc.capacity - alloc.free_blocks
+        self._m_queue.set(len(self.scheduler.queue))
+        self._m_used.set(used)
+        self._m_free.set(alloc.free_blocks)
+        self._m_occ.set(used / alloc.capacity if alloc.capacity else 0.0)
+        self._m_slots.set(len(self.scheduler.active()))
+        self._wall_s += time.perf_counter() - t0
 
     def _prefill_chunk(self, seq: Sequence, table: np.ndarray):
         """Feed the next chunk; returns the (V,) next-token logits when the
         prompt is complete, else None."""
         size, real = self.scheduler.prefill_chunk_len(seq)
+        self._m_chunk.observe(real)
         start = seq.pos
         chunk = np.zeros(size, np.int32)
         chunk[:real] = np.asarray(seq.req.prompt[start:start + real])
@@ -292,10 +371,12 @@ class Engine:
         req.out_tokens.append(tok)
         self.last_tok[seq.slot] = tok
         self._tokens += 1
-        if (len(req.out_tokens) >= req.max_new_tokens
-                or (self.eos_id is not None and tok == self.eos_id)):
+        self.telemetry.on_token(req.rid)
+        eos = self.eos_id is not None and tok == self.eos_id
+        if len(req.out_tokens) >= req.max_new_tokens or eos:
             req.done = True
             self.scheduler.finish(seq)
+            self.telemetry.on_finish(req.rid, "eos" if eos else "length")
 
     def _decode_tick(self):
         decoding = [s for s in self.scheduler.active()
@@ -311,24 +392,33 @@ class Engine:
                     if s.phase == "decode"]
         if not decoding:
             return
-        pos = np.zeros(self.max_batch, np.int32)
-        temps = np.zeros(self.max_batch, np.float32)
-        # slots mid-prefill decode on garbage this tick (their writes are
-        # routed to scratch by the table; their recurrent-state rows are
-        # restored inside the compiled step via keep_mask)
-        keep = np.zeros(self.max_batch, bool)
-        for s in self.scheduler.active():
-            if s.phase == "decode":
-                pos[s.slot] = s.pos
-                temps[s.slot] = s.req.temperature
-            else:
-                keep[s.slot] = True
-        toks = jnp.asarray(self.last_tok[:, None], jnp.int32)
-        nxt, self.key, self.cache = self._decode_fn(
-            self.params, toks, self.cache, jnp.asarray(pos),
-            self._dev("table_dec", self._page_table(("decode",))),
-            self._dev("keep", keep), self.key, self._dev("temps", temps))
-        nxt = np.asarray(nxt)
+        self._m_dec_batch.observe(len(decoding))
+        with self._spans.span("decode_tick"):
+            with self._spans.span("host_prep"):
+                pos = np.zeros(self.max_batch, np.int32)
+                temps = np.zeros(self.max_batch, np.float32)
+                # slots mid-prefill decode on garbage this tick (their
+                # writes are routed to scratch by the table; their
+                # recurrent-state rows are restored inside the compiled
+                # step via keep_mask)
+                keep = np.zeros(self.max_batch, bool)
+                for s in self.scheduler.active():
+                    if s.phase == "decode":
+                        pos[s.slot] = s.pos
+                        temps[s.slot] = s.req.temperature
+                    else:
+                        keep[s.slot] = True
+                toks = jnp.asarray(self.last_tok[:, None], jnp.int32)
+                args = (self.params, toks, self.cache, jnp.asarray(pos),
+                        self._dev("table_dec",
+                                  self._page_table(("decode",))),
+                        self._dev("keep", keep), self.key,
+                        self._dev("temps", temps))
+            with self._spans.span("device"):
+                # closes after the (B,) token download — the one sync
+                # point of the tick — so this span accounts device time
+                nxt, self.key, self.cache = self._decode_fn(*args)
+                nxt = np.asarray(nxt)
         for s in decoding:
             s.pos += 1
             self._emit(s, int(nxt[s.slot]))
@@ -337,6 +427,7 @@ class Engine:
     def _on_preempt(self, victim: Sequence):
         self._preemptions += 1
         self._tokens -= len(victim.req.out_tokens)
+        self.telemetry.on_preempt(victim.req.rid)
         victim.req.out_tokens.clear()
         victim.req.done = False
 
@@ -347,12 +438,16 @@ class Engine:
         can never fit are rejected gracefully (``req.error`` set)."""
         for req in requests:
             try:
-                self.scheduler.submit(req)
+                self.submit(req)
             except CapacityError as e:
                 req.error = str(e)
                 req.done = True
-        t0 = time.perf_counter()
-        while self.scheduler.has_work() and self.ticks < max_ticks:
-            self.step()
-        self.stats = self._snapshot(time.perf_counter() - t0)
+                self.telemetry.on_reject(req.rid, str(e))
+        self.telemetry.start_trace()
+        try:
+            while self.scheduler.has_work() and self.ticks < max_ticks:
+                self.step()
+        finally:
+            self.telemetry.stop_trace()
+            self.telemetry.events.flush()
         return requests

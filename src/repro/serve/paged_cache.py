@@ -42,6 +42,14 @@ class BlockAllocator:
         return len(self._free)
 
     @property
+    def used_blocks(self) -> int:
+        """Blocks currently handed out (the occupancy-gauge ground truth:
+        the engine's per-tick ``serve.pool_used_blocks`` must equal this,
+        and the fuzz suite cross-checks both against the blocks held by
+        active sequences)."""
+        return self.capacity - len(self._free)
+
+    @property
     def capacity(self) -> int:
         return self.num_blocks - 1
 

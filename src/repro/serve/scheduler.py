@@ -64,7 +64,7 @@ class Sequence:
 class Scheduler:
     def __init__(self, *, max_batch: int, max_len: int, page_size: int,
                  allocator: BlockAllocator, prefill_chunk: int = 64,
-                 pad_prefill: bool = False):
+                 pad_prefill: bool = False, on_submit=None):
         assert prefill_chunk & (prefill_chunk - 1) == 0, \
             "prefill_chunk must be a power of two (compile-variant bound)"
         self.max_batch = max_batch
@@ -76,6 +76,11 @@ class Scheduler:
         self.queue: deque = deque()
         self.running: list[Sequence | None] = [None] * max_batch
         self._order = 0
+        # telemetry hook: fires once per accepted submit (after
+        # validation), so enqueue records exist no matter whether a
+        # request entered through Engine.submit/run or a direct
+        # scheduler.submit (bench drivers, fuzz suites)
+        self.on_submit = on_submit
 
     # -- admission ---------------------------------------------------------
 
@@ -97,6 +102,12 @@ class Scheduler:
     def submit(self, req):
         self.validate(req)
         self.queue.append(req)
+        if self.on_submit is not None:
+            self.on_submit(req)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(s is not None for s in self.running)

@@ -33,3 +33,18 @@ def _clear_jax_caches_between_packages(request):
         jax.clear_caches()
     _last_pkg[0] = pkg
     yield
+
+
+@pytest.fixture
+def dispatch_counters():
+    """Fresh view over the obs/ dispatch-counter registry (the trace-time
+    flash/paged/vq/matmul impl counters). Counters are zeroed before the
+    test — so assertions are absolute counts, not before/after deltas —
+    and zeroed again afterwards so no test inherits another's tallies.
+    Yields ``snapshot_dispatch_counters`` (a deep-copying callable:
+    ``counts()["vq"]["pallas"]``)."""
+    from repro.obs import reset_dispatch_counters, snapshot_dispatch_counters
+
+    reset_dispatch_counters()
+    yield snapshot_dispatch_counters
+    reset_dispatch_counters()

@@ -204,25 +204,23 @@ class TestFusedVQLinear:
         np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
                                    rtol=2e-4, atol=2e-4)
 
-    def test_dispatch_counters(self):
-        """_VQ_IMPL counts pin which path traced: fused_matmul bumps its
-        impl; dequant_tree bumps "gather" per densified VQLinear leaf."""
+    def test_dispatch_counters(self, dispatch_counters):
+        """The "vq" dispatch counts pin which path traced: fused_matmul
+        bumps its impl; dequant_tree bumps "gather" per densified VQLinear
+        leaf. The fixture zeroes the registry, so counts are absolute."""
         vql = self._quantized()
         fvl = vql_mod.prepare_fused(vql)
         x = jax.random.normal(jax.random.PRNGKey(0), (2, 256))
-        counts = vql_mod._VQ_IMPL["counts"]
-        before = dict(counts)
         vql_mod.fused_matmul(x, fvl, impl="xla")
-        assert counts["xla"] == before["xla"] + 1
+        assert dispatch_counters()["vq"]["xla"] == 1
         vql_mod.fused_matmul(x, fvl, impl="pallas", interpret=True,
                              tile_n=64, tile_k=256)
-        assert counts["pallas"] == before["pallas"] + 1
+        assert dispatch_counters()["vq"]["pallas"] == 1
         vql_mod.dequant_tree({"w": vql}, jnp.float32)
-        assert counts["gather"] == before["gather"] + 1
+        assert dispatch_counters()["vq"]["gather"] == 1
         # leaf stamp is the default when no explicit impl is passed
-        before = dict(counts)
         vql_mod.fused_matmul(x, vql_mod.prepare_fused(vql, impl="xla"))
-        assert counts["xla"] == before["xla"] + 1
+        assert dispatch_counters()["vq"]["xla"] == 2
 
     def test_unaligned_rows_stay_gather(self):
         """Rows not packed on uint32 word boundaries (flat-packed leaf):
@@ -349,13 +347,10 @@ class TestFlashAttentionKernel:
 class TestFlashDispatch:
     """Regression: a nonzero q_offset with an empty cache prefix
     (Sk == Sq, absolute-position masking) used to silently skip the
-    Pallas path. The _FLASH_IMPL counter pins which impl dispatched."""
+    Pallas path. The "flash" dispatch counters (obs/dispatch) pin which
+    impl dispatched; the fixture zeroes them per test."""
 
-    def _counts(self):
-        from repro.models import attention
-        return dict(attention._FLASH_IMPL["counts"])
-
-    def test_q_offset_no_longer_skips_pallas(self):
+    def test_q_offset_no_longer_skips_pallas(self, dispatch_counters):
         from repro.models import attention
         ks = jax.random.split(jax.random.PRNGKey(3), 3)
         q = jax.random.normal(ks[0], (1, 64, 4, 32))
@@ -363,24 +358,22 @@ class TestFlashDispatch:
         v = jax.random.normal(ks[2], (1, 64, 4, 32))
         attention.set_flash_impl("pallas")
         try:
-            before = self._counts()
             o_pl = attention.flash_attention(q, k, v, causal=True,
                                              q_offset=16)
-            after = self._counts()
-            assert after["pallas"] == before["pallas"] + 1, \
+            after = dispatch_counters()["flash"]
+            assert after["pallas"] == 1, \
                 "pallas path was silently skipped"
-            assert after["xla"] == before["xla"]
+            assert after["xla"] == 0
             attention.set_flash_impl("xla")
-            before = self._counts()
             o_xla = attention.flash_attention(q, k, v, causal=True,
                                               q_offset=16)
-            assert self._counts()["xla"] == before["xla"] + 1
+            assert dispatch_counters()["flash"]["xla"] == 1
         finally:
             attention.set_flash_impl("xla")
         np.testing.assert_allclose(np.asarray(o_pl), np.asarray(o_xla),
                                    rtol=2e-4, atol=2e-4)
 
-    def test_traced_offset_falls_back_to_xla(self):
+    def test_traced_offset_falls_back_to_xla(self, dispatch_counters):
         """A *traced* q_offset can't parameterize the static kernel mask —
         dispatch must take the XLA scan, not crash."""
         from repro.models import attention
@@ -390,13 +383,12 @@ class TestFlashDispatch:
         v = jax.random.normal(ks[2], (1, 64, 4, 32))
         attention.set_flash_impl("pallas")
         try:
-            before = self._counts()
             out = jax.jit(
                 lambda off: attention.flash_attention(
                     q, k, v, causal=True, q_offset=off))(jnp.int32(16))
-            after = self._counts()
-            assert after["xla"] == before["xla"] + 1
-            assert after["pallas"] == before["pallas"]
+            after = dispatch_counters()["flash"]
+            assert after["xla"] == 1
+            assert after["pallas"] == 0
         finally:
             attention.set_flash_impl("xla")
         ref_o = attention.flash_attention(q, k, v, causal=True, q_offset=16)

@@ -50,6 +50,23 @@ def check_invariants(sched: Scheduler, num_blocks: int):
         assert sched.running[s.slot] is s
 
 
+def check_metric_invariants(eng: Engine):
+    """Telemetry invariants the engine must uphold at every tick boundary:
+    the occupancy gauges mirror the allocator exactly (which the structural
+    invariants above tie to the blocks actually held by sequences), and the
+    per-request token records sum to the engine's token counter — the
+    recompute-style preempt discards both sides together, so replay never
+    double-counts."""
+    alloc = eng.scheduler.allocator
+    reg = eng.telemetry.registry
+    assert reg.gauge("serve.pool_used_blocks").value == alloc.used_blocks
+    assert reg.gauge("serve.pool_free_blocks").value == alloc.free_blocks
+    held = sum(len(s.pages) for s in eng.scheduler.active())
+    assert alloc.used_blocks == held, "occupancy gauge ground truth drifted"
+    assert eng.telemetry.request_token_total() == eng.stats["tokens"]
+    assert reg.counter("serve.tokens").value == eng.stats["tokens"]
+
+
 @pytest.mark.parametrize("seed", range(6))
 def test_scheduler_fuzz_invariants(seed):
     rng = np.random.RandomState(seed)
@@ -187,6 +204,15 @@ def test_engine_fuzz_preemption_replay(seed):
         assert a.out_tokens == b.out_tokens, (seed, a.rid)
         assert len(b.out_tokens) == b.max_new_tokens
     assert tight.stats["tokens"] == sum(len(r.out_tokens) for r in out)
+    # telemetry stayed consistent through preemption + replay: the drained
+    # request records credit exactly the tokens the engine counted, and
+    # every preemption the engine saw was recorded
+    check_metric_invariants(tight)
+    recs = tight.drain_request_records()
+    assert sum(r.tokens for r in recs) == tight.stats["tokens"]
+    assert sum(r.preemptions for r in recs) == tight.stats["preemptions"]
+    assert {r.rid for r in recs} == {r.rid for r in out}
+    assert all(r.finish_reason == "length" for r in recs)
 
 
 @pytest.mark.parametrize("seed", range(2))
@@ -219,7 +245,7 @@ def test_engine_fuzz_quantized_pool(seed):
         while eng.scheduler.has_work() and eng.ticks < 10_000:
             eng.step()
             check_invariants(eng.scheduler, eng.layout.num_blocks)
-        eng.stats = eng._snapshot(0.0)
+            check_metric_invariants(eng)
         return eng, reqs
 
     tight, out = run_checked(num_blocks=9)   # 8 usable blocks for 2 slots
