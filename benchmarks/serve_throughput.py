@@ -31,6 +31,13 @@ PAIRED per-pass wall ratios, same methodology as the kv8 cells, and the
 report carries the HBM payload accounting: bytes the packed weights
 stream per decode tick vs the dense fp32 weights they replace.
 
+The ``prefix_warm`` cell measures the prefix-sharing subsystem
+(serve/prefix_cache.py): one engine with the radix cache on serves a
+cold then a warm request sharing a 512-token prefix, back to back with a
+fresh prefix each pass; the paired per-pass warm/cold TTFT ratio is the
+headline (warm admission skips every fully-shared page's prefill, so the
+acceptance bar is < 0.5x).
+
 Measurement comes from the engine's own telemetry (obs/): per-pass wall
 and token counts are ``Engine.stats`` deltas, TTFT comes from drained
 request records, and each paged cell reports the host/device split of
@@ -284,6 +291,57 @@ class BenchCase:
         }
 
 
+def bench_prefix_warm(model, params, passes, vocab):
+    """Warm-vs-cold TTFT for a 512-token shared prompt prefix.
+
+    One persistent engine with the radix prefix cache on. Each pass draws
+    a FRESH random 512-token prefix, serves a cold request (populates the
+    cache — and, from pass 1 on, LRU-evicts the previous pass's now-cold
+    branch under pool pressure), then a warm request with the same prefix
+    and a divergent 8-token tail. The headline is the median of PAIRED
+    per-pass warm/cold TTFT ratios (the two requests run back to back, so
+    ambient host noise cancels — same methodology as the kv8/obs cells).
+    Pass 0 is discarded (jit compiles); from then on both sides are
+    jit-warm, so the ratio isolates the prefill actually skipped: the
+    warm request enters at pos=512 and prefills only its 8-token tail."""
+    eng = Engine(model, params, max_batch=1, max_len=576, page_size=16,
+                 prefix_cache=True)
+    rng = np.random.RandomState(17)
+    colds, warms, ratios = [], [], []
+    for i in range(passes + 1):
+        prefix = rng.randint(0, vocab - 1, size=512)
+
+        def req(rid):
+            tail = rng.randint(0, vocab - 1, size=8)
+            return Request(rid=rid, prompt=np.concatenate([prefix, tail]),
+                           max_new_tokens=4)
+
+        _, _, t_cold = run_paged(eng, [req(9000 + 2 * i)])
+        _, _, t_warm = run_paged(eng, [req(9001 + 2 * i)])
+        if i == 0:
+            continue
+        c, w = next(iter(t_cold.values())), next(iter(t_warm.values()))
+        colds.append(c)
+        warms.append(w)
+        ratios.append(w / c)
+    # every warm request must actually have hit (32 pages = the full
+    # 512-token prefix; the 8-token tail page stays private)
+    assert eng.stats["prefix_hits"] >= passes, eng.stats
+    assert eng.stats["prefix_evictions"] > 0, \
+        "fresh per-pass prefixes must have forced LRU eviction"
+    ratios.sort()
+    return {
+        "engine": "paged", "weights": "fp32", "kind": "prefix_warm",
+        "prefix_tokens": 512, "passes": passes,
+        "prefix_hits": eng.stats["prefix_hits"],
+        "prefix_hit_tokens": eng.stats["prefix_hit_tokens"],
+        "prefix_evictions": eng.stats["prefix_evictions"],
+        "ttft_cold_median_s": round(sorted(colds)[len(colds) // 2], 4),
+        "ttft_warm_median_s": round(sorted(warms)[len(warms) // 2], 4),
+        "ttft_warm_over_cold_median": round(ratios[len(ratios) // 2], 3),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -386,6 +444,16 @@ def main():
                   f"ttft_mean={ttft}  "
                   f"cold={r['cold_wall_s']:.1f}s{pages}{dev}", flush=True)
 
+    print("== prefix_warm: 512-token shared prefix, warm vs cold TTFT ==",
+          flush=True)
+    prefix_cell = bench_prefix_warm(model, params, passes, cfg.vocab_size)
+    print(f"  prefix_warm: cold ttft "
+          f"{prefix_cell['ttft_cold_median_s']:.3f}s -> warm "
+          f"{prefix_cell['ttft_warm_median_s']:.3f}s "
+          f"(paired median ratio "
+          f"{prefix_cell['ttft_warm_over_cold_median']}, "
+          f"{prefix_cell['prefix_evictions']} LRU evictions)", flush=True)
+
     def pick(engine, mb, wtag="fp32", kv=16):
         return next(r for r in results if r["engine"] == engine
                     and r["max_batch"] == mb and r["weights"] == wtag
@@ -464,6 +532,9 @@ def main():
         "workload": {"n_requests": n_req, "max_new_tokens": max_new,
                      "max_len": max_len, "prompt_lens": lens},
         "results": results,
+        "prefix_warm": prefix_cell,
+        "prefix_warm_ttft_over_cold":
+            prefix_cell["ttft_warm_over_cold_median"],
         "paged_over_legacy_tokens_per_s_b8":
             round(pick("paged", 8)["tokens_per_s"]
                   / pick("legacy", 8)["tokens_per_s"], 3),
@@ -490,7 +561,9 @@ def main():
           f"{kv8_pages_b8} at {kv8_tps_b1}/{kv8_tps_b8} rel tok/s @B1/B8; "
           f"vq fused/dequant tok/s @B1 = {vq_fused_over_dequant[1]}, "
           f"@B8 = {vq_fused_over_dequant[8]}; obs on/off tok/s "
-          f"@B1 = {obs_overhead[1]}, @B8 = {obs_overhead[8]}")
+          f"@B1 = {obs_overhead[1]}, @B8 = {obs_overhead[8]}; "
+          f"prefix warm/cold ttft = "
+          f"{prefix_cell['ttft_warm_over_cold_median']}")
 
 
 if __name__ == "__main__":

@@ -213,8 +213,36 @@ def main():
     print(f"  fixed {budget} B/layer pool: {fp_pages} fp32 pages -> "
           f"{eng.scheduler.allocator.capacity} kv{bits} pages "
           f"({headroom:.1f}x)")
-    print("done — same engine, 7x smaller weight payload with VQ, and "
-          f"{headroom:.1f}x KV pages per byte with quantized pages.")
+    # prefix sharing + forked parallel sampling (PR 8): requests that open
+    # with the same system-prompt header share its KV pages through the
+    # radix prefix cache (refcounted copy-on-write page tables) — warm
+    # admissions skip every fully-shared page's prefill — and Request(n=)
+    # forks n parallel samples off one prompt's blocks. The launchers
+    # expose both as --prefix-cache on and --parallel-n N.
+    print("== prefix sharing: 6 requests behind one 48-token header ==")
+    header = rng.randint(0, cfg.vocab_size, size=48)
+    shared = [np.concatenate([header,
+                              rng.randint(0, cfg.vocab_size, size=4 + i)])
+              for i in range(6)]
+    eng = Engine(model, qparams, max_batch=4, max_len=128, page_size=16,
+                 prefix_cache=True)
+    reqs = [Request(rid=200 + i, prompt=p, max_new_tokens=16)
+            for i, p in enumerate(shared)]
+    eng.run(reqs)
+    s = eng.stats
+    print(f"  {s['tokens']} tokens in {s['wall_s']:.2f}s | "
+          f"{s['prefix_hits']} prefix hits / {s['prefix_misses']} misses: "
+          f"{s['prefix_hit_tokens']} prompt tokens served from shared "
+          f"pages instead of re-prefilling "
+          f"({s['prefix_cached_blocks']} blocks cached)")
+    par = Request(rid=300, prompt=shared[0], max_new_tokens=16, n=3)
+    eng.run([par])
+    assert all(c.out_tokens == par.out_tokens for c in par.forks)
+    print(f"  Request(n=3): parent + {len(par.forks)} forks off the same "
+          f"prompt blocks, greedy-identical: {par.out_tokens[:6]}...")
+    print("done — same engine, 7x smaller weight payload with VQ, "
+          f"{headroom:.1f}x KV pages per byte with quantized pages, and "
+          "shared-prefix prompts admitted without re-prefill.")
     if args.family:
         quantize_other_family(args.family)
 

@@ -53,6 +53,18 @@ def main():
                          "8/4 = int8/packed-int4 pages with per-row "
                          "per-kv-head scales, dequantized on the fly by "
                          "every read path (2-4x more pages per byte)")
+    ap.add_argument("--prefix-cache", default="off", choices=["on", "off"],
+                    help="radix prefix cache + refcounted copy-on-write "
+                         "page tables: admitted prompts whose prefix was "
+                         "already prefilled share those KV pages and skip "
+                         "their prefill chunks (attention families; inert "
+                         "for recurrent-state families)")
+    ap.add_argument("--parallel-n", type=int, default=1,
+                    help="parallel samples per request: each request forks "
+                         "n-1 children sharing the prompt's KV blocks "
+                         "(best with --prefix-cache on; temperature 0 "
+                         "makes them identical — use --temperature)")
+    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--events-out", default=None,
                     help="write the request-lifecycle JSONL event stream "
                          "(enqueue/admit/first_token/preempt/finish) here")
@@ -87,9 +99,21 @@ def main():
               f"in {time.time()-t0:.1f}s")
 
     rng = np.random.RandomState(0)
-    reqs = [Request(rid=i, prompt=rng.randint(0, cfg.vocab_size, size=6 + i % 5),
-                    max_new_tokens=args.max_new)
+    prefix_on = args.prefix_cache == "on"
+    if prefix_on:
+        # shared-prefix traffic (the system-prompt pattern the cache is
+        # for): every request opens with the same 2 pages of tokens and
+        # diverges in a short private tail
+        header = rng.randint(0, cfg.vocab_size, size=32)
+        prompts = [np.concatenate([
+            header, rng.randint(0, cfg.vocab_size, size=6 + i % 5)])
             for i in range(args.requests)]
+    else:
+        prompts = [rng.randint(0, cfg.vocab_size, size=6 + i % 5)
+                   for i in range(args.requests)]
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=args.max_new,
+                    temperature=args.temperature, n=args.parallel_n)
+            for i, p in enumerate(prompts)]
     telemetry = Telemetry(events_out=args.events_out,
                           trace_dir=args.trace_dir)
     eng = Engine(model, params, max_batch=args.max_batch,
@@ -97,6 +121,7 @@ def main():
                  paged_attn_impl=args.paged_attn_impl,
                  kv_cache_bits=args.kv_cache_bits,
                  vq_matmul_impl=args.vq_matmul_impl,
+                 prefix_cache=prefix_on,
                  telemetry=telemetry)
     if args.kv_cache_bits < 16:
         import dataclasses as _dc
@@ -131,6 +156,17 @@ def main():
     if preempted:
         print(f"preemptions: {preempted} (recompute-style; preempted "
               f"tokens were discarded and regenerated)")
+    if eng.prefix_cache is not None:
+        s = eng.stats
+        print(f"prefix cache: {s['prefix_hits']} hits / "
+              f"{s['prefix_misses']} misses, "
+              f"{s['prefix_hit_tokens']} prompt tokens served from shared "
+              f"pages, {s['prefix_cached_blocks']} blocks cached, "
+              f"{s['prefix_evictions']} evicted")
+    if args.parallel_n > 1:
+        kids = sum(len(r.forks) for r in reqs)
+        print(f"parallel sampling: {kids} forked sequences "
+              f"(n={args.parallel_n}) shared their prompts' KV pages")
 
     if args.metrics_out:
         telemetry.write_metrics(args.metrics_out)

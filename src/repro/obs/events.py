@@ -34,6 +34,7 @@ EVENT_FIELDS: dict[str, tuple] = {
     "finish": ("rid", "tokens", "reason", "ttft_s", "itl_mean_s",
                "preemptions"),
     "reject": ("rid", "error"),
+    "prefix_hit": ("rid", "pages", "tokens"),
     "quant_stage": ("stage", "block", "seconds"),
     "quant_target": ("name", "action", "seconds"),
 }

@@ -87,7 +87,20 @@ class Telemetry:
         rec.finish_reason = "rejected"
         self._finished.append(rec)
         self.registry.counter("serve.requests_rejected").inc()
+        # short alias kept alongside the legacy name: dashboards/CI key on
+        # serve.rejected; serve.requests_rejected predates it
+        self.registry.counter("serve.rejected").inc()
         self.events.emit("reject", rid=rid, error=error)
+
+    def on_prefix_hit(self, rid: int, pages: int, tokens: int):
+        """An admitted request's prompt prefix was served from shared
+        blocks: ``pages`` full pages / ``tokens`` prompt tokens skipped
+        prefill entirely."""
+        if not self.enabled:
+            return
+        self.registry.counter("serve.prefix_hits").inc()
+        self.registry.counter("serve.prefix_hit_tokens").inc(tokens)
+        self.events.emit("prefix_hit", rid=rid, pages=pages, tokens=tokens)
 
     def on_admit(self, rid: int, slot: int):
         if not self.enabled:

@@ -60,7 +60,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.attention import KVQuantSpec, PagedLayout
+from repro.models.attention import KVQuantSpec, PagedKVCache, PagedLayout
 from repro.models.model_zoo import Model
 from repro.obs import COUNT_BUCKETS, Telemetry
 from repro.serve import paged_cache as pc
@@ -71,13 +71,17 @@ from repro.serve.serve_step import make_paged_decode, make_slot_prefill
 
 @dataclasses.dataclass
 class Request:
-    rid: int
+    rid: int | str
     prompt: np.ndarray           # (S,) int32
     max_new_tokens: int = 32
     temperature: float = 0.0
+    n: int = 1                   # parallel samples: n-1 forked children
+                                 # share the prompt's KV blocks
     out_tokens: list = dataclasses.field(default_factory=list)
     done: bool = False
     error: str | None = None     # set when rejected (CapacityError)
+    forks: list = dataclasses.field(default_factory=list)
+                                 # the n-1 child Requests (rid "rid.i")
 
 
 class Engine:
@@ -87,6 +91,7 @@ class Engine:
                  pool_bytes: int | None = None,
                  prefill_chunk: int = 64, paged_attn_impl: str = "gather",
                  kv_cache_bits: int = 16, vq_matmul_impl: str = "gather",
+                 prefix_cache: bool = False,
                  telemetry: Telemetry | None = None):
         """``paged_attn_impl`` selects the decode attention read path over
         the paged KV pool, threaded into the jitted decode closure (see
@@ -123,6 +128,18 @@ class Engine:
         blockwise-scale-plane expansion all happen here ONCE, so per-tick
         work is zero (see core/vq_linear's module docstring for the
         contract).
+
+        ``prefix_cache=True`` attaches a serve/prefix_cache.PrefixCache:
+        admission looks the prompt up in a radix tree over full pages and
+        serves matched prefixes from existing pool blocks — the new
+        sequence's page table points at them (refcounted, copy-on-write
+        by construction: sharing stops before the first writable page)
+        and prefill starts past the shared boundary. Inert for
+        recurrent-state families: any cache leaf outside the PagedKVCache
+        pools is slot-resident state that integrates every prompt token,
+        which a page-table share cannot replay — the engine detects this
+        structurally and keeps the flag off rather than serving from
+        stale state.
 
         ``telemetry`` is the obs.Telemetry sink the engine reports into
         (metrics registry + spans + request records + optional JSONL
@@ -194,10 +211,29 @@ class Engine:
                                       COUNT_BUCKETS)
         self._m_dev_hit = reg.counter("serve.dev_cache_hits")
         self._m_dev_miss = reg.counter("serve.dev_cache_misses")
+        self._m_shared = reg.gauge("serve.shared_blocks")
+        self._m_cached = reg.gauge("serve.prefix_cached_blocks")
+        self._m_pfx_miss = reg.counter("serve.prefix_misses")
+
+        allocator = pc.BlockAllocator(num_blocks)
+        # structural recurrent-state detection: any cache leaf outside the
+        # PagedKVCache pools is per-slot state (mamba h/conv, xLSTM C/n/m,
+        # enc-dec cross K/V) that integrates every prompt token — a
+        # page-table share can't replay it, so prefix sharing stays inert
+        has_slot_state = any(
+            not isinstance(l, PagedKVCache)
+            for l in jax.tree.leaves(
+                self.cache,
+                is_leaf=lambda x: isinstance(x, PagedKVCache)))
+        self.prefix_cache = None
+        if prefix_cache and not has_slot_state:
+            from repro.serve.prefix_cache import PrefixCache
+            self.prefix_cache = PrefixCache(allocator, page_size)
+        self._pending_forks: dict = {}   # parent rid -> child Requests
 
         self.scheduler = Scheduler(
             max_batch=max_batch, max_len=max_len, page_size=page_size,
-            allocator=pc.BlockAllocator(num_blocks),
+            allocator=allocator, prefix_cache=self.prefix_cache,
             prefill_chunk=prefill_chunk,
             # attention-only families pad the final prefill chunk to its
             # power-of-two bucket (masked out exactly); recurrent-state
@@ -256,13 +292,20 @@ class Engine:
         by ``run()`` or tick-by-tick via ``step()`` (wall time and every
         counter accumulate continuously inside ``step``)."""
         alloc = self.scheduler.allocator
+        pfx = self.prefix_cache
         return {"wall_s": self._wall_s, "decode_ticks": self._decode_ticks,
                 "tokens": self._tokens, "ticks": self.ticks,
                 "prefill_chunks": self._prefill_chunks,
                 "preemptions": self._preemptions,
                 "queue_depth": len(self.scheduler.queue),
                 "pool_used_blocks": alloc.capacity - alloc.free_blocks,
-                "pool_free_blocks": alloc.free_blocks}
+                "pool_free_blocks": alloc.free_blocks,
+                "shared_blocks": alloc.shared_blocks,
+                "prefix_hits": pfx.hits if pfx else 0,
+                "prefix_misses": pfx.misses if pfx else 0,
+                "prefix_hit_tokens": pfx.hit_tokens if pfx else 0,
+                "prefix_evictions": pfx.evictions if pfx else 0,
+                "prefix_cached_blocks": pfx.cached_blocks if pfx else 0}
 
     def drain_request_records(self):
         """Return-and-clear finished per-request lifecycle records
@@ -274,21 +317,65 @@ class Engine:
 
     def submit(self, req: Request):
         """Queue a request (telemetry records the enqueue). Raises
-        CapacityError if it can never fit this engine configuration."""
-        self.scheduler.submit(req)
+        CapacityError — after emitting the ``reject`` event and marking
+        the request — if it can never fit this engine configuration.
+
+        ``req.n > 1`` creates n-1 forked children (rid "rid.i") sampling
+        the same prompt; they are held back until the parent's prefill
+        completes — by then every full prompt page is registered in the
+        prefix cache, so each child admits by sharing the parent's
+        blocks and prefills only the final partial page. Without a
+        prefix cache forks still run (and stay greedy-identical); they
+        just re-prefill the prompt privately."""
+        try:
+            self.scheduler.submit(req)
+        except CapacityError as e:
+            req.error = str(e)
+            req.done = True
+            self.telemetry.on_reject(req.rid, str(e))
+            raise
+        if req.n > 1:
+            children = []
+            for i in range(1, req.n):
+                child = Request(rid=f"{req.rid}.{i}", prompt=req.prompt,
+                                max_new_tokens=req.max_new_tokens,
+                                temperature=req.temperature)
+                children.append(child)
+                self.telemetry.on_enqueue(child.rid, len(child.prompt),
+                                          child.max_new_tokens)
+            req.forks = children
+            self._pending_forks[req.rid] = children
 
     def admit(self, req: Request) -> bool:
         """Place a request into a free slot (no prefill compute yet —
         the prompt streams in chunk-per-tick during ``step``). Raises
-        CapacityError if the request can never fit; returns False when no
-        slot/blocks are free right now."""
-        self.scheduler.validate(req)
+        CapacityError (after emitting the ``reject`` event) if the
+        request can never fit; returns False when no slot/blocks are
+        free right now."""
+        try:
+            self.scheduler.validate(req)
+        except CapacityError as e:
+            req.error = str(e)
+            req.done = True
+            self.telemetry.on_reject(req.rid, str(e))
+            raise
         seq = self.scheduler.try_place(req)
         if seq is None:
             return False
-        self.telemetry.on_admit(req.rid, seq.slot)
-        self._reset_slot(seq)
+        self._admit_seq(seq)
         return True
+
+    def _admit_seq(self, seq: Sequence):
+        """Post-placement bookkeeping shared by ``admit`` and ``step``:
+        telemetry + prefix-hit accounting + slot state reset."""
+        self.telemetry.on_admit(seq.req.rid, seq.slot)
+        if seq.shared_tokens:
+            self.telemetry.on_prefix_hit(
+                seq.req.rid, seq.shared_tokens // self.scheduler.page_size,
+                seq.shared_tokens)
+        elif self.prefix_cache is not None:
+            self._m_pfx_miss.inc()
+        self._reset_slot(seq)
 
     def _reset_slot(self, seq: Sequence):
         self.cache = pc.slot_merge(self.cache, self._slot_template,
@@ -308,8 +395,7 @@ class Engine:
     def step(self):
         t0 = time.perf_counter()
         for seq in self.scheduler.admit_from_queue():
-            self.telemetry.on_admit(seq.req.rid, seq.slot)
-            self._reset_slot(seq)
+            self._admit_seq(seq)
         # one chunk per prefilling slot per tick: a burst of admissions
         # drains its prompts concurrently, while a single long prompt can
         # never stall the decode cohort by more than one chunk
@@ -337,6 +423,7 @@ class Engine:
                                 jnp.float32)))
             for (seq, _), t in zip(done, toks):
                 seq.phase = "decode"
+                self._on_prompt_done(seq)
                 self._emit(seq, int(t))
         self._decode_tick()
         self.ticks += 1
@@ -349,7 +436,27 @@ class Engine:
         self._m_free.set(alloc.free_blocks)
         self._m_occ.set(used / alloc.capacity if alloc.capacity else 0.0)
         self._m_slots.set(len(self.scheduler.active()))
+        self._m_shared.set(alloc.shared_blocks)
+        if self.prefix_cache is not None:
+            self._m_cached.set(self.prefix_cache.cached_blocks)
         self._wall_s += time.perf_counter() - t0
+
+    def _on_prompt_done(self, seq: Sequence):
+        """Prefill just completed: register the prompt's full pages in
+        the prefix cache (they are final — decode writes only ever land
+        past prompt_len, in the tail partial page or fresh blocks) and
+        release any forked children held for this parent. Insertion
+        happens BEFORE the first ``_emit`` so the cache's references are
+        taken even if the request finishes on its first sampled token."""
+        if self.prefix_cache is not None:
+            self.prefix_cache.insert(seq.req.prompt, seq.pages)
+        children = self._pending_forks.pop(seq.req.rid, None)
+        if children:
+            # queue front (reversed keeps child order): they share every
+            # full prompt page, so placing them next maximizes the time
+            # those blocks stay hot
+            for child in reversed(children):
+                self.scheduler.queue.appendleft(child)
 
     def _prefill_chunk(self, seq: Sequence, table: np.ndarray):
         """Feed the next chunk; returns the (V,) next-token logits when the
@@ -439,10 +546,8 @@ class Engine:
         for req in requests:
             try:
                 self.submit(req)
-            except CapacityError as e:
-                req.error = str(e)
-                req.done = True
-                self.telemetry.on_reject(req.rid, str(e))
+            except CapacityError:
+                pass  # submit marked the request + emitted the reject
         self.telemetry.start_trace()
         try:
             while self.scheduler.has_work() and self.ticks < max_ticks:

@@ -30,12 +30,24 @@ SCRATCH_BLOCK = 0
 
 
 class BlockAllocator:
-    """Free-list allocator over block ids 1..num_blocks-1 (0 is scratch)."""
+    """Refcounted free-list allocator over block ids 1..num_blocks-1
+    (0 is scratch).
+
+    Every live block carries a reference count: ``alloc`` hands out fresh
+    blocks at refcount 1, ``share`` takes an extra reference (prefix
+    sharing: several sequences — and the radix prefix cache itself — point
+    their page tables at the same physical block), and ``release`` drops
+    one; a block returns to the free list only when its count reaches
+    zero. ``free`` is a hardened alias of ``release`` kept for older
+    callers. Releasing an unallocated or already-free id raises
+    ``ValueError`` instead of silently corrupting the free list.
+    """
 
     def __init__(self, num_blocks: int):
         assert num_blocks >= 2, "need at least scratch + one usable block"
         self.num_blocks = num_blocks
         self._free = list(range(num_blocks - 1, 0, -1))
+        self._ref: dict[int, int] = {}   # block id -> refcount (>= 1)
 
     @property
     def free_blocks(self) -> int:
@@ -43,26 +55,65 @@ class BlockAllocator:
 
     @property
     def used_blocks(self) -> int:
-        """Blocks currently handed out (the occupancy-gauge ground truth:
-        the engine's per-tick ``serve.pool_used_blocks`` must equal this,
-        and the fuzz suite cross-checks both against the blocks held by
-        active sequences)."""
+        """Distinct blocks currently handed out, shared or not (the
+        occupancy-gauge ground truth: the engine's per-tick
+        ``serve.pool_used_blocks`` must equal this, and the fuzz suite
+        cross-checks both against the blocks held by active sequences
+        plus the prefix cache)."""
         return self.capacity - len(self._free)
 
     @property
     def capacity(self) -> int:
         return self.num_blocks - 1
 
+    @property
+    def shared_blocks(self) -> int:
+        """Blocks with more than one live reference (the prefix-sharing
+        win: each of these would otherwise be a duplicated page)."""
+        return sum(1 for c in self._ref.values() if c > 1)
+
+    def refcount(self, block: int) -> int:
+        """Live reference count of ``block`` (0 if free)."""
+        return self._ref.get(block, 0)
+
     def alloc(self, n: int) -> list[int] | None:
-        """n blocks, or None (allocation is all-or-nothing)."""
+        """n fresh blocks at refcount 1, or None (all-or-nothing)."""
         if n > len(self._free):
             return None
-        return [self._free.pop() for _ in range(n)]
+        got = [self._free.pop() for _ in range(n)]
+        for b in got:
+            self._ref[b] = 1
+        return got
+
+    def share(self, ids: list[int]):
+        """Take one extra reference on each (already-allocated) block."""
+        for b in ids:
+            if b not in self._ref:
+                raise ValueError(f"share of unallocated block {b}")
+        for b in ids:
+            self._ref[b] += 1
+
+    def release(self, ids: list[int]):
+        """Drop one reference per block; a block whose count hits zero
+        returns to the free list. Raises ValueError on ids that are out
+        of range, free, or never allocated (double-release protection —
+        a corrupted free list hands the same block to two sequences)."""
+        for b in ids:
+            if not 0 < b < self.num_blocks:
+                raise ValueError(f"release of invalid block id {b}")
+            if b not in self._ref:
+                raise ValueError(
+                    f"release of block {b} that is not allocated "
+                    f"(double-release or foreign id)")
+        for b in ids:
+            self._ref[b] -= 1
+            if self._ref[b] == 0:
+                del self._ref[b]
+                self._free.append(b)
 
     def free(self, ids: list[int]):
-        for b in ids:
-            assert 0 < b < self.num_blocks and b not in self._free, b
-            self._free.append(b)
+        """Alias of ``release`` (pre-refcount name, kept for callers)."""
+        self.release(ids)
 
 
 # ---------------------------------------------------------------------------

@@ -25,8 +25,17 @@ Policies:
 * **Preemption** — when decode needs a fresh block and the pool is dry,
   the *youngest* running request is evicted back to the queue front (it
   is younger than anything still queued under FCFS, so the front keeps
-  arrival order). Eviction is recompute-style: its blocks are freed and
-  its generated tokens discarded; greedy requests regenerate identically.
+  arrival order). Eviction is recompute-style: its blocks are released
+  and its generated tokens discarded; greedy requests regenerate
+  identically. A preempted sharer only ever *releases* its references —
+  blocks still referenced by the prefix cache or co-sharers survive, and
+  the replayed request re-finds them through a fresh lookup.
+* **Prefix sharing** — with a ``prefix_cache`` attached, ``try_place``
+  looks the prompt up first: matched full pages are shared (page table
+  points at existing blocks, ``pos`` starts past them so their prefill
+  chunks are skipped) and only the tail allocates fresh blocks. Under
+  pool pressure the scheduler evicts cold cached prefixes before it
+  resorts to preempting live sequences.
 """
 from __future__ import annotations
 
@@ -55,6 +64,8 @@ class Sequence:
     order: int                  # admission sequence number (preemption age)
     pos: int = 0                # tokens written to the cache so far
     phase: str = "prefill"      # "prefill" -> "decode"
+    shared_tokens: int = 0      # prefix tokens served from shared blocks
+                                # (prefill starts at pos == shared_tokens)
 
     @property
     def prompt_len(self) -> int:
@@ -64,7 +75,8 @@ class Sequence:
 class Scheduler:
     def __init__(self, *, max_batch: int, max_len: int, page_size: int,
                  allocator: BlockAllocator, prefill_chunk: int = 64,
-                 pad_prefill: bool = False, on_submit=None):
+                 pad_prefill: bool = False, on_submit=None,
+                 prefix_cache=None):
         assert prefill_chunk & (prefill_chunk - 1) == 0, \
             "prefill_chunk must be a power of two (compile-variant bound)"
         self.max_batch = max_batch
@@ -73,6 +85,7 @@ class Scheduler:
         self.allocator = allocator
         self.prefill_chunk = prefill_chunk
         self.pad_prefill = pad_prefill
+        self.prefix_cache = prefix_cache
         self.queue: deque = deque()
         self.running: list[Sequence | None] = [None] * max_batch
         self._order = 0
@@ -115,16 +128,43 @@ class Scheduler:
     def active(self) -> list[Sequence]:
         return [s for s in self.running if s is not None]
 
+    def _alloc_with_evict(self, n: int) -> list | None:
+        """``allocator.alloc`` that sheds cold cached prefixes first:
+        each failed attempt evicts one refcount-1 cached leaf and
+        retries, so the prefix cache yields to live demand before the
+        scheduler resorts to preempting running sequences."""
+        while True:
+            got = self.allocator.alloc(n)
+            if got is not None:
+                return got
+            if self.prefix_cache is None or not self.prefix_cache.evict_one():
+                return None
+
     def try_place(self, req) -> Sequence | None:
-        """Free slot + prompt pages, or None (request stays queued)."""
+        """Free slot + prompt pages, or None (request stays queued).
+
+        With a prefix cache, matched full pages come shared (one extra
+        reference each, already taken by ``lookup``) and only the tail
+        allocates; ``pos`` starts at the shared boundary so the engine
+        skips those prefill chunks entirely.
+        """
         slot = next((i for i, s in enumerate(self.running) if s is None),
                     None)
         if slot is None:
             return None
-        pages = self.allocator.alloc(-(-len(req.prompt) // self.page_size))
+        shared: list = []
+        if self.prefix_cache is not None:
+            shared = self.prefix_cache.lookup(req.prompt)
+        need = -(-len(req.prompt) // self.page_size) - len(shared)
+        pages = self._alloc_with_evict(need)
         if pages is None:
+            if shared:
+                self.allocator.release(shared)
             return None
-        seq = Sequence(req=req, slot=slot, pages=pages, order=self._order)
+        boundary = len(shared) * self.page_size
+        seq = Sequence(req=req, slot=slot, pages=shared + pages,
+                       order=self._order, pos=boundary,
+                       shared_tokens=boundary)
         self._order += 1
         self.running[slot] = seq
         return seq
@@ -162,7 +202,7 @@ class Scheduler:
         """
         preempted = []
         while seq.pos // self.page_size >= len(seq.pages):
-            got = self.allocator.alloc(1)
+            got = self._alloc_with_evict(1)
             if got is not None:
                 seq.pages.extend(got)
                 continue
@@ -174,14 +214,20 @@ class Scheduler:
         return preempted
 
     def preempt(self, seq: Sequence):
-        """Evict back to the queue front; recompute-style (state dropped)."""
-        self.allocator.free(seq.pages)
+        """Evict back to the queue front; recompute-style (state dropped).
+
+        ``release`` — never a raw free — so blocks co-held by the prefix
+        cache or other sharers survive the eviction; the replayed request
+        re-finds them with a fresh lookup on re-admission.
+        """
+        self.allocator.release(seq.pages)
         self.running[seq.slot] = None
         seq.pages = []
         seq.pos = 0
+        seq.shared_tokens = 0
         seq.phase = "prefill"
         self.queue.appendleft(seq.req)
 
     def finish(self, seq: Sequence):
-        self.allocator.free(seq.pages)
+        self.allocator.release(seq.pages)
         self.running[seq.slot] = None

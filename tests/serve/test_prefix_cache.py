@@ -1,0 +1,139 @@
+"""Unit tests for the radix prefix cache (serve/prefix_cache.py):
+host-side tree/refcount logic only — no jax, no model. Engine-level
+token-identity coverage lives in test_paged_serving.TestPrefixSharing;
+allocator-interaction fuzz in test_scheduler_fuzz."""
+import numpy as np
+import pytest
+
+from repro.serve.paged_cache import BlockAllocator
+from repro.serve.prefix_cache import PrefixCache
+
+PS = 4  # page size for all tests here
+
+
+def toks(*pages):
+    """Concatenate page-sized runs of a repeated marker token each."""
+    out = []
+    for p in pages:
+        out.extend([p] * PS)
+    return np.asarray(out, np.int32)
+
+
+def make(num_blocks=32):
+    a = BlockAllocator(num_blocks)
+    return a, PrefixCache(a, PS)
+
+
+class TestLookupInsert:
+    def test_miss_on_empty_cache(self):
+        a, c = make()
+        assert c.lookup(toks(1, 2, 3)) == []
+        assert c.misses == 1 and c.hits == 0
+
+    def test_roundtrip_shares_full_pages_only(self):
+        a, c = make()
+        prompt = np.concatenate([toks(1, 2), [7, 7]])  # 2 full pages + tail
+        pages = a.alloc(3)
+        c.insert(prompt, pages)
+        assert c.cached_blocks == 2          # the partial page never caches
+        got = c.lookup(prompt)
+        assert got == pages[:2]
+        # each matched block: owner + cache + the lookup's new reference
+        assert all(a.refcount(b) == 3 for b in got)
+
+    def test_exact_full_page_prompt_caps_at_minus_one(self):
+        """A prompt that is exactly N full pages may share at most N-1:
+        the last token must prefill privately (it supplies the logits
+        the engine samples the first output token from)."""
+        a, c = make()
+        prompt = toks(1, 2, 3)
+        pages = a.alloc(3)
+        c.insert(prompt, pages)
+        assert c.cached_blocks == 3          # insert caches all full pages
+        assert c.lookup(prompt) == pages[:2]  # ...lookup stops at N-1
+
+    def test_divergent_tail_matches_common_prefix(self):
+        a, c = make()
+        pa, pb = a.alloc(3), a.alloc(3)
+        c.insert(toks(1, 2, 3), pa)
+        c.insert(toks(1, 2, 9), pb)
+        # page 0/1 nodes are shared in the tree; pb's third page forks
+        assert c.cached_blocks == 4
+        assert c.lookup(toks(1, 2, 9, 5)) == pa[:2] + [pb[2]]
+
+    def test_insert_existing_keeps_first_block(self):
+        """Re-inserting an identical prefix from a second sequence keeps
+        the original node's block (contents are identical by
+        determinism); the second sequence's private copy just releases
+        normally when it finishes."""
+        a, c = make()
+        pa, pb = a.alloc(2), a.alloc(2)
+        c.insert(toks(1, 2), pa)
+        c.insert(toks(1, 2), pb)
+        assert c.cached_blocks == 2
+        assert c.lookup(toks(1, 2, 9)) == pa
+        assert a.refcount(pb[0]) == 1        # no cache ref ever taken
+
+    def test_single_page_prompt_never_shares(self):
+        a, c = make()
+        prompt = toks(1)
+        c.insert(prompt, a.alloc(1))
+        assert c.lookup(prompt) == []        # (len-1)//PS == 0 pages
+
+
+class TestEviction:
+    def test_evicts_lru_leaf_first(self):
+        a, c = make()
+        pa, pb = a.alloc(2), a.alloc(2)
+        c.insert(toks(1, 2), pa)
+        c.insert(toks(3, 4), pb)
+        a.release(pa)
+        a.release(pb)
+        got = c.lookup(toks(3, 4, 9))        # refresh pb's branch
+        a.release(got)
+        assert c.evict_one()
+        # pa's branch was LRU: its leaf (page 1) went first
+        assert pa[1] not in c.blocks() and pb[1] in c.blocks()
+
+    def test_interior_nodes_evict_after_children(self):
+        a, c = make()
+        pa = a.alloc(3)
+        c.insert(toks(1, 2, 3), pa)
+        a.release(pa)
+        order = []
+        while c.evict_one():
+            order.append(True)
+        assert len(order) == 3 and c.cached_blocks == 0
+        assert a.free_blocks == a.capacity   # everything back in the pool
+
+    def test_blocks_shared_with_live_sequence_not_evictable(self):
+        a, c = make()
+        pa = a.alloc(2)
+        c.insert(toks(1, 2), pa)             # owner + cache hold both
+        assert not c.evict_one()             # refcount 2 everywhere
+        a.release([pa[1]])                   # owner drops the leaf page
+        assert c.evict_one()                 # now the leaf is refcount 1
+        assert not c.evict_one()             # page 0 still co-held
+        a.release([pa[0]])
+        assert c.evict_one()
+        assert a.free_blocks == a.capacity
+
+    def test_clear_releases_everything(self):
+        a, c = make()
+        pa = a.alloc(2)
+        c.insert(toks(1, 2), pa)
+        a.release(pa)
+        c.clear()
+        assert a.free_blocks == a.capacity and c.cached_blocks == 0
+
+
+class TestStats:
+    def test_hit_and_token_accounting(self):
+        a, c = make()
+        pa = a.alloc(3)
+        c.insert(toks(1, 2, 3), pa)
+        got = c.lookup(toks(1, 2, 5, 6))
+        assert c.hits == 1 and c.hit_tokens == 2 * PS
+        a.release(got)
+        assert c.lookup(toks(9, 9)) == []
+        assert c.misses == 1

@@ -9,12 +9,14 @@ The host-side fuzz mirrors exactly the calls the engine makes each tick
 emit/finish), so any interleaving the engine can produce is reachable.
 """
 import dataclasses
+from collections import Counter
 
 import numpy as np
 import pytest
 
 from repro.serve.engine import Engine, Request
 from repro.serve.paged_cache import BlockAllocator
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.scheduler import Scheduler
 
 
@@ -27,15 +29,29 @@ class FuzzReq:
 
 
 def check_invariants(sched: Scheduler, num_blocks: int):
-    """Structural invariants that must hold between any two ticks."""
+    """Structural invariants that must hold between any two ticks.
+
+    Refcount-aware: blocks may legitimately appear in several sequences'
+    page lists (prefix sharing) and in the radix cache at once — but the
+    allocator's refcount must equal the exact number of holders, every
+    referenced block must be off the free list, and no block may be
+    neither free nor referenced (leak) or both (corruption)."""
     alloc = sched.allocator
-    held = [b for s in sched.active() for b in s.pages]
-    # no block handed to two sequences, none both held and free, scratch
-    # block 0 never handed out
-    assert len(held) == len(set(held)), "block double-allocation"
-    assert not (set(held) & set(alloc._free)), "block both held and free"
-    assert 0 not in held and 0 not in alloc._free
-    assert len(held) + alloc.free_blocks == num_blocks - 1, \
+    refs = Counter(b for s in sched.active() for b in s.pages)
+    cache_blocks = (sched.prefix_cache.blocks()
+                    if sched.prefix_cache is not None else set())
+    for b in cache_blocks:
+        refs[b] += 1
+    # one sequence never maps the same block at two logical pages, and
+    # scratch block 0 is never handed out anywhere
+    for s in sched.active():
+        assert len(s.pages) == len(set(s.pages)), "page list repeats block"
+    assert 0 not in refs and 0 not in alloc._free
+    assert not (set(refs) & set(alloc._free)), "block both held and free"
+    for b, n in refs.items():
+        assert alloc.refcount(b) == n, \
+            f"block {b}: refcount {alloc.refcount(b)} != {n} holders"
+    assert len(refs) + alloc.free_blocks == num_blocks - 1, \
         "blocks leaked or conjured"
     for s in sched.active():
         # every written position is backed by a mapped page, and the page
@@ -61,22 +77,35 @@ def check_metric_invariants(eng: Engine):
     reg = eng.telemetry.registry
     assert reg.gauge("serve.pool_used_blocks").value == alloc.used_blocks
     assert reg.gauge("serve.pool_free_blocks").value == alloc.free_blocks
-    held = sum(len(s.pages) for s in eng.scheduler.active())
-    assert alloc.used_blocks == held, "occupancy gauge ground truth drifted"
+    assert reg.gauge("serve.shared_blocks").value == alloc.shared_blocks
+    held = {b for s in eng.scheduler.active() for b in s.pages}
+    if eng.prefix_cache is not None:
+        held |= eng.prefix_cache.blocks()
+    assert alloc.used_blocks == len(held), \
+        "occupancy gauge ground truth drifted"
     assert eng.telemetry.request_token_total() == eng.stats["tokens"]
     assert reg.counter("serve.tokens").value == eng.stats["tokens"]
 
 
+@pytest.mark.parametrize("with_prefix_cache", [False, True])
 @pytest.mark.parametrize("seed", range(6))
-def test_scheduler_fuzz_invariants(seed):
+def test_scheduler_fuzz_invariants(seed, with_prefix_cache):
+    """The refcounted-pool fuzz: random admit/tick/preempt interleavings,
+    with and without the radix prefix cache attached. With the cache on,
+    prompts are drawn from a 3-token alphabet so shared full-page
+    prefixes (and divergent tails) occur constantly, admissions share
+    blocks, LRU eviction fires under pool pressure, and every tick
+    asserts the exact per-block refcount against the set of holders."""
     rng = np.random.RandomState(seed)
     num_blocks = int(rng.randint(4, 12))
     page_size = int(rng.choice([2, 4, 8]))
     max_batch = int(rng.randint(1, 4))
     max_len = page_size * (num_blocks - 1)
+    alloc = BlockAllocator(num_blocks)
+    cache = PrefixCache(alloc, page_size) if with_prefix_cache else None
     sched = Scheduler(
         max_batch=max_batch, max_len=max_len, page_size=page_size,
-        allocator=BlockAllocator(num_blocks),
+        allocator=alloc, prefix_cache=cache,
         prefill_chunk=int(rng.choice([4, 8, 16])),
         pad_prefill=bool(rng.randint(2)))
     reqs = {}
@@ -85,10 +114,12 @@ def test_scheduler_fuzz_invariants(seed):
     for step in range(300):
         op = rng.randint(3)
         if op == 0 and len(reqs) < 25:
-            # submit a random (sometimes infeasible) request
+            # submit a random (sometimes infeasible) request; the tiny
+            # alphabet makes full-page prefix collisions the norm
             plen = int(rng.randint(1, max_len + 2))
             mnt = int(rng.randint(1, 6))
-            r = FuzzReq(next_rid, np.zeros(plen, np.int32), mnt)
+            r = FuzzReq(next_rid, rng.randint(0, 3, size=plen).astype(
+                np.int32), mnt)
             next_rid += 1
             try:
                 sched.submit(r)
@@ -110,6 +141,8 @@ def test_scheduler_fuzz_invariants(seed):
                 s.pos += real
                 if s.pos == s.prompt_len:
                     s.phase = "decode"
+                    if cache is not None:  # engine's _on_prompt_done
+                        cache.insert(s.req.prompt, s.pages)
                     s.req.out += 1
                     emitted[s.req.rid] += 1
                     if s.req.out >= s.req.max_new_tokens:
@@ -153,6 +186,8 @@ def test_scheduler_fuzz_invariants(seed):
             s.pos += real
             if s.pos == s.prompt_len:
                 s.phase = "decode"
+                if cache is not None:
+                    cache.insert(s.req.prompt, s.pages)
                 s.req.out += 1
                 if s.req.out >= s.req.max_new_tokens:
                     sched.finish(s)
@@ -171,6 +206,13 @@ def test_scheduler_fuzz_invariants(seed):
     assert not sched.has_work(), "drain did not converge"
     for r in reqs.values():
         assert r.out == r.max_new_tokens
+    if cache is not None:
+        # with every sequence gone, only the cache's own reference is
+        # left on each cached block — and clearing it drains the pool
+        for b in cache.blocks():
+            assert alloc.refcount(b) == 1
+        cache.clear()
+        assert alloc.free_blocks == alloc.capacity
 
 
 @pytest.mark.parametrize("seed", range(3))
@@ -257,3 +299,49 @@ def test_engine_fuzz_quantized_pool(seed):
         solo.run([r])
         assert r.out_tokens == out[i].out_tokens, (seed, i)
         assert len(r.out_tokens) == n
+
+
+@pytest.mark.parametrize("seed", range(2))
+def test_engine_fuzz_prefix_cache_oversubscribed(seed):
+    """Shared-prefix workloads through an oversubscribed *refcounted*
+    pool with the prefix cache on: every engine tick must uphold the
+    per-block refcount invariants (holders = sequences' page lists + the
+    cache, exactly) while admissions share blocks, the LRU evicts under
+    pressure, and preempted sharers release-and-replay. Outputs must
+    stay greedy-token-identical to unshared solo runs, and once all
+    requests finish, evicting the cache must return the pool to full."""
+    from tests.serve.test_paged_serving import family_model
+
+    model, params = family_model("dense")
+    rng = np.random.RandomState(300 + seed)
+    V = model.cfg.vocab_size - 1
+    header = rng.randint(0, V, size=8)
+    prompts = [np.concatenate([
+        header[:int(rng.choice([4, 8]))],
+        rng.randint(0, V, size=int(rng.randint(1, 8)))])
+        for _ in range(int(rng.randint(4, 7)))]
+    news = [int(rng.randint(1, 8)) for _ in prompts]
+
+    eng = Engine(model, params, max_batch=2, max_len=64, page_size=4,
+                 num_blocks=9, prefix_cache=True)
+    reqs = [Request(rid=i, prompt=p, max_new_tokens=n)
+            for i, (p, n) in enumerate(zip(prompts, news))]
+    for r in reqs:
+        eng.submit(r)
+    while eng.scheduler.has_work() and eng.ticks < 10_000:
+        eng.step()
+        check_invariants(eng.scheduler, eng.layout.num_blocks)
+        check_metric_invariants(eng)
+    assert all(len(r.out_tokens) == r.max_new_tokens for r in reqs)
+    for i, (p, n) in enumerate(zip(prompts, news)):
+        solo = Engine(model, params, max_batch=2, max_len=64, page_size=4)
+        r = Request(rid=600 + i, prompt=p, max_new_tokens=n)
+        solo.run([r])
+        assert r.out_tokens == reqs[i].out_tokens, (seed, i)
+    alloc, cache = eng.scheduler.allocator, eng.prefix_cache
+    for b in cache.blocks():
+        assert alloc.refcount(b) == 1
+    while cache.evict_one():
+        pass
+    assert cache.cached_blocks == 0
+    assert alloc.free_blocks == alloc.capacity
