@@ -5,11 +5,17 @@ GPTVQ-packed weights.
 Workload: a burst of requests with many *distinct* prompt lengths (the
 realistic serving shape) on the qwen3-1.7b config family. Reports decode
 tokens/s and time-to-first-token (TTFT) at max_batch in {1, 8}, and emits
-``BENCH_serve.json``. Quantized-cache cells (``kv_bits`` 8/4) rerun the
-fused engine with int8/packed-int4 KV pages at a FIXED per-layer pool
-byte budget (the fp32 default pool's footprint), reporting the
-allocatable-page headroom the same bytes buy alongside the decode
-throughput cost of dequantizing on the fly. The legacy engine is kept here (not in serve/) as the
+``BENCH_serve.json``. Quantized-cache cells (``kv_bits`` 8/4/"vq2") rerun
+the fused engine with int8/packed-int4/vector-quantized KV pages at a
+FIXED per-layer pool byte budget (the fp32 default pool's footprint),
+reporting the allocatable-page headroom the same bytes buy alongside the
+decode throughput cost of dequantizing on the fly. The ``kv_vq2`` cells
+additionally report ``kv_vq2_max_logit_drift_vs_fp32``: decode logits
+teacher-forced onto the fp32-cache anchor's greedy token path, drift
+taken as the per-step RMS logit difference across the vocab, max over
+steps (the scale-stable statistic — a single-logit max is an order
+statistic of |V| near-iid errors and grows with vocab size, not cache
+quality). The legacy engine is kept here (not in serve/) as the
 measurement baseline: it prefility-tiles a full max_batch-wide batch per
 admission and retraces per distinct prompt length — exactly the costs the
 paged engine removes.
@@ -291,6 +297,54 @@ class BenchCase:
         }
 
 
+def bench_vq2_drift(model, params, *, max_len, page_size, prompt_len=16,
+                    decode_steps=8):
+    """Max-over-steps RMS logit drift of a calibrated vq2 cache vs the
+    fp32-cache anchor, teacher-forced onto the anchor's greedy token path
+    (free-running traces diverge in token space and would compare logits
+    of different sequences). RMS across the vocab is the per-step
+    statistic; the acceptance bar is < 0.5."""
+    from repro.models.attention import KVQuantSpec, PagedLayout
+    from repro.serve import paged_cache as pc
+    from repro.serve.engine import calibrate_vq_codebooks
+
+    n_pages = max_len // page_size
+    rng = np.random.RandomState(15)
+    prompt = rng.randint(0, model.cfg.vocab_size - 1, size=prompt_len)
+    table = np.arange(1, n_pages + 1, dtype=np.int32)[None]
+
+    def trace(bits, forced=None):
+        layout = PagedLayout(n_pages + 1, page_size, KVQuantSpec.of(bits))
+        cache = model.init_cache(1, max_len, dtype=jnp.float32,
+                                 paged=layout)
+        if bits == "vq2":
+            cache = calibrate_vq_codebooks(model, params, cache,
+                                           page_size=page_size,
+                                           calib_len=min(64, max_len))
+        cache = pc.push_page_table(cache, table)
+        logits, cache, _ = model.forward(
+            params, {"tokens": jnp.asarray(prompt, jnp.int32)[None]},
+            cache=cache, pos=jnp.zeros((1,), jnp.int32))
+        out, toks, pos = [logits[0, -1]], [], len(prompt)
+        tok = int(jnp.argmax(logits[0, -1]))
+        for i in range(decode_steps):
+            if forced is not None:
+                tok = forced[i]
+            toks.append(tok)
+            logits, cache, _ = model.forward(
+                params, {"tokens": jnp.asarray([[tok]], jnp.int32)},
+                cache=cache, pos=jnp.full((1,), pos, jnp.int32))
+            out.append(logits[0, -1])
+            tok = int(jnp.argmax(logits[0, -1]))
+            pos += 1
+        return out, toks
+
+    anchor, anchor_toks = trace(16)
+    vq, _ = trace("vq2", forced=anchor_toks)
+    return max(float(jnp.sqrt(jnp.mean((a - b) ** 2)))
+               for a, b in zip(anchor, vq))
+
+
 def bench_prefix_warm(model, params, passes, vocab):
     """Warm-vs-cold TTFT for a 512-token shared prompt prefix.
 
@@ -417,6 +471,13 @@ def main():
                       kv_bits=8, pool_bytes=budget, page_size=page_size),
             BenchCase("paged-fused", "fp32", model, params, mb, max_len,
                       kv_bits=4, pool_bytes=budget, page_size=page_size),
+            # the vq2 cell shares the same fixed byte budget: its page
+            # headroom pays for packed 4-bit codebook indices over d=2
+            # head-dim vectors (2 bits/value) plus the frozen per-head
+            # codebooks, which blocks_for_bytes charges off the top
+            BenchCase("paged-fused", "fp32", model, params, mb, max_len,
+                      kv_bits="vq2", pool_bytes=budget,
+                      page_size=page_size),
             # the vq_fused cell runs IMMEDIATELY after its vq dequant
             # baseline: the fused-over-dequant ratio is paired per-pass
             BenchCase("paged-fused", "vq", model, qparams, mb, max_len,
@@ -439,7 +500,7 @@ def main():
             dev = (f" dev={r['decode_device_frac']:.0%}"
                    if r["decode_device_frac"] is not None else "")
             print(f"  {r['engine']:11s} {r['weights']:10s} "
-                  f"kv{r['kv_bits']:<2d} max_batch={mb}: "
+                  f"kv{r['kv_bits']!s:<3} max_batch={mb}: "
                   f"{r['tokens_per_s']:8.1f} tok/s (median)  "
                   f"ttft_mean={ttft}  "
                   f"cold={r['cold_wall_s']:.1f}s{pages}{dev}", flush=True)
@@ -476,6 +537,10 @@ def main():
                          / pick("paged-fused", 8)["allocatable_pages"], 3)
     kv4_pages_b8 = round(pick("paged-fused", 8, kv=4)["allocatable_pages"]
                          / pick("paged-fused", 8)["allocatable_pages"], 3)
+    kv_vq2_pages = {
+        mb: round(pick("paged-fused", mb, kv="vq2")["allocatable_pages"]
+                  / pick("paged-fused", mb)["allocatable_pages"], 3)
+        for mb in (1, 8)}
 
     def paired_walls_ratio(case_base, case_new):
         """Median of paired per-pass wall ratios: > 1 means ``case_new``
@@ -490,6 +555,15 @@ def main():
 
     kv8_tps_b1 = paired_tps_ratio(1, 8)
     kv8_tps_b8 = paired_tps_ratio(8, 8)
+    kv_vq2_tps = {mb: paired_tps_ratio(mb, "vq2") for mb in (1, 8)}
+
+    # vq2 fidelity: one anchored logit trace (the cells above only pin
+    # throughput/pages; this pins that the extra pages aren't bought
+    # with a broken read path)
+    kv_vq2_drift = round(bench_vq2_drift(model, params, max_len=max_len,
+                                         page_size=page_size), 4)
+    print(f"  kv_vq2 max RMS logit drift vs fp32 cache = {kv_vq2_drift} "
+          f"(teacher-forced anchor path; bar < 0.5)", flush=True)
 
     # observability overhead: telemetry-on over telemetry-off, paired
     # per-pass (the cells run back to back). ~1.0 means the obs/
@@ -542,8 +616,15 @@ def main():
         "paged_fused_over_legacy_tokens_per_s_b8": fused_b8,
         "kv8_pages_over_fp32_fixed_pool_bytes_b8": kv8_pages_b8,
         "kv4_pages_over_fp32_fixed_pool_bytes_b8": kv4_pages_b8,
+        "kv_vq2_pages_over_fp32_fixed_pool_bytes_b1": kv_vq2_pages[1],
+        "kv_vq2_pages_over_fp32_fixed_pool_bytes_b8": kv_vq2_pages[8],
         "kv8_fused_tokens_per_s_over_fp32_b1": kv8_tps_b1,
         "kv8_fused_tokens_per_s_over_fp32_b8": kv8_tps_b8,
+        "kv_vq2_fused_tokens_per_s_over_fp32_b1": kv_vq2_tps[1],
+        "kv_vq2_fused_tokens_per_s_over_fp32_b8": kv_vq2_tps[8],
+        # per-step RMS logit drift across the vocab, max over decode
+        # steps, teacher-forced on the fp32 anchor's greedy path
+        "kv_vq2_max_logit_drift_vs_fp32": kv_vq2_drift,
         "obs_overhead_tokens_per_s_on_over_off_b1": obs_overhead[1],
         "obs_overhead_tokens_per_s_on_over_off_b8": obs_overhead[8],
         "vq_fused_over_vq_dequant_tokens_per_s_b1": vq_fused_over_dequant[1],
@@ -559,6 +640,8 @@ def main():
     print(f"wrote {os.path.abspath(args.out)}; fused/legacy tok/s "
           f"@B1 = {fused_b1}, @B8 = {fused_b8}; kv8 pages/fp32 @B8 = "
           f"{kv8_pages_b8} at {kv8_tps_b1}/{kv8_tps_b8} rel tok/s @B1/B8; "
+          f"kv_vq2 pages/fp32 @B1/B8 = {kv_vq2_pages[1]}/{kv_vq2_pages[8]} "
+          f"at drift {kv_vq2_drift}; "
           f"vq fused/dequant tok/s @B1 = {vq_fused_over_dequant[1]}, "
           f"@B8 = {vq_fused_over_dequant[8]}; obs on/off tok/s "
           f"@B1 = {obs_overhead[1]}, @B8 = {obs_overhead[8]}; "

@@ -82,10 +82,15 @@ def main():
     ap.add_argument("--family", default=None, choices=sorted(FAMILY_ARCH),
                     help="also quantize a smoke config from this family "
                          "through the same adapter-registry pipeline")
-    ap.add_argument("--kv-cache-bits", type=int, default=8,
-                    choices=[16, 8, 4],
-                    help="page storage for the quantized-KV serving pass "
-                         "(int8/int4 pages, dequantized on the fly)")
+    ap.add_argument("--kv-cache-bits", default=8,
+                    type=lambda s: s if s == "vq2" else int(s),
+                    choices=[16, 8, 4, "vq2"],
+                    help="page storage for the quantized-KV serving pass: "
+                         "int8/int4 pages dequantized on the fly, or vq2 "
+                         "(packed 4-bit codebook indices over d=2 head-dim "
+                         "vectors — the paper's dimensionality thesis "
+                         "applied to the cache; codebooks EM-calibrated "
+                         "at engine load, then frozen)")
     ap.add_argument("--vq-matmul-impl", default="fused",
                     choices=["gather", "fused", "xla", "pallas"],
                     help="VQ weight execution for the fused serving pass: "
@@ -208,11 +213,12 @@ def main():
     eng.run(reqs)
     fp_pages = fp_blocks - 1
     headroom = eng.scheduler.allocator.capacity / fp_pages
+    tag = bits if bits == "vq2" else f"kv{bits}"
     print(f"  {eng.stats['tokens']} tokens in {eng.stats['wall_s']:.2f}s; "
           f"sample: {reqs[0].out_tokens[:8]}")
     print(f"  fixed {budget} B/layer pool: {fp_pages} fp32 pages -> "
-          f"{eng.scheduler.allocator.capacity} kv{bits} pages "
-          f"({headroom:.1f}x)")
+          f"{eng.scheduler.allocator.capacity} {tag} pages "
+          f"({headroom:.1f}x{'; codebook bytes charged off the top' if bits == 'vq2' else ''})")
     # prefix sharing + forked parallel sampling (PR 8): requests that open
     # with the same system-prompt header share its KV pages through the
     # radix prefix cache (refcounted copy-on-write page tables) — warm

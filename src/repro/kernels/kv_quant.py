@@ -23,9 +23,21 @@ and are all 0); dequant is then exactly 0 — no NaN path. Stale rows in
 recycled blocks carry stale codes AND stale scales; both decode to finite
 garbage that the serving mask ``kpos <= pos`` discards, the same invariant
 that already covers stale fp16 keys.
+
+Vector-quantized pages (``bits == VQ_BITS``, "vq2"): instead of scalar
+codes, a row stores 4-bit *codebook indices* over d=2 vectors along the
+head dim — 2 bits per value, past the int4 cliff. The codebook is
+per-(pool, kv-head), shape (k_c=16, d=2), frozen after engine-load
+calibration; rows are amax-normalized to [-1, 1] before assignment and
+the per-row f32 scale is kept, so dequant is ``codebook[idx] * scale``
+and the zero-row / stale-row invariants above carry over unchanged.
+``vq_dequant_rows`` is the single shared decode expression (the lookup
+is a one-hot matmul, bitwise-equal to a gather in f32, and usable
+verbatim inside the Pallas kernel's VMEM).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 # bits -> largest code magnitude (symmetric; int4 uses [-7, 7], leaving
@@ -33,9 +45,20 @@ import jax.numpy as jnp
 QMAX = {8: 127, 4: 7}
 PASSTHROUGH_BITS = 16
 
+# vector-quantized page format: d=2 vectors along head dim, 16-entry
+# per-(pool, kv-head) codebooks -> 4-bit indices, 2 bits per value
+VQ_BITS = "vq2"
+VQ_D = 2
+VQ_K = 16
 
-def storage_cols(hd: int, bits: int) -> int:
+
+def storage_cols(hd: int, bits) -> int:
     """Last-axis width of a quantized pool holding ``hd`` head dims."""
+    if bits == VQ_BITS:
+        # one 4-bit index per d=2 vector, two indices packed per byte
+        assert hd % (2 * VQ_D) == 0, \
+            f"vq2 packing needs head_dim % 4 == 0, got {hd}"
+        return hd // (2 * VQ_D)
     if bits == 4:
         assert hd % 2 == 0, f"int4 packing needs even head_dim, got {hd}"
         return hd // 2
@@ -97,36 +120,128 @@ def dequant_rows(codes: jnp.ndarray, scales: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# vector-quantized pages (vq2)
+# ---------------------------------------------------------------------------
+
+def default_codebook(n_kv_heads: int) -> jnp.ndarray:
+    """Deterministic uncalibrated codebook: a 4x4 uniform grid over
+    [-1, 1]^2, one copy per kv head -> (KV, VQ_K, VQ_D) f32. Rows are
+    amax-normalized before assignment, so the grid degrades gracefully
+    to ~2-bit uniform scalar quantization until engine-load calibration
+    replaces it with an EM fit of the actual K/V distribution."""
+    axis = jnp.linspace(-1.0, 1.0, 4, dtype=jnp.float32)
+    gx, gy = jnp.meshgrid(axis, axis, indexing="ij")
+    grid = jnp.stack([gx.reshape(-1), gy.reshape(-1)], axis=-1)
+    return jnp.broadcast_to(grid[None], (n_kv_heads, VQ_K, VQ_D))
+
+
+def pack_vq2(idx: jnp.ndarray) -> jnp.ndarray:
+    """(..., hd//VQ_D) int indices in [0, 16) -> (..., hd//4) int8 bytes
+    (index 2j in the low nibble, 2j+1 in the high nibble)."""
+    lo = idx[..., 0::2].astype(jnp.int32) & 0x0F
+    hi = idx[..., 1::2].astype(jnp.int32) & 0x0F
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_vq2(packed: jnp.ndarray) -> jnp.ndarray:
+    """(..., hd//4) int8 bytes -> (..., hd//VQ_D) int32 indices in
+    [0, 16). Unlike ``unpack_int4`` the nibbles are UNSIGNED table
+    indices, so the high nibble is masked, never sign-extended."""
+    p = packed.astype(jnp.int32) & 0xFF
+    lo = p & 0x0F
+    hi = (p >> 4) & 0x0F
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+
+
+def vq_quantize_rows(x: jnp.ndarray, codebook: jnp.ndarray):
+    """Assign fresh K or V rows to a frozen codebook for a page write.
+
+    x: (..., KV, hd) float, codebook (KV, VQ_K, VQ_D) f32 ->
+    (codes (..., KV, hd//4) int8, scales (..., KV) f32). Rows are
+    amax-normalized per (row, kv-head), split into d=2 vectors along the
+    head dim, and each vector takes the L2-nearest codebook entry
+    (argmin, lowest index on ties — deterministic, so replayed writes
+    are bit-identical). Zero rows keep scale 0 and decode to exactly 0.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    safe = jnp.where(amax > 0, amax, 1.0)
+    xn = xf / safe[..., None]
+    vecs = xn.reshape(*xn.shape[:-1], xn.shape[-1] // VQ_D, VQ_D)
+    # (..., KV, S, 1, d) - (KV, 1, k_c, d) -> (..., KV, S, k_c)
+    diff = vecs[..., :, None, :] - codebook[..., None, :, :].astype(
+        jnp.float32)
+    dist = jnp.sum(diff * diff, axis=-1)
+    idx = jnp.argmin(dist, axis=-1)
+    return pack_vq2(idx), amax
+
+
+def vq_dequant_rows(codes: jnp.ndarray, scales: jnp.ndarray,
+                    codebook: jnp.ndarray) -> jnp.ndarray:
+    """codes (..., hd//4) int8 + scales (...,) f32 + codebook
+    (..., VQ_K, VQ_D) f32 (leading dims broadcast against codes') ->
+    (..., hd) f32.
+
+    The single VQ decode expression every read path shares. The table
+    lookup is a one-hot matmul — bitwise-equal to ``codebook[idx]`` in
+    f32 (one 1.0 against zeros) and expressible inside the Pallas
+    kernel's VMEM, where a gather over a traced index tensor is not.
+    """
+    idx = unpack_vq2(codes)
+    onehot = jax.nn.one_hot(idx, VQ_K, dtype=jnp.float32)
+    vecs = jnp.matmul(onehot, codebook.astype(jnp.float32))
+    out = vecs.reshape(*codes.shape[:-1], -1)
+    return out * scales[..., None].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
 # byte accounting (serve-side pool sizing)
 # ---------------------------------------------------------------------------
 
-def row_bytes(hd: int, bits: int, *, dtype_bytes: int = 2) -> int:
+def row_bytes(hd: int, bits, *, dtype_bytes: int = 2) -> int:
     """Bytes one written token costs per kv head in ONE pool (K or V),
     including its f32 scale. ``dtype_bytes`` is the passthrough pool's
     element size (2 for bf16 serving, 4 for the fp32 CPU bench host)."""
     if bits == PASSTHROUGH_BITS:
         return hd * dtype_bytes
+    if bits == VQ_BITS:
+        return hd // (2 * VQ_D) + 4
     return hd * bits // 8 + 4
 
 
-def page_bytes(page_size: int, n_kv_heads: int, hd: int, bits: int, *,
+def vq_overhead_bytes(n_kv_heads: int) -> int:
+    """Fixed per-layer cost of the two frozen f32 codebooks (K and V
+    pools). Charged once against the pool byte budget in
+    ``blocks_for_bytes`` — it does not scale with the block count, so
+    amortizing it into ``page_bytes`` would misprice every pool size."""
+    return 2 * n_kv_heads * VQ_K * VQ_D * 4
+
+
+def page_bytes(page_size: int, n_kv_heads: int, hd: int, bits, *,
                dtype_bytes: int = 2) -> int:
-    """Bytes of one physical block across BOTH K and V pools (+ scales)."""
+    """Bytes of one physical block across BOTH K and V pools (+ scales;
+    for vq2 the rows are packed indices + scales — the codebook itself
+    is per-layer, see ``vq_overhead_bytes``)."""
     return 2 * page_size * n_kv_heads * row_bytes(hd, bits,
                                                   dtype_bytes=dtype_bytes)
 
 
 def blocks_for_bytes(pool_bytes: int, page_size: int, n_kv_heads: int,
-                     hd: int, bits: int, *, dtype_bytes: int = 2) -> int:
+                     hd: int, bits, *, dtype_bytes: int = 2) -> int:
     """How many physical blocks (incl. the reserved scratch block 0) a
     per-layer byte budget buys — the allocator then exposes
-    ``blocks - 1`` usable pages, which is where the 2-4x quantized-page
-    headroom at fixed pool bytes becomes visible. An explicit budget too
-    small for scratch + one usable block is a config error, not something
-    to silently round up past."""
+    ``blocks - 1`` usable pages, which is where the quantized-page
+    headroom at fixed pool bytes becomes visible (2-4x scalar, ~10x
+    vq2). For vq2 the codebook overhead is deducted from the budget
+    before dividing. An explicit budget too small for scratch + one
+    usable block is a config error, not something to silently round up
+    past."""
     per_block = page_bytes(page_size, n_kv_heads, hd, bits,
                            dtype_bytes=dtype_bytes)
-    n = int(pool_bytes // per_block)
+    budget = pool_bytes
+    if bits == VQ_BITS:
+        budget = pool_bytes - vq_overhead_bytes(n_kv_heads)
+    n = int(budget // per_block)
     if n < 2:
         raise ValueError(
             f"pool_bytes={pool_bytes} buys {n} block(s) of {per_block} B "

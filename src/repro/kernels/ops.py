@@ -50,6 +50,7 @@ def vql_matmul(x: jax.Array, vql, *, use_pallas: bool = True,
 
 def paged_attention(q, k_pool, v_pool, page_table, pos, *,
                     k_scale=None, v_scale=None,
+                    k_codebook=None, v_codebook=None,
                     use_pallas: bool = True, interpret: bool = True):
     """Fused paged-attention decode: one query token per slot attends over
     its page-table-mapped KV blocks (kpos <= pos masking) without
@@ -58,14 +59,21 @@ def paged_attention(q, k_pool, v_pool, page_table, pos, *,
     ``k_scale``/``v_scale`` mark a quantized pool (int8/int4 code pages +
     per-row per-kv-head f32 scales): the Pallas path DMAs code pages and
     their scale tiles and dequantizes in VMEM; the XLA path dequantizes
-    the gathered pages in the oracle. Both share kernels/kv_quant.py."""
+    the gathered pages in the oracle. ``k_codebook``/``v_codebook`` mark
+    a VQ pool (packed 4-bit index pages + frozen per-kv-head codebooks):
+    the Pallas path keeps the codebook tile resident in VMEM and does
+    the table lookup there. All paths share kernels/kv_quant.py."""
     if use_pallas:
         from repro.kernels.paged_attention import paged_attention_tpu
         return paged_attention_tpu(q, k_pool, v_pool, page_table, pos,
                                    k_scale=k_scale, v_scale=v_scale,
+                                   k_codebook=k_codebook,
+                                   v_codebook=v_codebook,
                                    interpret=interpret)
     return ref.paged_attention_ref(q, k_pool, v_pool, page_table, pos,
-                                   k_scale=k_scale, v_scale=v_scale)
+                                   k_scale=k_scale, v_scale=v_scale,
+                                   k_codebook=k_codebook,
+                                   v_codebook=v_codebook)
 
 
 def assign(x, hw, codebook, *, use_pallas: bool = True,

@@ -23,6 +23,13 @@ matching (page_size,) scale lane together and dequantizes in VMEM
 pages are decoded only inside the kernel; no fp16 logical view of the pool
 ever materializes anywhere in the serving path.
 
+VQ pools (KVQuantSpec mode "vq", "vq2"): pages hold packed 4-bit codebook
+indices over d=2 vectors along the head dim. Each program additionally
+receives its kv head's frozen (16, 2) codebook tile (page-invariant index
+map, so it stays VMEM-resident across the page grid dim) and decodes via
+``vq_dequant_rows`` — a one-hot matmul table lookup, bitwise-equal to a
+gather in f32 and shared verbatim with the oracle and the XLA gather path.
+
 Masking is the serving invariant ``kpos <= pos[slot]`` over *logical*
 positions: stale rows in recycled blocks, the tail of the slot's last page,
 the reserved scratch block 0 (where inactive slots' page-table entries
@@ -52,7 +59,10 @@ NEG_INF = -1e30
 
 def _kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
             scale, n_pages, page_size, kv_bits):
-    if kv_bits < kv_quant.PASSTHROUGH_BITS:
+    vq = kv_bits == kv_quant.VQ_BITS
+    if vq:
+        ks_ref, vs_ref, kcb_ref, vcb_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    elif kv_bits != kv_quant.PASSTHROUGH_BITS:
         ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
     else:
         o_ref, m_scr, l_scr, acc_scr = rest
@@ -66,7 +76,19 @@ def _kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     q = q_ref[0, 0].astype(jnp.float32)      # (G, hd)
-    if kv_bits < kv_quant.PASSTHROUGH_BITS:
+    if vq:
+        # in-VMEM table lookup: the page's packed 4-bit indices and its
+        # (page_size,) scale lane arrive by DMA through the table-driven
+        # index maps; the kv head's (16, 2) codebook tile stays VMEM-
+        # resident across pages. Decode is the shared vq_dequant_rows
+        # expression (one-hot matmul == gather in f32), so kernel ==
+        # oracle == gather path bit for bit — no fp view of the pool
+        # ever materializes
+        k = kv_quant.vq_dequant_rows(k_ref[0, :, 0], ks_ref[0, :, 0],
+                                     kcb_ref[0])
+        v = kv_quant.vq_dequant_rows(v_ref[0, :, 0], vs_ref[0, :, 0],
+                                     vcb_ref[0])
+    elif kv_bits != kv_quant.PASSTHROUGH_BITS:
         # in-VMEM dequant: the page's int8 codes and its (page_size,)
         # scale lane arrived by DMA through the same table-driven index
         # maps; decode is the shared kv_quant expression, so kernel ==
@@ -105,6 +127,7 @@ def _kernel(table_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_attention_tpu(q, k_pool, v_pool, page_table, pos, *,
                         k_scale=None, v_scale=None,
+                        k_codebook=None, v_codebook=None,
                         interpret: bool = False):
     """Fused paged decode attention.
 
@@ -119,6 +142,9 @@ def paged_attention_tpu(q, k_pool, v_pool, page_table, pos, *,
                  kernel attends logical positions kpos <= pos[b]
     k_scale/v_scale : optional (num_blocks, page_size, KV) f32 per-row
                  per-kv-head scales of a quantized pool
+    k_codebook/v_codebook : optional (KV, 16, 2) f32 frozen codebooks of
+                 a VQ pool; pools then hold packed 4-bit index pages
+                 (last axis hd//4) looked up in VMEM
     returns    : (B, H, hd) in q.dtype
     """
     B, H, hd = q.shape
@@ -127,8 +153,13 @@ def paged_attention_tpu(q, k_pool, v_pool, page_table, pos, *,
     G = H // KV
     scale = 1.0 / (hd ** 0.5)
     quantized = k_scale is not None
-    kv_bits = (kv_quant.infer_bits(k_pool.shape[-1], hd) if quantized
-               else kv_quant.PASSTHROUGH_BITS)
+    vq = k_codebook is not None
+    if vq:
+        kv_bits = kv_quant.VQ_BITS
+    elif quantized:
+        kv_bits = kv_quant.infer_bits(k_pool.shape[-1], hd)
+    else:
+        kv_bits = kv_quant.PASSTHROUGH_BITS
     cols = k_pool.shape[-1]
 
     qh = q.reshape(B, KV, G, hd)
@@ -158,6 +189,16 @@ def paged_attention_tpu(q, k_pool, v_pool, page_table, pos, *,
                      pl.BlockSpec((1, page_size, 1), scale_index)]
         operands += [k_scale.astype(jnp.float32),
                      v_scale.astype(jnp.float32)]
+    if vq:
+        def cb_index(b, kv, pg, table, pos):
+            # one (16, 2) codebook tile per kv head, page-invariant: it
+            # stays resident in VMEM while the page grid dim streams
+            return kv, 0, 0
+        in_specs += [
+            pl.BlockSpec((1, kv_quant.VQ_K, kv_quant.VQ_D), cb_index),
+            pl.BlockSpec((1, kv_quant.VQ_K, kv_quant.VQ_D), cb_index)]
+        operands += [k_codebook.astype(jnp.float32),
+                     v_codebook.astype(jnp.float32)]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,

@@ -50,7 +50,8 @@ def vq_assign_ref(x, hw, codebook):
 
 
 def paged_attention_ref(q, k_pool, v_pool, page_table, pos,
-                        k_scale=None, v_scale=None):
+                        k_scale=None, v_scale=None,
+                        k_codebook=None, v_codebook=None):
     """Oracle for the fused paged decode kernel: gather the logical
     (B, n_pages*page_size) K/V view through the page table, mask logical
     positions kpos > pos per slot, dense softmax attention. This is exactly
@@ -65,6 +66,11 @@ def paged_attention_ref(q, k_pool, v_pool, page_table, pos,
     their last axis is hd//2) and the gathered pages are dequantized
     per-page with kernels/kv_quant.dequant_rows, the identical expression
     the Pallas kernel evaluates in VMEM.
+
+    VQ pools: additionally pass ``k_codebook``/``v_codebook`` (KV, 16, 2)
+    f32 — pools then hold packed 4-bit codebook indices (last axis hd//4)
+    and decode through kv_quant.vq_dequant_rows, again the literal
+    expression the Pallas kernel evaluates in VMEM.
     """
     B, H, hd = q.shape
     page_size, KV = k_pool.shape[1], k_pool.shape[2]
@@ -73,7 +79,12 @@ def paged_attention_ref(q, k_pool, v_pool, page_table, pos,
     Sk = n_pages * page_size
     kg = k_pool[page_table].reshape(B, Sk, KV, -1)
     vg = v_pool[page_table].reshape(B, Sk, KV, -1)
-    if k_scale is not None:
+    if k_codebook is not None:
+        kg = kv_quant.vq_dequant_rows(
+            kg, k_scale[page_table].reshape(B, Sk, KV), k_codebook)
+        vg = kv_quant.vq_dequant_rows(
+            vg, v_scale[page_table].reshape(B, Sk, KV), v_codebook)
+    elif k_scale is not None:
         bits = kv_quant.infer_bits(k_pool.shape[-1], hd)
         kg = kv_quant.dequant_rows(
             kg, k_scale[page_table].reshape(B, Sk, KV), bits)

@@ -47,12 +47,17 @@ def main():
                          "FusedVQLinear leaves ('fused' = Pallas kernel on "
                          "TPU, its XLA oracle elsewhere); with --vq this "
                          "skips the per-tick dense-weight materialization")
-    ap.add_argument("--kv-cache-bits", type=int, default=16,
-                    choices=[16, 8, 4],
+    ap.add_argument("--kv-cache-bits", default=16,
+                    type=lambda s: s if s == "vq2" else int(s),
+                    choices=[16, 8, 4, "vq2"],
                     help="paged KV-cache storage: 16 = passthrough dtype, "
                          "8/4 = int8/packed-int4 pages with per-row "
                          "per-kv-head scales, dequantized on the fly by "
-                         "every read path (2-4x more pages per byte)")
+                         "every read path (2-4x more pages per byte); "
+                         "vq2 = vector-quantized pages (4-bit codebook "
+                         "indices over d=2 head-dim vectors, ~10x pages "
+                         "per byte; codebooks EM-calibrated at engine "
+                         "load, then frozen)")
     ap.add_argument("--prefix-cache", default="off", choices=["on", "off"],
                     help="radix prefix cache + refcounted copy-on-write "
                          "page tables: admitted prompts whose prefix was "
@@ -123,7 +128,7 @@ def main():
                  vq_matmul_impl=args.vq_matmul_impl,
                  prefix_cache=prefix_on,
                  telemetry=telemetry)
-    if args.kv_cache_bits < 16:
+    if args.kv_cache_bits != 16:
         import dataclasses as _dc
 
         import jax.numpy as jnp
@@ -175,6 +180,7 @@ def main():
         print(f"event stream -> {args.events_out}")
     if args.trace_dir:
         print(f"profiler trace -> {args.trace_dir}")
+    eng.close()
     telemetry.close()
     for r in reqs[:2]:
         print(f"  req {r.rid}: {list(r.prompt)[:4]}... -> {r.out_tokens[:8]}")

@@ -119,19 +119,53 @@ class KVQuantSpec:
     quantize in-graph and every read path (gather / XLA oracle / fused
     Pallas kernel) dequantizes on the fly through kernels/kv_quant.py, so
     a logical fp view of the pool is never materialized.
+
+    ``mode="vq"`` (``KVQuantSpec.of("vq2")``; bits=2) stores vector-
+    quantized pages instead: 4-bit codebook indices over d=2 vectors
+    along the head dim (2 bits per value), against per-(pool, kv-head)
+    codebooks carried as cache leaves (``PagedKVCache.k_codebook`` /
+    ``v_codebook``). Per-row amax scales are kept, so the zero-row and
+    stale-row invariants are identical to the scalar formats.
     """
     bits: int = 16
+    mode: str = "scalar"
 
     def __post_init__(self):
-        assert self.bits in (16, 8, 4), self.bits
+        assert self.mode in ("scalar", "vq"), self.mode
+        if self.mode == "vq":
+            assert self.bits == 2, self.bits
+        else:
+            assert self.bits in (16, 8, 4), self.bits
+
+    @classmethod
+    def of(cls, bits) -> "KVQuantSpec":
+        """Parse an engine/CLI ``kv_cache_bits`` value: 16/8/4 or the
+        string "vq2"."""
+        if isinstance(bits, KVQuantSpec):
+            return bits
+        from repro.kernels import kv_quant
+        if bits == kv_quant.VQ_BITS:
+            return cls(bits=2, mode="vq")
+        return cls(bits=int(bits))
 
     @property
     def quantized(self) -> bool:
         return self.bits < 16
 
+    @property
+    def vq(self) -> bool:
+        return self.mode == "vq"
+
+    @property
+    def fmt(self):
+        """The kernels/kv_quant.py format token: int bits or "vq2"
+        (what the byte-accounting helpers take as ``bits``)."""
+        from repro.kernels import kv_quant
+        return kv_quant.VQ_BITS if self.vq else self.bits
+
     def storage_cols(self, hd: int) -> int:
         from repro.kernels import kv_quant
-        return kv_quant.storage_cols(hd, self.bits) if self.quantized else hd
+        return kv_quant.storage_cols(hd, self.fmt) if self.quantized else hd
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,24 +207,37 @@ class PagedKVCache(NamedTuple):
     passthrough pools leave the scale leaves None (jax treats None as an
     empty subtree, so the pytree contract of every existing caller is
     unchanged).
+
+    Vector-quantized pools (KVQuantSpec mode "vq") additionally carry
+    the frozen per-(pool, kv-head) codebooks as cache leaves
+    (``k_codebook``/``v_codebook``, (KV, 16, 2) f32); ``k``/``v`` then
+    hold packed 4-bit codebook indices (last axis hd//4). Codebook
+    presence — not the spec — is what the read/write paths key on, the
+    same self-description rule the scalar formats use for scales.
     """
-    k: jax.Array           # (num_blocks, page_size, KV, hd | hd*bits/8)
-    v: jax.Array           # (num_blocks, page_size, KV, hd | hd*bits/8)
+    k: jax.Array           # (num_blocks, page_size, KV, storage_cols)
+    v: jax.Array           # (num_blocks, page_size, KV, storage_cols)
     page_table: jax.Array  # (B, n_pages) int32; 0 = scratch block
     k_scale: jax.Array | None = None  # (num_blocks, page_size, KV) f32
     v_scale: jax.Array | None = None  # (num_blocks, page_size, KV) f32
+    k_codebook: jax.Array | None = None  # (KV, VQ_K, VQ_D) f32
+    v_codebook: jax.Array | None = None  # (KV, VQ_K, VQ_D) f32
 
 
 def init_paged_cache(cfg: ModelConfig, batch: int, max_len: int,
                      layout: PagedLayout, dtype=jnp.bfloat16) -> PagedKVCache:
     table = jnp.zeros((batch, layout.n_pages(max_len)), jnp.int32)
     if layout.kv.quantized:
+        from repro.kernels import kv_quant
         shape = (layout.num_blocks, layout.page_size, cfg.n_kv_heads,
                  layout.kv.storage_cols(cfg.hd))
         sshape = shape[:-1]
+        cb = (kv_quant.default_codebook(cfg.n_kv_heads)
+              if layout.kv.vq else None)
         return PagedKVCache(
             jnp.zeros(shape, jnp.int8), jnp.zeros(shape, jnp.int8), table,
-            jnp.zeros(sshape, jnp.float32), jnp.zeros(sshape, jnp.float32))
+            jnp.zeros(sshape, jnp.float32), jnp.zeros(sshape, jnp.float32),
+            cb, cb)
     shape = (layout.num_blocks, layout.page_size, cfg.n_kv_heads, cfg.hd)
     return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
                         table)
@@ -456,6 +503,13 @@ def _paged_apply(p, cache: PagedKVCache, q, k, v, pos_arr, out_dtype,
     The format is inferred from the cache leaves themselves (scales
     present + stored column count), so it can never disagree with the
     storage the engine allocated via PagedLayout.kv.
+
+    VQ pools (the cache's codebook leaves are present): rows store 4-bit
+    codebook indices instead of scalar codes. The codebooks are frozen
+    (the engine calibrates them once at load, before any serving write),
+    so assignment at this scatter site is a pure deterministic function
+    of the written row — replayed and interleaved writes stay
+    bit-identical, the same property the scalar round gives.
     """
     from repro.kernels import kv_quant as kvq
 
@@ -463,8 +517,13 @@ def _paged_apply(p, cache: PagedKVCache, q, k, v, pos_arr, out_dtype,
     page_size = cache.k.shape[1]
     n_pages = cache.page_table.shape[-1]
     quantized = cache.k_scale is not None
-    kv_bits = (kvq.infer_bits(cache.k.shape[-1], q.shape[-1])
-               if quantized else kvq.PASSTHROUGH_BITS)
+    vq = cache.k_codebook is not None
+    if vq:
+        kv_bits = kvq.VQ_BITS
+    elif quantized:
+        kv_bits = kvq.infer_bits(cache.k.shape[-1], q.shape[-1])
+    else:
+        kv_bits = kvq.PASSTHROUGH_BITS
     page = pos_arr // page_size
     blk = jnp.take_along_axis(
         cache.page_table, jnp.minimum(page, n_pages - 1), axis=1)  # (B, S)
@@ -474,8 +533,12 @@ def _paged_apply(p, cache: PagedKVCache, q, k, v, pos_arr, out_dtype,
     blk = jnp.where(page < n_pages, blk, 0)
     off = pos_arr % page_size
     if quantized:
-        kc, ks = kvq.quantize_kv(k, kv_bits)
-        vc, vs = kvq.quantize_kv(v, kv_bits)
+        if vq:
+            kc, ks = kvq.vq_quantize_rows(k, cache.k_codebook)
+            vc, vs = kvq.vq_quantize_rows(v, cache.v_codebook)
+        else:
+            kc, ks = kvq.quantize_kv(k, kv_bits)
+            vc, vs = kvq.quantize_kv(v, kv_bits)
         ck = cache.k.at[blk, off].set(kc)
         cv = cache.v.at[blk, off].set(vc)
         cks = cache.k_scale.at[blk, off].set(ks)
@@ -484,7 +547,8 @@ def _paged_apply(p, cache: PagedKVCache, q, k, v, pos_arr, out_dtype,
         ck = cache.k.at[blk, off].set(k.astype(cache.k.dtype))
         cv = cache.v.at[blk, off].set(v.astype(cache.v.dtype))
         cks = cvs = None
-    new_cache = PagedKVCache(ck, cv, cache.page_table, cks, cvs)
+    new_cache = PagedKVCache(ck, cv, cache.page_table, cks, cvs,
+                             cache.k_codebook, cache.v_codebook)
 
     impl = impl or _PAGED_IMPL["impl"]
     if S == 1 and impl in ("xla", "pallas"):
@@ -493,6 +557,7 @@ def _paged_apply(p, cache: PagedKVCache, q, k, v, pos_arr, out_dtype,
         o = ops.paged_attention(
             q[:, 0], ck, cv, cache.page_table, pos_arr[:, 0],
             k_scale=cks, v_scale=cvs,
+            k_codebook=cache.k_codebook, v_codebook=cache.v_codebook,
             use_pallas=(impl == "pallas"),
             interpret=jax.default_backend() != "tpu")
         return cm.matmul(o.reshape(B, 1, -1), p["wo"]).astype(out_dtype), new_cache
@@ -501,7 +566,14 @@ def _paged_apply(p, cache: PagedKVCache, q, k, v, pos_arr, out_dtype,
     Sk = n_pages * page_size
     kg = ck[cache.page_table].reshape(B, Sk, *ck.shape[2:])
     vg = cv[cache.page_table].reshape(B, Sk, *cv.shape[2:])
-    if quantized:
+    if vq:
+        kg = kvq.vq_dequant_rows(
+            kg, cks[cache.page_table].reshape(B, Sk, kg.shape[2]),
+            cache.k_codebook)
+        vg = kvq.vq_dequant_rows(
+            vg, cvs[cache.page_table].reshape(B, Sk, vg.shape[2]),
+            cache.v_codebook)
+    elif quantized:
         kg = kvq.dequant_rows(
             kg, cks[cache.page_table].reshape(B, Sk, kg.shape[2]), kv_bits)
         vg = kvq.dequant_rows(

@@ -30,9 +30,11 @@ Recurrent/ssm state leaves (mamba h/conv, xLSTM C/n/m, enc-dec cross K/V)
 are O(1) per slot and stay slot-resident; only attention KV pages.
 
 Pages may be stored low-bit (``kv_cache_bits`` 8/4 — int8 or packed-int4
-codes + per-row per-kv-head scales, models/attention.KVQuantSpec): writes
-quantize in-graph at the existing scatter sites and every read path
-dequantizes on the fly, so the same pool bytes hold 2-4x the pages
+codes + per-row per-kv-head scales — or "vq2": packed 4-bit codebook
+indices over d=2 head-dim vectors against frozen engine-load-calibrated
+codebooks; models/attention.KVQuantSpec): writes quantize in-graph at the
+existing scatter sites and every read path dequantizes on the fly, so the
+same pool bytes hold 2-4x (scalar) to ~10x (vq2) the pages
 (``pool_bytes=`` sizes the allocator by budget instead of block count).
 
 Telemetry (PR 7): every engine owns an ``obs.Telemetry`` (pass your own
@@ -84,6 +86,71 @@ class Request:
                                  # the n-1 child Requests (rid "rid.i")
 
 
+def calibrate_vq_codebooks(model: Model, params, cache, *,
+                           page_size: int = 16, calib_len: int = 64,
+                           vq_impl: str | None = "gather",
+                           em_iters: int = 25):
+    """Fit frozen vq2 KV-page codebooks from a short calibration capture
+    and return ``cache`` with its codebook leaves replaced.
+
+    A one-sequence slice of the deterministic calibration corpus
+    (data/calibration.calibration_tokens) runs through a small fp32
+    passthrough paged cache with an identity page table; the K/V rows
+    each layer wrote are read back out of the capture pool, amax-
+    normalized per (row, kv-head) — the same normalization the write
+    path applies before assignment — split into d=2 vectors along the
+    head dim, and EM-fit per (pool, kv-head) with core/codebook
+    (Hessian weights 1, i.e. plain k-means; Mahalanobis seeding).
+
+    Everything here is deterministic (fixed corpus, fixed seeding, fixed
+    iteration count), so two engines over the same model produce
+    bit-identical codebooks — which is what lets frozen-codebook
+    assignment preserve the interleaved-vs-solo and preemption-replay
+    token-identity invariants. Exposed at module level so tests and
+    benches that build caches directly (no Engine) calibrate the exact
+    same way."""
+    from repro.core.codebook import init_codebook
+    from repro.data.calibration import calibration_tokens
+    from repro.kernels import kv_quant as kvq
+
+    npc = -(-calib_len // page_size)
+    cap = model.init_cache(1, npc * page_size, dtype=jnp.float32,
+                           paged=PagedLayout(npc + 1, page_size))
+    cap = pc.push_page_table(cap, np.arange(1, npc + 1,
+                                            dtype=np.int32)[None])
+    toks = calibration_tokens(model.cfg.vocab_size, n_sequences=1,
+                              seq_len=calib_len)
+    _, cap, _ = model.forward(
+        params, {"tokens": toks}, cache=cap,
+        pos=jnp.zeros((1,), jnp.int32), paged_impl="gather",
+        vq_matmul_impl=vq_impl)
+
+    def fit(pool):
+        # pool (*stack, num_blocks, page_size, KV, hd): blocks 1..npc
+        # hold the capture's first calib_len rows in logical order
+        stack = pool.shape[:-4]
+        nb, ps, KV, hd = pool.shape[-4:]
+        rows = pool[..., 1:, :, :, :].reshape(*stack, (nb - 1) * ps, KV, hd)
+        x = jnp.moveaxis(rows[..., :calib_len, :, :], -2, -3)
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        xn = x / jnp.where(amax > 0, amax, 1.0)
+        X = xn.reshape(*stack, KV, -1, kvq.VQ_D)
+        flat = X.reshape((-1,) + X.shape[-2:])
+        cbs = jax.vmap(lambda Xi: init_codebook(
+            Xi, jnp.ones_like(Xi), k=kvq.VQ_K, iters=em_iters))(flat)
+        return cbs.reshape(*stack, KV, kvq.VQ_K, kvq.VQ_D).astype(
+            jnp.float32)
+
+    def inject(dst, src):
+        if isinstance(dst, PagedKVCache):
+            return dst._replace(k_codebook=fit(src.k),
+                                v_codebook=fit(src.v))
+        return dst
+
+    return jax.tree.map(inject, cache, cap,
+                        is_leaf=lambda x: isinstance(x, PagedKVCache))
+
+
 class Engine:
     def __init__(self, model: Model, params, *, max_batch: int = 8,
                  max_len: int = 512, eos_id: int | None = None, seed: int = 0,
@@ -105,10 +172,14 @@ class Engine:
 
         ``kv_cache_bits`` selects the page storage format (16 =
         passthrough dtype, 8/4 = int8/packed-int4 code pages with per-row
-        per-kv-head f32 scales; models/attention.KVQuantSpec). It rides on
-        the PagedLayout into every family's ``init_cache``, so all read
-        and write paths — including the fused kernel — see quantized
-        pages with no forward-signature change.
+        per-kv-head f32 scales; the string "vq2" = vector-quantized pages
+        holding 4-bit codebook indices over d=2 head-dim vectors, 2 bits
+        per value; models/attention.KVQuantSpec). It rides on the
+        PagedLayout into every family's ``init_cache``, so all read and
+        write paths — including the fused kernel — see quantized pages
+        with no forward-signature change. For "vq2" the per-(pool,
+        kv-head) codebooks are EM-calibrated once here at construction
+        (calibrate_vq_codebooks) and frozen before any serving write.
 
         ``pool_bytes`` sizes the pool by a per-layer byte budget instead
         of a block count: the allocator then exposes however many pages
@@ -166,7 +237,7 @@ class Engine:
         self.max_len = max_len
         self.eos_id = eos_id
         self.key = jax.random.PRNGKey(seed)
-        kv_spec = KVQuantSpec(bits=kv_cache_bits)
+        kv_spec = KVQuantSpec.of(kv_cache_bits)
         self.kv_cache_bits = kv_cache_bits
 
         dtype = jnp.float32
@@ -175,7 +246,7 @@ class Engine:
             assert num_blocks is None, \
                 "pass num_blocks or pool_bytes, not both"
             num_blocks = pc.pool_blocks_for_bytes(
-                pool_bytes, model.cfg, page_size, kv_cache_bits, dtype)
+                pool_bytes, model.cfg, page_size, kv_spec.fmt, dtype)
         elif num_blocks is None:
             # default pool holds every slot at full depth (+ scratch);
             # pass a smaller pool to oversubscribe and exercise preemption
@@ -186,6 +257,13 @@ class Engine:
 
         self.cache = model.init_cache(max_batch, max_len, dtype=dtype,
                                       paged=self.layout)
+        if kv_spec.vq:
+            # calibrate-then-freeze: the codebook leaves are replaced
+            # exactly once, before any serving write, so every subsequent
+            # page write assigns against the same frozen tables
+            self.cache = calibrate_vq_codebooks(
+                model, params, self.cache, page_size=page_size,
+                calib_len=min(64, max_len), vq_impl=self.vq_matmul_impl)
         self.axes = pc.batch_axes(model, max_batch, max_len, dtype,
                                   self.layout)
         # B=1 template for resetting a slot's recurrent rows on admission
@@ -298,7 +376,7 @@ class Engine:
                 "prefill_chunks": self._prefill_chunks,
                 "preemptions": self._preemptions,
                 "queue_depth": len(self.scheduler.queue),
-                "pool_used_blocks": alloc.capacity - alloc.free_blocks,
+                "pool_used_blocks": alloc.used_blocks,
                 "pool_free_blocks": alloc.free_blocks,
                 "shared_blocks": alloc.shared_blocks,
                 "prefix_hits": pfx.hits if pfx else 0,
@@ -430,7 +508,7 @@ class Engine:
         # per-tick registry feed: queue/occupancy gauges mirror the
         # scheduler + allocator accounting exactly (fuzz-tested invariant)
         alloc = self.scheduler.allocator
-        used = alloc.capacity - alloc.free_blocks
+        used = alloc.used_blocks
         self._m_queue.set(len(self.scheduler.queue))
         self._m_used.set(used)
         self._m_free.set(alloc.free_blocks)
@@ -537,6 +615,18 @@ class Engine:
         self.telemetry.on_preempt(victim.req.rid)
         victim.req.out_tokens.clear()
         victim.req.done = False
+
+    # -- teardown ----------------------------------------------------------
+
+    def close(self):
+        """Release engine-held pool state. Clearing the prefix cache
+        returns its block references to the allocator AND zeroes its
+        LRU clock + hit/miss/eviction counters, so a restarted engine
+        (or a launcher serving several engines back to back) never
+        reports stale prefix stats. Idempotent."""
+        if self.prefix_cache is not None:
+            self.prefix_cache.clear()
+        self._dev_cache.clear()
 
     # -- driver ------------------------------------------------------------
 

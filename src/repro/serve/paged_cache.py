@@ -218,12 +218,15 @@ def push_page_table(cache, table: np.ndarray):
 # ---------------------------------------------------------------------------
 
 def pool_blocks_for_bytes(pool_bytes: int, cfg, layout_page_size: int,
-                          kv_bits: int, dtype=jnp.bfloat16) -> int:
+                          kv_bits, dtype=jnp.bfloat16) -> int:
     """Blocks a per-layer byte budget buys for this model's K/V pool
     (incl. the reserved scratch block). Quantized pages cost
     ``hd * bits/8 + 4`` bytes per (token, kv-head) per pool (codes + f32
     scale) instead of ``hd * itemsize``, so the same budget exposes
-    ~2-4x the allocatable pages — the whole point of low-bit pages."""
+    ~2-4x the allocatable pages — the whole point of low-bit pages.
+    ``kv_bits`` "vq2" prices packed 4-bit index pages (hd//4 + 4 bytes
+    per row per pool, ~10x) with the frozen codebooks' fixed bytes
+    charged against the budget first (kv_quant.vq_overhead_bytes)."""
     from repro.kernels import kv_quant
     dtype_bytes = jnp.zeros((), dtype).dtype.itemsize
     return kv_quant.blocks_for_bytes(
@@ -233,9 +236,13 @@ def pool_blocks_for_bytes(pool_bytes: int, cfg, layout_page_size: int,
 
 def pool_bytes_of(cfg, layout: PagedLayout, dtype=jnp.bfloat16) -> int:
     """Per-layer byte size of a pool with the given layout (both pools +
-    scale overhead; the page table is negligible and excluded)."""
+    scale overhead + the vq codebooks when present; the page table is
+    negligible and excluded)."""
     from repro.kernels import kv_quant
     dtype_bytes = jnp.zeros((), dtype).dtype.itemsize
-    return layout.num_blocks * kv_quant.page_bytes(
-        layout.page_size, cfg.n_kv_heads, cfg.hd, layout.kv.bits,
+    total = layout.num_blocks * kv_quant.page_bytes(
+        layout.page_size, cfg.n_kv_heads, cfg.hd, layout.kv.fmt,
         dtype_bytes=dtype_bytes)
+    if layout.kv.vq:
+        total += kv_quant.vq_overhead_bytes(cfg.n_kv_heads)
+    return total

@@ -47,13 +47,14 @@ Correctness notes that the tests pin:
 from __future__ import annotations
 
 import dataclasses
+import heapq
 
 import numpy as np
 
 from repro.serve.paged_cache import BlockAllocator
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class PrefixNode:
     """One cached full page: ``key`` is the page's token ids, ``block``
     the physical pool block holding its K/V."""
@@ -79,8 +80,17 @@ class PrefixCache:
         self.allocator = allocator
         self.page_size = page_size
         self.root = PrefixNode(key=(), block=-1, parent=None)
-        self._nodes: list[PrefixNode] = []   # flat registry (eviction scan)
-        self._clock = 0                      # LRU touch counter
+        self._nodes: set[PrefixNode] = set()  # flat registry (membership)
+        self._clock = 0                       # LRU touch counter
+        # lazy-deletion min-heap of (last_used, tiebreak, node): every
+        # touch pushes a fresh entry and leaves the old one stale in
+        # place; evict_one pops in LRU order and discards entries whose
+        # stamp no longer matches the node (superseded or evicted). This
+        # keeps eviction O(log n) amortized — the old full-registry scan
+        # plus list.remove made draining a cold cache under pool
+        # pressure O(n^2).
+        self._heap: list[tuple[int, int, PrefixNode]] = []
+        self._heap_seq = 0
         # host-side stats (the engine mirrors these into obs/ metrics)
         self.hits = 0
         self.misses = 0
@@ -92,6 +102,8 @@ class PrefixCache:
     def _touch(self, node: PrefixNode):
         self._clock += 1
         node.last_used = self._clock
+        self._heap_seq += 1
+        heapq.heappush(self._heap, (node.last_used, self._heap_seq, node))
 
     def _page_key(self, tokens, page: int) -> tuple:
         lo = page * self.page_size
@@ -158,7 +170,7 @@ class PrefixCache:
                 child = PrefixNode(key=key, block=pages[page], parent=node)
                 self.allocator.share([child.block])
                 node.children[key] = child
-                self._nodes.append(child)
+                self._nodes.add(child)
             self._touch(child)
             node = child
 
@@ -174,12 +186,28 @@ class PrefixCache:
     def evict_one(self) -> bool:
         """Drop the least-recently-used evictable leaf, returning its
         block to the pool. False when nothing can be evicted (every
-        cached block is still shared with a live sequence)."""
+        cached block is still shared with a live sequence).
+
+        O(log n) amortized: pop the heap in LRU order, skipping stale
+        entries (node already evicted, or its stamp superseded by a
+        later touch). Entries that are current but not evictable —
+        interior nodes, blocks a live sequence still holds — are set
+        aside and re-pushed with their unchanged stamp, so they keep
+        their LRU position and become poppable once their children
+        evict or the co-holder releases."""
+        deferred = []
         victim = None
-        for n in self._nodes:
-            if self._evictable(n) and (victim is None
-                                       or n.last_used < victim.last_used):
-                victim = n
+        while self._heap:
+            stamp, seq, node = heapq.heappop(self._heap)
+            if node not in self._nodes or stamp != node.last_used:
+                continue
+            if not self._evictable(node):
+                deferred.append((stamp, seq, node))
+                continue
+            victim = node
+            break
+        for entry in deferred:
+            heapq.heappush(self._heap, entry)
         if victim is None:
             return False
         self.allocator.release([victim.block])
@@ -189,8 +217,17 @@ class PrefixCache:
         return True
 
     def clear(self):
-        """Release every cached block (engine shutdown / tests)."""
+        """Release every cached block and reset the LRU clock and the
+        hit/miss/eviction counters (engine teardown — a restarted engine
+        must not report stale prefix stats)."""
         for n in self._nodes:
             self.allocator.release([n.block])
         self._nodes.clear()
         self.root.children.clear()
+        self._heap.clear()
+        self._heap_seq = 0
+        self._clock = 0
+        self.hits = 0
+        self.misses = 0
+        self.hit_tokens = 0
+        self.evictions = 0

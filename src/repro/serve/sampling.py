@@ -16,8 +16,16 @@ import jax.numpy as jnp
 def _sample_scaled(key, logits: jax.Array, top_k: int, top_p: float):
     """Categorical draw from already temperature-scaled logits."""
     if top_k > 0:
-        kth = jnp.sort(logits, axis=-1)[:, -top_k][:, None]
-        logits = jnp.where(logits < kth, -1e30, logits)
+        # rank-based cut, not a threshold against the k-th value: a
+        # threshold keeps every logit tied with the k-th (more than k
+        # survivors), and top_k >= V used to index out of range. Ranks
+        # come from a double argsort of the descending order (stable, so
+        # ties break toward the lowest vocab index — deterministic);
+        # exactly min(top_k, V) candidates survive.
+        k = min(top_k, logits.shape[-1])
+        order = jnp.argsort(-logits, axis=-1)
+        ranks = jnp.argsort(order, axis=-1)
+        logits = jnp.where(ranks < k, logits, -1e30)
     if top_p > 0.0:
         sorted_l = jnp.sort(logits, axis=-1)[:, ::-1]
         probs = jax.nn.softmax(sorted_l, axis=-1)

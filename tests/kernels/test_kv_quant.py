@@ -1,0 +1,165 @@
+"""Unit tests for kernels/kv_quant.py edges: the scalar int8/int4 pack
+and byte-accounting corners that every paged read/write path leans on,
+plus the vq2 vector-quantized page format (pack/unpack, deterministic
+assignment, the shared one-hot-matmul decode expression, and the
+codebook-overhead byte math)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import kv_quant as kvq
+
+
+class TestInt4Pack:
+    def test_roundtrip_full_code_range(self):
+        """Every legal int4 code in [-7, 7] survives pack -> unpack, in
+        every nibble position."""
+        codes = jnp.asarray(
+            np.stack([np.arange(-7, 8, dtype=np.int8),
+                      np.arange(7, -8, -1, dtype=np.int8)]).reshape(2, -1))
+        # odd length: pad to even head dim as the packer requires
+        codes = jnp.concatenate([codes, codes[:, :1]], axis=-1)
+        assert codes.shape[-1] % 2 == 0
+        out = kvq.unpack_int4(kvq.pack_int4(codes))
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+    def test_minus_eight_never_produced(self):
+        """quantize_kv clips symmetric to [-7, 7]: -8 must not appear even
+        for adversarial inputs at the negative extreme."""
+        x = jnp.asarray([[-1.0, 1.0, -1.0, -0.99] * 4], jnp.float32)
+        x = x.reshape(1, 1, 16)  # (rows, KV, hd)
+        codes, _ = kvq.quantize_kv(x, 4)
+        unpacked = np.asarray(kvq.unpack_int4(codes))
+        assert unpacked.min() >= -7 and unpacked.max() <= 7
+
+    def test_int8_codes_symmetric(self):
+        x = jnp.asarray(np.linspace(-3, 3, 32, dtype=np.float32)
+                        ).reshape(1, 2, 16)
+        codes, _ = kvq.quantize_kv(x, 8)
+        c = np.asarray(codes)
+        assert c.min() >= -127 and c.max() <= 127
+
+
+class TestInferBits:
+    def test_hd2_edges(self):
+        """hd=2 is the smallest packable head dim: cols==2 must read as
+        int8, cols==1 (== hd//2) as packed int4."""
+        assert kvq.infer_bits(2, 2) == 8
+        assert kvq.infer_bits(1, 2) == 4
+
+    def test_typical_shapes(self):
+        assert kvq.infer_bits(64, 64) == 8
+        assert kvq.infer_bits(32, 64) == 4
+
+    def test_mismatched_cols_rejected(self):
+        with pytest.raises(AssertionError):
+            kvq.infer_bits(3, 8)
+
+
+class TestZeroRows:
+    @pytest.mark.parametrize("bits", [8, 4])
+    def test_scalar_zero_row_scale0_dequants_to_zero(self, bits):
+        x = jnp.zeros((3, 2, 16), jnp.float32)
+        codes, scales = kvq.quantize_kv(x, bits)
+        assert float(jnp.max(jnp.abs(scales))) == 0.0
+        dec = kvq.dequant_rows(codes, scales, bits)
+        assert float(jnp.max(jnp.abs(dec))) == 0.0
+        assert bool(jnp.all(jnp.isfinite(dec)))
+
+    def test_vq_zero_row_scale0_dequants_to_zero(self):
+        cb = kvq.default_codebook(2)
+        x = jnp.zeros((3, 2, 16), jnp.float32)
+        codes, scales = kvq.vq_quantize_rows(x, cb)
+        assert float(jnp.max(jnp.abs(scales))) == 0.0
+        dec = kvq.vq_dequant_rows(codes, scales, cb)
+        assert float(jnp.max(jnp.abs(dec))) == 0.0
+
+
+class TestBlocksForBytes:
+    def test_two_block_boundary(self):
+        """Exactly 2 blocks (scratch + one usable) is the legal minimum;
+        one byte less must raise, not silently round up."""
+        per_block = kvq.page_bytes(8, 2, 16, 8, dtype_bytes=4)
+        assert kvq.blocks_for_bytes(2 * per_block, 8, 2, 16, 8,
+                                    dtype_bytes=4) == 2
+        with pytest.raises(ValueError):
+            kvq.blocks_for_bytes(2 * per_block - 1, 8, 2, 16, 8,
+                                 dtype_bytes=4)
+
+    def test_vq2_boundary_includes_codebook_overhead(self):
+        """For vq2 the frozen codebooks' bytes are charged against the
+        budget before dividing: a budget of exactly 2 blocks of index
+        pages without the codebook allowance must raise."""
+        per_block = kvq.page_bytes(8, 2, 16, kvq.VQ_BITS, dtype_bytes=4)
+        overhead = kvq.vq_overhead_bytes(2)
+        assert kvq.blocks_for_bytes(2 * per_block + overhead, 8, 2, 16,
+                                    kvq.VQ_BITS, dtype_bytes=4) == 2
+        with pytest.raises(ValueError):
+            kvq.blocks_for_bytes(2 * per_block + overhead - 1, 8, 2, 16,
+                                 kvq.VQ_BITS, dtype_bytes=4)
+
+
+class TestVQ2Format:
+    def test_storage_cols(self):
+        assert kvq.storage_cols(16, kvq.VQ_BITS) == 4
+        assert kvq.storage_cols(32, kvq.VQ_BITS) == 8
+        with pytest.raises(AssertionError):
+            kvq.storage_cols(6, kvq.VQ_BITS)  # hd % 4 != 0
+
+    def test_pack_unpack_roundtrip_full_index_range(self):
+        """All 16 index values survive pack -> unpack in both nibble
+        positions, and always come back unsigned (no sign extension)."""
+        idx = jnp.asarray(np.stack([np.arange(16), np.arange(15, -1, -1)])
+                          .astype(np.int32))
+        out = np.asarray(kvq.unpack_vq2(kvq.pack_vq2(idx)))
+        np.testing.assert_array_equal(out, np.asarray(idx))
+        assert out.min() >= 0 and out.max() <= 15
+
+    def test_assignment_deterministic_and_tie_lowest_index(self):
+        """argmin assignment: re-running is bit-identical, and a vector
+        equidistant between two entries takes the lower index."""
+        cb = jnp.asarray([[[1.0, 0.0], [-1.0, 0.0]] + [[9.0, 9.0]] * 14],
+                         jnp.float32)  # (1 kv head, 16, 2)
+        # hd=4 -> two d=2 vectors, both (0, 1) after amax normalization:
+        # equidistant from entries 0 (1,0) and 1 (-1,0)
+        x = jnp.asarray([0.0, 1.0, 0.0, 1.0], jnp.float32).reshape(1, 1, 4)
+        c1, _ = kvq.vq_quantize_rows(x, cb)
+        c2, _ = kvq.vq_quantize_rows(x, cb)
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+        assert np.asarray(kvq.unpack_vq2(c1)).reshape(-1).tolist() == [0, 0]
+
+    def test_dequant_is_bitwise_gather(self):
+        """The shared decode expression (one-hot matmul) must equal an
+        explicit codebook gather bit for bit — that equality is what
+        makes kernel == oracle == gather-path exact, not approximate."""
+        rng = np.random.default_rng(7)
+        KV, hd, n = 3, 16, 40
+        cb = jnp.asarray(rng.normal(size=(KV, 16, 2)), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(n, KV, hd)), jnp.float32)
+        codes, scales = kvq.vq_quantize_rows(x, cb)
+        dec = kvq.vq_dequant_rows(codes, scales, cb)
+        idx = kvq.unpack_vq2(codes)
+        vecs = jax.vmap(lambda c, i: c[i], in_axes=(0, 1), out_axes=1)(
+            cb, idx)
+        ref = (vecs.reshape(n, KV, hd)
+               * scales[..., None].astype(jnp.float32))
+        np.testing.assert_array_equal(np.asarray(dec), np.asarray(ref))
+
+    def test_default_codebook_roundtrip_error_bound(self):
+        """The uncalibrated 4x4 grid codebook behaves like 2-bit uniform
+        quantization of the normalized row: |x - dec| <= amax/3 + eps."""
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.normal(size=(64, 2, 16)), jnp.float32)
+        cb = kvq.default_codebook(2)
+        codes, scales = kvq.vq_quantize_rows(x, cb)
+        dec = kvq.vq_dequant_rows(codes, scales, cb)
+        amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+        err = jnp.max(jnp.abs(dec - x) / jnp.where(amax > 0, amax, 1.0))
+        assert float(err) <= 1.0 / 3.0 + 1e-6
+
+    def test_row_bytes_headroom(self):
+        """At the bench shape (hd=32, fp32 host) a vq2 row is 12 B vs
+        128 B passthrough — the source of the >= 10x page headroom."""
+        assert kvq.row_bytes(32, kvq.VQ_BITS) == 12
+        assert kvq.row_bytes(32, 16, dtype_bytes=4) == 128

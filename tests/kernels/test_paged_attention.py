@@ -9,13 +9,15 @@ Coverage: page_size/n_pages/GQA-group/head-dim shape sweep, ragged
 per-slot positions, recycled-block staleness (a freed block re-mapped to
 another slot, its stale tail poisoned), and the scratch-block-0 masking
 invariant (block 0 filled with huge values must never leak into output) —
-each across page storage bits in {16, 8, 4} (passthrough fp pages vs
-int8/packed-int4 code pages with per-row per-kv-head scales). For the
-quantized formats the staleness invariants additionally poison the
-*scales* of masked rows: a stale scale must be discarded exactly like a
-stale key. The quantized oracle is also pinned bitwise against the fp
-oracle evaluated on the kv_quant-decoded pool, so every read path shares
-one decode expression down to the last ulp.
+each across page storage formats in {16, 8, 4, vq2} (passthrough fp
+pages, int8/packed-int4 code pages with per-row per-kv-head scales, and
+vector-quantized pages: packed 4-bit codebook indices over d=2 head-dim
+vectors with per-(pool, kv-head) codebooks). For the quantized formats
+the staleness invariants additionally poison the *scales* of masked
+rows: a stale scale must be discarded exactly like a stale key. The
+quantized oracles are also pinned bitwise against the fp oracle
+evaluated on the kv_quant-decoded pool, so every read path shares one
+decode expression down to the last ulp.
 """
 import jax
 import jax.numpy as jnp
@@ -28,21 +30,27 @@ from repro.kernels.paged_attention import paged_attention_tpu
 
 pytestmark = pytest.mark.kernels
 
-BITS = [16, 8, 4]
+BITS = [16, 8, 4, kvq.VQ_BITS]
 
 
 def make_case(seed, *, B, H, KV, hd, page_size, n_pages, num_blocks,
               pos=None, dtype=jnp.float32, bits=16):
     """Random pools + a valid-looking page table: each slot maps its first
     pages to distinct physical blocks, the rest to scratch (block 0).
-    ``bits`` < 16 quantizes the pools row-wise into code pages + scales
-    (scales None for passthrough)."""
-    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    ``bits`` < 16 quantizes the pools row-wise into code pages + scales;
+    ``bits == "vq2"`` vector-quantizes them against random per-kv-head
+    codebooks (scales/codebooks None where the format has none)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
     q = jax.random.normal(ks[0], (B, H, hd), dtype)
     kp = jax.random.normal(ks[1], (num_blocks, page_size, KV, hd), dtype)
     vp = jax.random.normal(ks[2], (num_blocks, page_size, KV, hd), dtype)
-    ksc = vsc = None
-    if bits < 16:
+    ksc = vsc = kcb = vcb = None
+    if bits == kvq.VQ_BITS:
+        kcb = jax.random.normal(ks[4], (KV, kvq.VQ_K, kvq.VQ_D))
+        vcb = jax.random.normal(ks[5], (KV, kvq.VQ_K, kvq.VQ_D))
+        kp, ksc = kvq.vq_quantize_rows(kp, kcb)
+        vp, vsc = kvq.vq_quantize_rows(vp, vcb)
+    elif bits < 16:
         kp, ksc = kvq.quantize_kv(kp, bits)
         vp, vsc = kvq.quantize_kv(vp, bits)
     if pos is None:
@@ -55,15 +63,17 @@ def make_case(seed, *, B, H, KV, hd, page_size, n_pages, num_blocks,
         live = int(pos[b]) // page_size + 1
         for p in range(min(live, n_pages)):
             table[b, p] = free.pop() if free else 0
-    return q, kp, vp, jnp.asarray(table), pos, ksc, vsc
+    return q, kp, vp, jnp.asarray(table), pos, ksc, vsc, kcb, vcb
 
 
 def assert_matches_oracle(q, kp, vp, table, pos, ksc=None, vsc=None,
-                          tol=2e-5):
+                          kcb=None, vcb=None, tol=2e-5):
     got = paged_attention_tpu(q, kp, vp, table, pos, k_scale=ksc,
-                              v_scale=vsc, interpret=True)
+                              v_scale=vsc, k_codebook=kcb, v_codebook=vcb,
+                              interpret=True)
     want = ref.paged_attention_ref(q, kp, vp, table, pos, k_scale=ksc,
-                                   v_scale=vsc)
+                                   v_scale=vsc, k_codebook=kcb,
+                                   v_codebook=vcb)
     np.testing.assert_allclose(
         np.asarray(got, np.float32), np.asarray(want, np.float32),
         rtol=tol, atol=tol)
@@ -102,7 +112,7 @@ class TestDifferentialSweep:
     @pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
                                            (jnp.bfloat16, 4e-2)])
     def test_dtypes(self, dtype, tol):
-        q, kp, vp, table, pos, _, _ = make_case(
+        q, kp, vp, table, pos, _, _, _, _ = make_case(
             1, B=2, H=8, KV=4, hd=32, page_size=8, n_pages=4,
             num_blocks=12, dtype=dtype)
         got = paged_attention_tpu(q, kp, vp, table, pos, interpret=True)
@@ -117,7 +127,7 @@ class TestQuantizedDecode:
         hd int8 columns, int4 packs two codes per byte (hd//2) — not
         low-bit values parked in wide containers."""
         hd = 32
-        _, kp, _, _, _, ksc, _ = make_case(
+        _, kp, _, _, _, ksc, _, _, _ = make_case(
             0, B=1, H=4, KV=2, hd=hd, page_size=8, n_pages=2,
             num_blocks=6, bits=bits)
         assert kp.dtype == jnp.int8
@@ -129,7 +139,7 @@ class TestQuantizedDecode:
         """One decode expression to rule every read path: the quantized
         oracle must equal the fp oracle run on the kv_quant-decoded pool
         BITWISE — dequant happens before attention math, identically."""
-        q, kp, vp, table, pos, ksc, vsc = make_case(
+        q, kp, vp, table, pos, ksc, vsc, _, _ = make_case(
             7, B=3, H=8, KV=4, hd=32, page_size=8, n_pages=4,
             num_blocks=16, bits=bits)
         quant = ref.paged_attention_ref(q, kp, vp, table, pos,
@@ -175,12 +185,13 @@ class TestMaskingInvariants:
         land there, so it holds garbage — codes AND scales. Poison both
         with huge values — no live slot's output may move (its kpos are
         all > pos or mapped to blocks != 0 at kpos <= pos)."""
-        q, kp, vp, table, pos, ksc, vsc = make_case(
+        q, kp, vp, table, pos, ksc, vsc, kcb, vcb = make_case(
             2, B=3, H=8, KV=4, hd=32, page_size=8, n_pages=4, num_blocks=16,
             pos=[5, 17, 30], bits=bits)
         assert int(jnp.min(table[:, 0])) > 0  # live pages avoid scratch
         base = paged_attention_tpu(q, kp, vp, table, pos, k_scale=ksc,
-                                   v_scale=vsc, interpret=True)
+                                   v_scale=vsc, k_codebook=kcb,
+                                   v_codebook=vcb, interpret=True)
         if bits == 16:
             kp2 = kp.at[0].set(1e4)
             vp2 = vp.at[0].set(-1e4)
@@ -192,23 +203,25 @@ class TestMaskingInvariants:
             vsc2 = vsc.at[0].set(1e4)
         poisoned = paged_attention_tpu(q, kp2, vp2, table, pos,
                                        k_scale=ksc2, v_scale=vsc2,
+                                       k_codebook=kcb, v_codebook=vcb,
                                        interpret=True)
         np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned),
                                    rtol=1e-6, atol=1e-6)
-        assert_matches_oracle(q, kp2, vp2, table, pos, ksc2, vsc2)
+        assert_matches_oracle(q, kp2, vp2, table, pos, ksc2, vsc2, kcb, vcb)
 
     @pytest.mark.parametrize("bits", BITS)
     def test_idle_slot_pos0_is_finite(self, bits):
         """An idle slot (all-scratch table, pos 0) attends exactly one
         scratch row: output must be finite (no empty-softmax NaN), and the
         kernel must agree with the oracle on it."""
-        q, kp, vp, table, pos, ksc, vsc = make_case(
+        q, kp, vp, table, pos, ksc, vsc, kcb, vcb = make_case(
             3, B=2, H=4, KV=2, hd=16, page_size=8, n_pages=2, num_blocks=6,
             pos=[9, 0], bits=bits)
         table = table.at[1].set(0)
-        assert_matches_oracle(q, kp, vp, table, pos, ksc, vsc)
+        assert_matches_oracle(q, kp, vp, table, pos, ksc, vsc, kcb, vcb)
         out = paged_attention_tpu(q, kp, vp, table, pos, k_scale=ksc,
-                                  v_scale=vsc, interpret=True)
+                                  v_scale=vsc, k_codebook=kcb,
+                                  v_codebook=vcb, interpret=True)
         assert bool(jnp.all(jnp.isfinite(out)))
 
     @pytest.mark.parametrize("bits", BITS)
@@ -219,13 +232,14 @@ class TestMaskingInvariants:
         stale tail: poisoning rows (and scale rows) past ``pos`` of the
         slot's last live page changes nothing."""
         page_size, n_pages = 8, 3
-        q, kp, vp, table, pos, ksc, vsc = make_case(
+        q, kp, vp, table, pos, ksc, vsc, kcb, vcb = make_case(
             4, B=1, H=8, KV=4, hd=32, page_size=page_size, n_pages=n_pages,
             num_blocks=8, pos=[11], bits=bits)  # last live page row off = 3
         last_blk = int(table[0, 1])   # page holding pos 11
         off = 11 % page_size
         base = paged_attention_tpu(q, kp, vp, table, pos, k_scale=ksc,
-                                   v_scale=vsc, interpret=True)
+                                   v_scale=vsc, k_codebook=kcb,
+                                   v_codebook=vcb, interpret=True)
         kmag, vmag = (7e3, -7e3) if bits == 16 else (127, -127)
         # stale tail: rows (off+1..) of the slot's own last page
         kp2 = kp.at[last_blk, off + 1:].set(kmag)
@@ -244,10 +258,67 @@ class TestMaskingInvariants:
                 vsc2 = vsc2.at[far_blk].set(9e3)
         poisoned = paged_attention_tpu(q, kp2, vp2, table, pos,
                                        k_scale=ksc2, v_scale=vsc2,
+                                       k_codebook=kcb, v_codebook=vcb,
                                        interpret=True)
         np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned),
                                    rtol=1e-6, atol=1e-6)
-        assert_matches_oracle(q, kp2, vp2, table, pos, ksc2, vsc2)
+        assert_matches_oracle(q, kp2, vp2, table, pos, ksc2, vsc2, kcb, vcb)
+
+
+class TestVQPages:
+    def test_storage_really_shrinks(self):
+        """A vq2 page stores hd//4 packed-index int8 columns per row —
+        2 bits/value in the pool, 6x fewer bytes per row than int4."""
+        hd = 32
+        _, kp, _, _, _, ksc, _, kcb, vcb = make_case(
+            0, B=1, H=4, KV=2, hd=hd, page_size=8, n_pages=2,
+            num_blocks=6, bits=kvq.VQ_BITS)
+        assert kp.dtype == jnp.int8
+        assert kp.shape[-1] == hd // 4
+        assert ksc.shape == kp.shape[:-1] and ksc.dtype == jnp.float32
+        assert kcb.shape == (2, kvq.VQ_K, kvq.VQ_D)
+        assert vcb.shape == (2, kvq.VQ_K, kvq.VQ_D)
+
+    def test_vq_oracle_bitwise_vs_decoded_pool(self):
+        """Same one-decode-expression pin as the scalar formats: the vq
+        oracle must equal the fp oracle on the vq_dequant_rows-decoded
+        pool BITWISE."""
+        q, kp, vp, table, pos, ksc, vsc, kcb, vcb = make_case(
+            7, B=3, H=8, KV=4, hd=32, page_size=8, n_pages=4,
+            num_blocks=16, bits=kvq.VQ_BITS)
+        vq = ref.paged_attention_ref(q, kp, vp, table, pos, k_scale=ksc,
+                                     v_scale=vsc, k_codebook=kcb,
+                                     v_codebook=vcb)
+        kd = kvq.vq_dequant_rows(kp, ksc, kcb)
+        vd = kvq.vq_dequant_rows(vp, vsc, vcb)
+        fp = ref.paged_attention_ref(q, kd, vd, table, pos)
+        np.testing.assert_array_equal(np.asarray(vq), np.asarray(fp))
+
+    def test_codebook_poison_masked_rows_inert(self):
+        """Stale codes in masked rows must stay inert even when they
+        index the most extreme codebook entries: replace every masked
+        row's packed indices with 0xFF (entry 15 twice) after making
+        entry 15 huge — no live output may move."""
+        q, kp, vp, table, pos, ksc, vsc, kcb, vcb = make_case(
+            8, B=2, H=4, KV=2, hd=16, page_size=4, n_pages=4,
+            num_blocks=10, pos=[5, 9], bits=kvq.VQ_BITS)
+        kcb = kcb.at[:, 15].set(1e4)
+        vcb = vcb.at[:, 15].set(-1e4)
+        base = paged_attention_tpu(q, kp, vp, table, pos, k_scale=ksc,
+                                   v_scale=vsc, k_codebook=kcb,
+                                   v_codebook=vcb, interpret=True)
+        # poison the scratch block's codes toward the huge entry
+        kp2 = kp.at[0].set(-1)  # 0xFF -> nibbles (15, 15)
+        vp2 = vp.at[0].set(-1)
+        ksc2 = ksc.at[0].set(9e3)
+        vsc2 = vsc.at[0].set(9e3)
+        poisoned = paged_attention_tpu(q, kp2, vp2, table, pos,
+                                       k_scale=ksc2, v_scale=vsc2,
+                                       k_codebook=kcb, v_codebook=vcb,
+                                       interpret=True)
+        np.testing.assert_allclose(np.asarray(base), np.asarray(poisoned),
+                                   rtol=1e-6, atol=1e-6)
+        assert_matches_oracle(q, kp2, vp2, table, pos, ksc2, vsc2, kcb, vcb)
 
 
 class TestServingPathConsistency:
@@ -263,7 +334,7 @@ class TestServingPathConsistency:
             max_seq_len=32)
         B, H, KV, hd = 2, cfg.n_heads, cfg.n_kv_heads, cfg.hd
         page_size, n_pages, num_blocks = 4, 8, 12
-        q, kp, vp, table, pos, _, _ = make_case(
+        q, kp, vp, table, pos, _, _, _, _ = make_case(
             5, B=B, H=H, KV=KV, hd=hd, page_size=page_size,
             n_pages=n_pages, num_blocks=num_blocks, pos=[6, 21])
         cache = attention.PagedKVCache(kp, vp, table)
@@ -295,7 +366,7 @@ class TestServingPathConsistency:
             dtype="float32", n_layers=1, d_model=128, vocab_size=64,
             max_seq_len=32)
         B, H, KV, hd = 2, cfg.n_heads, cfg.n_kv_heads, cfg.hd
-        q, kp, vp, table, pos, ksc, vsc = make_case(
+        q, kp, vp, table, pos, ksc, vsc, _, _ = make_case(
             5, B=B, H=H, KV=KV, hd=hd, page_size=4, n_pages=8,
             num_blocks=12, pos=[6, 21], bits=bits)
         cache = attention.PagedKVCache(kp, vp, table, ksc, vsc)
@@ -313,16 +384,50 @@ class TestServingPathConsistency:
             np.asarray(got[:, 0]), np.asarray(want).reshape(B, H * hd),
             rtol=2e-5, atol=2e-5)
 
+    def test_vq_oracle_matches_paged_apply_gather(self):
+        """Same anchor for vq2 pools: _paged_apply vector-quantizes the
+        fresh K/V in-graph against the cache's frozen codebooks and its
+        gather path decodes through the codebook — the oracle on the
+        post-scatter index pools + scales + codebooks must agree."""
+        from repro.configs import SMOKE
+        from repro.models import attention
+
+        cfg = SMOKE["llama2-7b"].scaled(
+            dtype="float32", n_layers=1, d_model=128, vocab_size=64,
+            max_seq_len=32)
+        B, H, KV, hd = 2, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        q, kp, vp, table, pos, ksc, vsc, kcb, vcb = make_case(
+            5, B=B, H=H, KV=KV, hd=hd, page_size=4, n_pages=8,
+            num_blocks=12, pos=[6, 21], bits=kvq.VQ_BITS)
+        cache = attention.PagedKVCache(kp, vp, table, ksc, vsc, kcb, vcb)
+        p = {"wo": jnp.eye(H * hd, dtype=jnp.float32)}
+        knew = jax.random.normal(jax.random.PRNGKey(9), (B, 1, KV, hd))
+        vnew = jax.random.normal(jax.random.PRNGKey(10), (B, 1, KV, hd))
+        got, newc = attention._paged_apply(
+            p, cache, q[:, None], knew, vnew, pos[:, None], jnp.float32,
+            impl="gather")
+        assert newc.k.dtype == jnp.int8
+        assert newc.k.shape[-1] == hd // 4  # the write stayed vq-packed
+        want = ref.paged_attention_ref(q, newc.k, newc.v, table, pos,
+                                       k_scale=newc.k_scale,
+                                       v_scale=newc.v_scale,
+                                       k_codebook=kcb, v_codebook=vcb)
+        np.testing.assert_allclose(
+            np.asarray(got[:, 0]), np.asarray(want).reshape(B, H * hd),
+            rtol=2e-5, atol=2e-5)
+
     @pytest.mark.parametrize("bits", BITS)
     def test_ops_dispatch(self, bits):
         """use_pallas toggles kernel vs oracle; both agree."""
-        q, kp, vp, table, pos, ksc, vsc = make_case(
+        q, kp, vp, table, pos, ksc, vsc, kcb, vcb = make_case(
             6, B=2, H=4, KV=4, hd=16, page_size=4, n_pages=4, num_blocks=10,
             bits=bits)
         o_k = ops.paged_attention(q, kp, vp, table, pos, k_scale=ksc,
-                                  v_scale=vsc, use_pallas=True,
+                                  v_scale=vsc, k_codebook=kcb,
+                                  v_codebook=vcb, use_pallas=True,
                                   interpret=True)
         o_r = ops.paged_attention(q, kp, vp, table, pos, k_scale=ksc,
-                                  v_scale=vsc, use_pallas=False)
+                                  v_scale=vsc, k_codebook=kcb,
+                                  v_codebook=vcb, use_pallas=False)
         np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
                                    rtol=2e-5, atol=2e-5)

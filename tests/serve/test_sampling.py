@@ -1,0 +1,115 @@
+"""Unit tests for serve/sampling.py — the top-k edge cases the rank-based
+cut fixes (tied logits at the k-th value, top_k >= V), plus top-k/top-p
+composition and the greedy/temperature dispatch contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve import sampling
+
+
+def empirical_support(key, logits, n=256, **kw):
+    """Indices a sampler can actually produce, over n independent draws."""
+    keys = jax.random.split(key, n)
+    draws = {int(sampling.sample(k, logits, **kw)[0]) for k in keys}
+    return draws
+
+
+class TestTopK:
+    def test_ties_at_kth_keep_exactly_k(self):
+        """Four-way tie at the top with k=2: a threshold cut keeps all
+        four; the rank cut must keep exactly two (the lowest indices,
+        by stable-sort determinism)."""
+        logits = jnp.asarray([[1.0, 1.0, 1.0, 1.0, 0.0]])
+        got = empirical_support(jax.random.PRNGKey(0), logits,
+                                temperature=1.0, top_k=2)
+        assert got == {0, 1}
+
+    def test_k_equals_vocab_matches_unrestricted(self):
+        """top_k == V filters nothing: same distribution as no top_k
+        (bitwise — the surviving logits are untouched)."""
+        logits = jnp.asarray([[0.3, -0.2, 0.9, 0.0]])
+        key = jax.random.PRNGKey(1)
+        a = sampling.sample(key, logits, temperature=1.0, top_k=4)
+        b = sampling.sample(key, logits, temperature=1.0)
+        assert int(a[0]) == int(b[0])
+
+    def test_k_larger_than_vocab_no_crash(self):
+        """top_k > V used to index out of range on the sorted axis; it
+        must clamp to V and behave like unrestricted sampling."""
+        logits = jnp.asarray([[0.5, 0.1, -0.4]])
+        key = jax.random.PRNGKey(2)
+        a = sampling.sample(key, logits, temperature=1.0, top_k=100)
+        b = sampling.sample(key, logits, temperature=1.0)
+        assert int(a[0]) == int(b[0])
+
+    def test_k1_is_argmax(self):
+        logits = jnp.asarray([[0.1, 2.0, -1.0, 1.9]])
+        got = empirical_support(jax.random.PRNGKey(3), logits, n=64,
+                                temperature=1.0, top_k=1)
+        assert got == {1}
+
+    def test_distinct_logits_keep_top_k_set(self):
+        logits = jnp.asarray([[0.0, 3.0, 1.0, 2.0, -1.0]])
+        got = empirical_support(jax.random.PRNGKey(4), logits,
+                                temperature=1.0, top_k=3)
+        assert got == {1, 2, 3}
+
+    def test_per_row_independence(self):
+        """The rank cut is per row: a tie in one row must not leak
+        candidates into another."""
+        logits = jnp.asarray([[1.0, 1.0, 1.0, 0.0],
+                              [0.0, 0.0, 5.0, 4.0]])
+        keys = jax.random.split(jax.random.PRNGKey(5), 128)
+        row0 = {int(sampling.sample(k, logits, temperature=1.0,
+                                    top_k=2)[0]) for k in keys}
+        row1 = {int(sampling.sample(k, logits, temperature=1.0,
+                                    top_k=2)[1]) for k in keys}
+        assert row0 == {0, 1}
+        assert row1 == {2, 3}
+
+
+class TestTopKTopP:
+    def test_combined_restricts_to_intersection(self):
+        """top-k prunes first, top-p then cuts the renormalized tail of
+        the survivors: with a dominant pair and tiny top_p only the
+        top-1 of the top-k set remains."""
+        logits = jnp.asarray([[5.0, 4.0, 3.0, 2.0, 1.0]])
+        got = empirical_support(jax.random.PRNGKey(6), logits,
+                                temperature=1.0, top_k=3, top_p=0.5)
+        assert got <= {0, 1, 2}
+        assert 0 in got
+        assert 3 not in got and 4 not in got
+
+    def test_combined_with_ties_no_crash_exact_support(self):
+        logits = jnp.asarray([[2.0, 2.0, 2.0, 2.0, -5.0, -5.0]])
+        got = empirical_support(jax.random.PRNGKey(7), logits,
+                                temperature=1.0, top_k=8, top_p=0.95)
+        assert got <= {0, 1, 2, 3}
+
+
+class TestDispatch:
+    def test_greedy_ignores_filters(self):
+        logits = jnp.asarray([[0.0, 1.0, 0.5]])
+        out = sampling.sample(jax.random.PRNGKey(8), logits,
+                              temperature=0.0, top_k=1)
+        assert int(out[0]) == 1
+
+    def test_traced_temperature_vector_mixes_greedy_and_sampled(self):
+        logits = jnp.asarray([[0.0, 9.0, 0.0], [1.0, 1.0, 1.0]])
+        t = jnp.asarray([0.0, 1.0])
+        out = sampling.sample(jax.random.PRNGKey(9), logits, temperature=t)
+        assert int(out[0]) == 1
+        assert int(out[1]) in (0, 1, 2)
+
+    def test_traced_temperature_with_top_k_ties(self):
+        """The engine's jitted path (traced (B,) temperatures) runs
+        through the same rank cut."""
+        logits = jnp.asarray([[1.0, 1.0, 1.0, 0.0]])
+        t = jnp.asarray([1.0])
+        f = jax.jit(lambda k, l: sampling.sample(k, l, temperature=t,
+                                                 top_k=2))
+        keys = jax.random.split(jax.random.PRNGKey(10), 128)
+        got = {int(f(k, logits)[0]) for k in keys}
+        assert got == {0, 1}
