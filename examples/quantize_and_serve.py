@@ -24,8 +24,9 @@ from the ``span.decode_tick/host_prep`` and ``span.decode_tick/device``
 histograms (the device span closes at the tick's token download — jax
 dispatch is async, so "device" reads as dispatch + device wait). The
 quantization calls report per-stage wall seconds
-(``report.stage_seconds``: hessian_capture / column_sweep — which
-includes the jitted EM init — / codebook_update / advance). The same
+(``report.stage_seconds``: hessian_capture / em_init / column_sweep /
+codebook_update / advance — EM codebook init is timed separately from
+the sweep). The same
 data streams to files on the launchers: ``--events-out`` (JSONL
 lifecycle events), ``--metrics-out`` (snapshot), ``--trace-dir``
 (jax.profiler traces) on ``repro.launch.serve`` /
@@ -131,8 +132,8 @@ def main():
     print(f"  quantized in {time.time()-t0:.1f}s at "
           f"{report.bits_per_value:.3f} bits/value")
     stages = sorted(report.stage_seconds.items(), key=lambda kv: -kv[1])
-    print("  stage breakdown: " + " ".join(f"{k}={v:.1f}s" for k, v in stages)
-          + " (column_sweep includes the jitted EM init)")
+    print("  stage breakdown: " + " ".join(f"{k}={v:.1f}s"
+                                           for k, v in stages))
     ppl_vq = perplexity(model, qparams, heldout)
     print(f"  VQ perplexity: {ppl_vq:.2f} (fp32 {ppl_fp:.2f})")
 

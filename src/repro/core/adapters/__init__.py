@@ -16,6 +16,9 @@ from repro.core.adapters.base import (  # noqa: F401 (public API)
     acc_expert_tap,
     acc_tap,
     blocks_stackable,
+    diag_capture,
+    diag_capture_active,
+    hessian_mesh,
     maybe_stack_blocks,
     stack_blocks,
     tree_get,

@@ -23,6 +23,7 @@ only ever sees specs, taps, and states.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Any
 
@@ -119,19 +120,70 @@ class ModelAdapter:
 # ---------------------------------------------------------------------------
 # tap accumulation helpers
 # ---------------------------------------------------------------------------
+#
+# Every family adapter funnels Hessian capture through acc_tap /
+# acc_expert_tap, so the two pipeline-wide capture modes are dispatched
+# here rather than in the six adapter modules:
+#
+#   * diag_capture(): taps accumulate O(c) DiagHessianState instead of
+#     the (c, c) HessianState — the budget pre-pass only reads diag(H),
+#     so it never materializes a full Hessian. Adapters with per-expert
+#     taps consult diag_capture_active() to build (E, c) diag stacks.
+#   * hessian_mesh(mesh, axis): plain taps accumulate data-parallel over
+#     the mesh axis (hessian.accumulate_sharded — one psum per call).
+
+_capture_mode = {"diag_only": False, "mesh": None, "axis": "data"}
+
+
+@contextlib.contextmanager
+def diag_capture():
+    """Within this context, acc_tap accumulates O(c) diagonals only."""
+    prev = _capture_mode["diag_only"]
+    _capture_mode["diag_only"] = True
+    try:
+        yield
+    finally:
+        _capture_mode["diag_only"] = prev
+
+
+def diag_capture_active() -> bool:
+    return _capture_mode["diag_only"]
+
+
+@contextlib.contextmanager
+def hessian_mesh(mesh, axis: str = "data"):
+    """Within this context, acc_tap shards calibration rows over the
+    mesh axis and psums the per-device partial Hessians."""
+    prev = (_capture_mode["mesh"], _capture_mode["axis"])
+    _capture_mode["mesh"], _capture_mode["axis"] = mesh, axis
+    try:
+        yield
+    finally:
+        _capture_mode["mesh"], _capture_mode["axis"] = prev
+
 
 def acc_tap(taps: dict, name: str, x) -> dict:
     """Accumulate activations ``x`` (..., c) into the named Hessian tap."""
-    H = taps.get(name)
-    if H is None:
-        H = hes.init_hessian(x.shape[-1])
+    state = taps.get(name)
+    if state is None:
+        c = x.shape[-1]
+        state = (hes.init_diag_hessian(c) if _capture_mode["diag_only"]
+                 else hes.init_hessian(c))
     taps = dict(taps)
-    taps[name] = hes.accumulate(H, x)
+    mesh = _capture_mode["mesh"]
+    if mesh is not None:
+        taps[name] = hes.accumulate_sharded(state, x, mesh,
+                                            _capture_mode["axis"])
+    elif isinstance(state, hes.DiagHessianState):
+        taps[name] = hes.accumulate_diag(state, x)
+    else:
+        taps[name] = hes.accumulate(state, x)
     return taps
 
 
 def acc_expert_tap(taps: dict, name: str, new: tuple) -> dict:
-    """Accumulate a per-expert ((E, c, c) Hessian stack, (E,) count) pair."""
+    """Accumulate a per-expert (Hessian stack, (E,) count) pair — the
+    stack is (E, c, c), or (E, c) diagonals under diag_capture()."""
     taps = dict(taps)
     acc = taps.get(name)
     taps[name] = new if acc is None else (acc[0] + new[0], acc[1] + new[1])

@@ -83,7 +83,9 @@ class _DenseBlock(base.BlockAdapter):
                 taps = base.acc_tap(
                     taps, "ffn_out_in", mlp.pre_out(lp["ffn"], cfg, x2))
             else:
-                eh_in, eh_out = moe.expert_hessians(lp["ffn"], cfg, x2)
+                eh_in, eh_out = moe.expert_hessians(
+                    lp["ffn"], cfg, x2,
+                    diag_only=base.diag_capture_active())
                 taps = base.acc_expert_tap(taps, "experts_in", eh_in)
                 taps = base.acc_expert_tap(taps, "experts_out", eh_out)
         return taps

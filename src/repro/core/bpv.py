@@ -43,6 +43,7 @@ class VQConfig:
     svd_rank_frac: float = 0.0      # >0: SVD codebook compression (1D only)
     percdamp: float = 0.01
     exact_span_solve: bool = True   # exact joint d-column compensation
+    cd_passes: int = 2              # coordinate-descent passes (solver="cd")
 
     @property
     def k(self) -> int:

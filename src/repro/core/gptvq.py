@@ -28,6 +28,7 @@ per-column reading E_p / U[p,p] is used (identical for d=1).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import NamedTuple
@@ -39,6 +40,9 @@ from repro.core import codebook as cb
 from repro.core import normalization as norm
 from repro.core.bpv import VQConfig
 from repro.core.hessian import cholesky_diag_weights
+from repro.core.solvers import (
+    VALID_SOLVERS, assign_babai, cd_refine, span_metric,
+)
 
 
 class VQArrays(NamedTuple):
@@ -143,131 +147,148 @@ def plan_groups(r: int, c: int, cfg: VQConfig) -> tuple[int, int]:
     jax.jit,
     static_argnames=("cfg", "group_cols", "rows_per_band"),
 )
-def _sweep(
-    W: jax.Array,
-    U: jax.Array,
-    key: jax.Array,
+def _group_init(
+    Wg: jax.Array,
+    wgt_g: jax.Array,
+    keys_g: jax.Array,
     *,
     cfg: VQConfig,
     group_cols: int,
     rows_per_band: int,
-) -> VQArrays:
-    r, c = W.shape
+):
+    """Group-entry work (Algorithm 1 lines 9-11): blockwise normalization
+    scales + per-row-band Hessian-weighted EM codebook init from the
+    current (error-compensated) weights. Jitted separately from the span
+    sweep so the ``em_init`` stage can be timed honestly."""
+    r = Wg.shape[0]
     d, k = cfg.d, cfg.k
     cg, rg = group_cols, rows_per_band
-    n_cg = c // cg
     n_bands = r // rg
     spans_pg = cg // d
     Ns = cfg.scale_block if cfg.scale_block > 0 else cg
-    use_scales = cfg.scale_block > 0
+
+    Wg = Wg.astype(jnp.float32)
+    if cfg.scale_block > 0:
+        bs = norm.compute_block_scales(Wg, block=Ns, bits=cfg.scale_bits)
+        Sg = bs.expand(cg)  # (r, cg)
+        sint_g, a_g, z_g = bs.s_int, bs.a, bs.z
+    else:
+        Sg = jnp.ones((r, cg), jnp.float32)
+        sint_g = jnp.zeros((r, cg // Ns), jnp.int32)
+        a_g = jnp.zeros((), jnp.float32)
+        z_g = jnp.zeros((), jnp.float32)
+
+    Wn = Wg / Sg
+    Xb = Wn.reshape(n_bands, rg, spans_pg, d).reshape(n_bands, rg * spans_pg, d)
+    Hw1 = jnp.tile(wgt_g.reshape(1, spans_pg, d), (rg, 1, 1)).reshape(
+        rg * spans_pg, d
+    )
+
+    def init_one(Xband, key_b):
+        return cb.init_codebook(
+            Xband, Hw1, k=k, iters=cfg.em_iters, method=cfg.em_seed,
+            key=key_b,
+        )
+
+    Cg = jax.vmap(init_one)(Xb, keys_g)  # (n_bands, k, d)
+    return Sg, sint_g, a_g, z_g, Cg
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "group_cols", "rows_per_band", "solver"),
+)
+def _group_sweep(
+    W: jax.Array,
+    U: jax.Array,
+    Sg: jax.Array,
+    Cg: jax.Array,
+    wgt_g: jax.Array,
+    gstart: jax.Array,
+    *,
+    cfg: VQConfig,
+    group_cols: int,
+    rows_per_band: int,
+    solver: str = "gptq",
+):
+    """d-span sweep of one column group with error feedback through U,
+    plus the lazy tail update beyond the group. ``gstart`` is traced so
+    all groups share one compilation. Returns (W', Qg, idxg)."""
+    r, c = W.shape
+    d = cfg.d
+    cg, rg = group_cols, rows_per_band
+    n_bands = r // rg
+    spans_pg = cg // d
 
     W = W.astype(jnp.float32)
     U = U.astype(jnp.float32)
-    wgt_all = cholesky_diag_weights(U)  # (c,), 1/U_qq^2
+    Wg = jax.lax.dynamic_slice(W, (0, gstart), (r, cg))
 
-    Q0 = jnp.zeros((r, c), jnp.float32)
-    idx0 = jnp.zeros((r, c // d), jnp.int32)
-    cb0 = jnp.zeros((n_cg, n_bands, k, d), jnp.float32)
-    sint0 = jnp.zeros((n_cg, r, cg // Ns), jnp.int32)
-    a0 = jnp.zeros((n_cg,), jnp.float32)
-    z0 = jnp.zeros((n_cg,), jnp.float32)
-    group_keys = jax.random.split(key, n_cg * n_bands).reshape(n_cg, n_bands, 2)
+    def span_body(j, inner):
+        Wg, Qg, idxg, Eg = inner
+        col = j * d
+        x = jax.lax.dynamic_slice(Wg, (0, col), (r, d))
+        S_span = jax.lax.dynamic_slice(Sg, (0, col), (r, d))
+        xn = x / S_span
+        wgt_span = jax.lax.dynamic_slice(wgt_g, (col,), (d,))
+        U_PP = jax.lax.dynamic_slice(U, (gstart + col, gstart + col), (d, d))
 
-    def group_body(g, carry):
-        W, Q, idx_all, cb_all, sint, a_all, z_all = carry
-        gstart = g * cg
-        Wg = jax.lax.dynamic_slice(W, (0, gstart), (r, cg))
-
-        # ---- blockwise data normalization (group entry) ------------------
-        if use_scales:
-            bs = norm.compute_block_scales(Wg, block=Ns, bits=cfg.scale_bits)
-            Sg = bs.expand(cg)  # (r, cg)
-            sint = jax.lax.dynamic_update_slice(sint, bs.s_int[None], (g, 0, 0))
-            a_all = a_all.at[g].set(bs.a)
-            z_all = z_all.at[g].set(bs.z)
+        xb = xn.reshape(n_bands, rg, d)
+        if solver == "babai" and d > 1:
+            # nearest-plane: full conditional span metric, not just its
+            # diagonal (solvers.span_metric docstring; identical at d=1)
+            M = span_metric(U_PP)
+            ab = assign_babai(xb, S_span.reshape(n_bands, rg, d), M, Cg)
         else:
-            Sg = jnp.ones((r, cg), jnp.float32)
-
-        # ---- codebook init (Hessian-weighted EM), per row band -----------
-        wgt_g = jax.lax.dynamic_slice(wgt_all, (gstart,), (cg,))
-        Wn = Wg / Sg
-        Xb = Wn.reshape(n_bands, rg, spans_pg, d).reshape(n_bands, rg * spans_pg, d)
-        Hw1 = jnp.tile(wgt_g.reshape(1, spans_pg, d), (rg, 1, 1)).reshape(
-            rg * spans_pg, d
-        )
-
-        def init_one(Xband, key_b):
-            return cb.init_codebook(
-                Xband, Hw1, k=k, iters=cfg.em_iters, method=cfg.em_seed,
-                key=key_b,
-            )
-
-        Cg = jax.vmap(init_one)(Xb, group_keys[g])  # (n_bands, k, d)
-        cb_all = jax.lax.dynamic_update_slice(cb_all, Cg[None], (g, 0, 0, 0))
-
-        # ---- d-span sweep with error feedback ----------------------------
-        def span_body(j, inner):
-            Wg, Qg, idxg, Eg = inner
-            col = j * d
-            x = jax.lax.dynamic_slice(Wg, (0, col), (r, d))
-            S_span = jax.lax.dynamic_slice(Sg, (0, col), (r, d))
-            xn = x / S_span
-            wgt_span = jax.lax.dynamic_slice(wgt_g, (col,), (d,))
-
-            xb = xn.reshape(n_bands, rg, d)
             Hw = jnp.tile(wgt_span[None], (rg, 1))
 
             def assign_band(Xband, Cband):
                 return cb.assign(Xband, Hw, Cband)
 
             ab = jax.vmap(assign_band)(xb, Cg)  # (n_bands, rg)
-            # gather centroids: Cg (n_bands, k, d), ab (n_bands, rg)
-            qn = jax.vmap(lambda Cb, ib: Cb[ib])(Cg, ab)  # (n_bands, rg, d)
-            q = (qn.reshape(r, d)) * S_span
+        # gather centroids: Cg (n_bands, k, d), ab (n_bands, rg)
+        qn = jax.vmap(lambda Cb, ib: Cb[ib])(Cg, ab)  # (n_bands, rg, d)
+        q = (qn.reshape(r, d)) * S_span
 
-            E_raw = x - q
-            U_PP = jax.lax.dynamic_slice(U, (gstart + col, gstart + col), (d, d))
-            if cfg.exact_span_solve and d > 1:
-                # Etilde = E_raw @ U_PP^{-1}
-                Et = jax.scipy.linalg.solve_triangular(
-                    U_PP.T, E_raw.T, lower=True
-                ).T
-            else:
-                Et = E_raw / jnp.diagonal(U_PP)[None, :]
+        E_raw = x - q
+        if cfg.exact_span_solve and d > 1:
+            # Etilde = E_raw @ U_PP^{-1}
+            Et = jax.scipy.linalg.solve_triangular(
+                U_PP.T, E_raw.T, lower=True
+            ).T
+        else:
+            Et = E_raw / jnp.diagonal(U_PP)[None, :]
 
-            # update remaining columns within this group
-            Urow = jax.lax.dynamic_slice(U, (gstart + col, gstart), (d, cg))
-            mask = (jnp.arange(cg) >= col + d).astype(jnp.float32)
-            Wg = Wg - Et @ (Urow * mask[None, :])
+        # update remaining columns within this group
+        Urow = jax.lax.dynamic_slice(U, (gstart + col, gstart), (d, cg))
+        mask = (jnp.arange(cg) >= col + d).astype(jnp.float32)
+        Wg = Wg - Et @ (Urow * mask[None, :])
 
-            Qg = jax.lax.dynamic_update_slice(Qg, q, (0, col))
-            idxg = jax.lax.dynamic_update_slice(
-                idxg, ab.reshape(r, 1).astype(jnp.int32), (0, j)
-            )
-            Eg = jax.lax.dynamic_update_slice(Eg, Et, (0, col))
-            return Wg, Qg, idxg, Eg
-
-        Qg0 = jnp.zeros((r, cg), jnp.float32)
-        idxg0 = jnp.zeros((r, spans_pg), jnp.int32)
-        Eg0 = jnp.zeros((r, cg), jnp.float32)
-        Wg, Qg, idxg, Eg = jax.lax.fori_loop(
-            0, spans_pg, span_body, (Wg, Qg0, idxg0, Eg0)
+        Qg = jax.lax.dynamic_update_slice(Qg, q, (0, col))
+        idxg = jax.lax.dynamic_update_slice(
+            idxg, ab.reshape(r, 1).astype(jnp.int32), (0, j)
         )
+        Eg = jax.lax.dynamic_update_slice(Eg, Et, (0, col))
+        return Wg, Qg, idxg, Eg
 
-        # ---- lazy tail update beyond the group ---------------------------
-        Urows = jax.lax.dynamic_slice(U, (gstart, 0), (cg, c))
-        tail_mask = (jnp.arange(c) >= gstart + cg).astype(jnp.float32)
-        W = W - Eg @ (Urows * tail_mask[None, :])
-        W = jax.lax.dynamic_update_slice(W, Wg, (0, gstart))
-        Q = jax.lax.dynamic_update_slice(Q, Qg, (0, gstart))
-        idx_all = jax.lax.dynamic_update_slice(idx_all, idxg, (0, g * spans_pg))
-        return W, Q, idx_all, cb_all, sint, a_all, z_all
-
-    carry = (W, Q0, idx0, cb0, sint0, a0, z0)
-    W, Q, idx_all, cb_all, sint, a_all, z_all = jax.lax.fori_loop(
-        0, n_cg, group_body, carry
+    Qg0 = jnp.zeros((r, cg), jnp.float32)
+    idxg0 = jnp.zeros((r, spans_pg), jnp.int32)
+    Eg0 = jnp.zeros((r, cg), jnp.float32)
+    Wg, Qg, idxg, Eg = jax.lax.fori_loop(
+        0, spans_pg, span_body, (Wg, Qg0, idxg0, Eg0)
     )
-    return VQArrays(Q, idx_all, cb_all, sint, a_all, z_all)
+
+    # ---- lazy tail update beyond the group -------------------------------
+    Urows = jax.lax.dynamic_slice(U, (gstart, 0), (cg, c))
+    tail_mask = (jnp.arange(c) >= gstart + cg).astype(jnp.float32)
+    W = W - Eg @ (Urows * tail_mask[None, :])
+    W = jax.lax.dynamic_update_slice(W, Wg, (0, gstart))
+    return W, Qg, idxg
+
+
+@contextlib.contextmanager
+def _null_stage(name):
+    yield
 
 
 def gptvq_quantize_matrix(
@@ -275,15 +296,90 @@ def gptvq_quantize_matrix(
     U: jax.Array,
     cfg: VQConfig,
     key: jax.Array | None = None,
+    *,
+    solver: str = "gptq",
+    H: jax.Array | None = None,
+    stage=None,
 ) -> VQResult:
-    """Run Algorithm 1 on one weight matrix. ``U`` from inv_hessian_cholesky."""
+    """Run Algorithm 1 on one weight matrix. ``U`` from inv_hessian_cholesky.
+
+    ``solver`` picks the inner assignment rule (solvers.VALID_SOLVERS):
+    "gptq" is the paper's diagonal-metric sweep, "babai" the full-metric
+    nearest-plane variant, "cd" adds a coordinate-descent refinement pass
+    (requires ``H``). ``stage`` is an optional 1-arg context-manager
+    factory (the pipeline's stage timer); when provided, device syncs are
+    inserted so ``em_init`` / ``column_sweep`` / ``cd_refine`` wall times
+    are attributed honestly — untimed callers stay fully async.
+    """
+    if solver not in VALID_SOLVERS:
+        raise ValueError(f"unknown solver {solver!r}; expected one of "
+                         f"{VALID_SOLVERS}")
+    if solver == "cd" and H is None:
+        raise ValueError("solver='cd' needs the Hessian H for its "
+                         "coordinate-descent objective")
     r, c = W.shape
     cg, rg = plan_groups(r, c, cfg)
     if key is None:
         key = jax.random.PRNGKey(0)
-    arrays = _sweep(W, U, key, cfg=cfg, group_cols=cg, rows_per_band=rg)
-    return VQResult(arrays=arrays, cfg=cfg, r=r, c=c, group_cols=cg,
-                    rows_per_band=rg)
+    n_cg = c // cg
+    n_bands = r // rg
+    timed = stage is not None
+    stage = stage if stage is not None else _null_stage
+
+    group_keys = jax.random.split(key, n_cg * n_bands).reshape(n_cg, n_bands, 2)
+    Wcur = W.astype(jnp.float32)
+    U = U.astype(jnp.float32)
+    wgt_all = cholesky_diag_weights(U)  # (c,), 1/U_qq^2
+
+    Qs, idxs, cbs, sints, a_list, z_list = [], [], [], [], [], []
+    for g in range(n_cg):
+        gstart = g * cg
+        Wg = Wcur[:, gstart:gstart + cg]
+        wgt_g = wgt_all[gstart:gstart + cg]
+        with stage("em_init"):
+            Sg, sint_g, a_g, z_g, Cg = _group_init(
+                Wg, wgt_g, group_keys[g], cfg=cfg, group_cols=cg,
+                rows_per_band=rg,
+            )
+            if timed:
+                jax.block_until_ready(Cg)
+        with stage("column_sweep"):
+            Wcur, Qg, idxg = _group_sweep(
+                Wcur, U, Sg, Cg, wgt_g, jnp.int32(gstart), cfg=cfg,
+                group_cols=cg, rows_per_band=rg, solver=solver,
+            )
+            if timed:
+                jax.block_until_ready(Wcur)
+        Qs.append(Qg)
+        idxs.append(idxg)
+        cbs.append(Cg)
+        sints.append(sint_g)
+        a_list.append(a_g)
+        z_list.append(z_g)
+
+    arrays = VQArrays(
+        Q=jnp.concatenate(Qs, axis=1),
+        indices=jnp.concatenate(idxs, axis=1),
+        codebooks=jnp.stack(cbs, axis=0),
+        scale_sint=jnp.stack(sints, axis=0),
+        scale_a=jnp.stack(a_list, axis=0).reshape(n_cg),
+        scale_z=jnp.stack(z_list, axis=0).reshape(n_cg),
+    )
+    res = VQResult(arrays=arrays, cfg=cfg, r=r, c=c, group_cols=cg,
+                   rows_per_band=rg)
+    if solver == "cd" and cfg.cd_passes > 0:
+        with stage("cd_refine"):
+            Q, idx, _changed = cd_refine(
+                W.astype(jnp.float32), arrays.Q, arrays.indices,
+                arrays.codebooks, res.expanded_scales(), H, cfg=cfg,
+                group_cols=cg, rows_per_band=rg, passes=cfg.cd_passes,
+            )
+            if timed:
+                jax.block_until_ready(Q)
+        res = dataclasses.replace(
+            res, arrays=arrays._replace(Q=Q, indices=idx)
+        )
+    return res
 
 
 def layer_error(W: jax.Array, Q: jax.Array, H: jax.Array) -> jax.Array:

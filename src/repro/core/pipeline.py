@@ -35,8 +35,11 @@ payloads.
 
 Distribution: calibration sequences shard across data-parallel workers;
 each accumulates partial Hessians and a single all-reduce merges them (the
-quantizer itself is layer-local). On a single-process container the same
-code runs with world size 1.
+quantizer itself is layer-local). In-process, ``hessian_mesh=`` runs the
+same scheme over a ``jax.sharding`` mesh: calibration rows shard across
+the mesh's data axis and one psum per accumulate merges the partials
+(hessian.accumulate_sharded). On a single-process container the same code
+runs with world size 1.
 
 Weight convention: model kernels are (in, out); GPTVQ operates on
 (out, in) so every matrix is transposed on entry and the packed VQLinear
@@ -83,10 +86,14 @@ class QuantizeReport:
     per_target: dict = dataclasses.field(default_factory=dict)
     achieved_bpv: float = 0.0   # numel-weighted model-wide bpv, overhead incl.
     recipe: dict | None = None  # the resolved recipe, JSON-able
-    # host-side seconds per pipeline stage (hessian_capture, column_sweep,
-    # codebook_update, advance). Approximate under jax async dispatch, but
-    # each block ends in a float() sync so drift stays within a block.
+    # host-side seconds per pipeline stage (hessian_capture, em_init,
+    # column_sweep, cd_refine, codebook_update, advance). Approximate under
+    # jax async dispatch, but the gptvq stages sync on exit and each block
+    # ends in a float() sync, so drift stays within a block.
     stage_seconds: dict = dataclasses.field(default_factory=dict)
+    # human-readable anomalies (e.g. budget pre-pass targets whose Hessian
+    # tap never fired, scored by weight variance instead)
+    warnings: list = dataclasses.field(default_factory=list)
 
     def total_error(self) -> float:
         """Summed Hessian-weighted reconstruction error over all targets."""
@@ -106,11 +113,14 @@ def _apply_action(W_io, H, action, key, stage=_null_stage):
     jitted functions) so shim-compiled recipes stay bitwise-identical.
 
     ``stage(name)`` yields a context manager timing one pipeline stage
-    (telemetry span + stage-seconds accumulation). EM codebook init runs
-    inside the jitted column sweep's fori_loop, so ``column_sweep`` covers
-    both — it cannot be timed separately without splitting the jit.
+    (telemetry span + stage-seconds accumulation). The GPTVQ sweep takes
+    the timer itself and splits its phases honestly: ``em_init`` (jitted
+    per-group codebook init), ``column_sweep`` (the d-span sweep), and
+    ``cd_refine`` (solver="cd" only).
     """
     W = W_io.T.astype(jnp.float32)  # (out, in)
+    # gptvq takes the timer itself; None keeps untimed callers fully async
+    gstage = stage if stage is not _null_stage else None
     if isinstance(action, IntQuant):
         if action.method == "rtn":
             with stage("column_sweep"):
@@ -127,9 +137,9 @@ def _apply_action(W_io, H, action, key, stage=_null_stage):
     if action.method == "kmeans":
         # Table-1 baseline: plain k-means clustering, no Hessian weighting,
         # no error feedback (identity H => EM == k-means, U == I)
-        with stage("column_sweep"):
-            res = gptvq_quantize_matrix(
-                W, jnp.eye(W.shape[1], dtype=jnp.float32), cfg, key)
+        res = gptvq_quantize_matrix(
+            W, jnp.eye(W.shape[1], dtype=jnp.float32), cfg, key,
+            stage=gstage)
         return res.arrays.Q.T.astype(W_io.dtype), None
     U = hes.inv_hessian_cholesky(
         H if H is not None else jnp.eye(W.shape[1], dtype=jnp.float32))
@@ -137,12 +147,14 @@ def _apply_action(W_io, H, action, key, stage=_null_stage):
         # Table-1 middle row: k-means WITH layer input data (Hessian-weighted
         # EM/assignment) but no GPTQ-style error feedback: diagonal-only U
         Ud = jnp.diag(jnp.diagonal(U))
-        with stage("column_sweep"):
-            res = gptvq_quantize_matrix(W, Ud, cfg, key)
+        res = gptvq_quantize_matrix(W, Ud, cfg, key, stage=gstage)
         return res.arrays.Q.T.astype(W_io.dtype), None
     assert action.method == "gptvq"
-    with stage("column_sweep"):
-        res = gptvq_quantize_matrix(W, U, cfg, key)
+    solver = getattr(action, "solver", "gptq")
+    H_eff = H if H is not None else jnp.eye(W.shape[1], dtype=jnp.float32)
+    res = gptvq_quantize_matrix(W, U, cfg, key, solver=solver,
+                                H=H_eff if solver == "cd" else None,
+                                stage=gstage)
     with stage("codebook_update"):
         if H is not None:
             res = codebook_update(res, W, H)
@@ -236,48 +248,70 @@ def _check_plan(blocks, plan) -> None:
                     f"(matched {res.rule})")
 
 
-def _budget_prepass(adapter, chunks, plan, progress):
+def _budget_prepass(adapter, chunks, plan, progress, mesh=None,
+                    mesh_axis: str = "data"):
     """Collect per-target diagonal Hessians from the *unquantized* model.
 
-    One cheap forward sweep: capture each block's taps from the original
-    activation stream, keep only diag(H), install the original params and
-    advance. Uses a fresh blocks() list so the real sweep starts clean.
+    One cheap forward sweep under ``adapters.diag_capture()``: every tap
+    accumulates an O(c) ``DiagHessianState`` (per-expert taps an (E, c)
+    stack) — the full (c, c) Hessian is never materialized, which is what
+    lets the pre-pass scale to 70B-class column counts. With ``mesh`` set,
+    accumulation additionally shards calibration rows data-parallel over
+    the mesh axis. Installs the original params and advances, using a
+    fresh blocks() list so the real sweep starts clean.
+
+    Returns (diag, missed): ``missed`` maps target names whose Hessian
+    could not be collected to a reason string — the caller scores those
+    by weight variance explicitly and surfaces a warning.
     """
     states = [adapter.calib_state(c, ci) for ci, c in enumerate(chunks)]
     blocks = adapter.blocks()
     diag: dict[str, jax.Array] = {}
-    for blk in blocks:
-        prefix = _block_prefix(blk)
-        eligible = [
-            spec for spec in blk.targets()
-            if isinstance(plan[f"{prefix}.{spec.name}"].action, Quantize)
-            and spec.tap is not None]
-        groups = frozenset(spec.group for spec in eligible)
-        taps: dict = {}
-        if groups:
-            for st in states:
-                taps = blk.capture(st, taps, groups)
-        for spec in eligible:
-            tap = taps.get(spec.tap)
-            if tap is None:
-                continue
-            name = f"{prefix}.{spec.name}"
-            if spec.per_expert:
-                Hs, n = tap
-                He = Hs / jnp.maximum(n, 1.0)[:, None, None]
-                diag[name] = jnp.mean(jax.vmap(jnp.diagonal)(He), axis=0)
-            else:
-                diag[name] = jnp.diagonal(hes.finalize(tap))
-        blk.install(blk.params())
-        states = [blk.advance(st) for st in states]
-        if progress:
-            progress(f"budget pre-pass: {blk.name}")
-    return diag
+    missed: dict[str, str] = {}
+    with contextlib.ExitStack() as cm:
+        cm.enter_context(adapters.diag_capture())
+        if mesh is not None:
+            cm.enter_context(adapters.hessian_mesh(mesh, mesh_axis))
+        for blk in blocks:
+            prefix = _block_prefix(blk)
+            eligible = [
+                spec for spec in blk.targets()
+                if isinstance(plan[f"{prefix}.{spec.name}"].action, Quantize)
+                and spec.tap is not None]
+            groups = frozenset(spec.group for spec in eligible)
+            taps: dict = {}
+            if groups:
+                for st in states:
+                    taps = blk.capture(st, taps, groups)
+            for spec in eligible:
+                tap = taps.get(spec.tap)
+                name = f"{prefix}.{spec.name}"
+                if tap is None:
+                    missed[name] = f"tap {spec.tap!r} never fired"
+                    continue
+                if spec.per_expert:
+                    Hd, n = tap  # (E, c) diag stack under diag_capture
+                    He = Hd / jnp.maximum(n, 1.0)[:, None]
+                    diag[name] = jnp.mean(He, axis=0)
+                else:
+                    diag[name] = hes.finalize_diag(tap)
+            blk.install(blk.params())
+            states = [blk.advance(st) for st in states]
+            if progress:
+                progress(f"budget pre-pass: {blk.name}")
+    return diag, missed
 
 
-def _allocate(blocks, plan, diag, budget_bpv, progress):
-    """Rewrite Quantize plan entries with the budget allocator's choice."""
+def _allocate(blocks, plan, diag, missed, budget_bpv, progress,
+              scorer: str = "closed_form"):
+    """Rewrite Quantize plan entries with the budget allocator's choice.
+
+    Returns (plan, warnings): targets the pre-pass could not collect a
+    Hessian for are scored by weight variance (explicit identity
+    weights) and reported in ``warnings``.
+    """
     entries, fixed_bits, fixed_numel = [], 0.0, 0
+    warn_rows: list[str] = []
     for blk in blocks:
         prefix = _block_prefix(blk)
         block_params = blk.params()
@@ -292,8 +326,18 @@ def _allocate(blocks, plan, diag, budget_bpv, progress):
                 replicas = 1
                 Wq, numel = W.T.astype(jnp.float32), W.size
             if isinstance(res.action, Quantize):
+                diag_h = diag.get(name)
+                if diag_h is None:
+                    # explicit weight-variance fallback: identity column
+                    # weights make the proxy the plain variance of W
+                    why = missed.get(name, "no Hessian tap declared")
+                    msg = (f"budget pre-pass: {why} for {name}; scoring "
+                           f"by weight variance (identity Hessian)")
+                    warn_rows.append(msg)
+                    warnings.warn(msg, stacklevel=3)
+                    diag_h = jnp.ones((Wq.shape[-1],), jnp.float32)
                 entries.append(BudgetEntry(
-                    name=name, W=Wq, diag_h=diag.get(name),
+                    name=name, W=Wq, diag_h=diag_h,
                     base_cfg=res.action.cfg, numel=numel,
                     replicas=replicas))
             else:
@@ -301,13 +345,15 @@ def _allocate(blocks, plan, diag, budget_bpv, progress):
                 fixed_bits += numel * res.action.bpv(r, c)
                 fixed_numel += numel
     alloc = allocate_budget(entries, budget_bpv, fixed_bits=fixed_bits,
-                            fixed_numel=fixed_numel, progress=progress)
+                            fixed_numel=fixed_numel, scorer=scorer,
+                            progress=progress)
     for name, (setting, cfg) in alloc.items():
         old = plan[name]
         plan[name] = Resolved(
-            Quantize(cfg, method=old.action.method),
+            Quantize(cfg, method=old.action.method,
+                     solver=getattr(old.action, "solver", "gptq")),
             rule=f"budget[{setting}]<-{old.rule}")
-    return plan
+    return plan, warn_rows
 
 
 def quantize_model(
@@ -319,6 +365,9 @@ def quantize_model(
     *,
     recipe: QuantRecipe | None = None,  # declarative per-target rules
     budget_bpv: float | None = None,    # Hessian-budgeted mixed precision
+    budget_scorer: str = "closed_form",  # or "refit" (validation oracle)
+    hessian_mesh=None,       # jax.sharding.Mesh: data-parallel capture
+    hessian_mesh_axis: str = "data",
     pack: bool = False,      # True -> VQLinear leaves (serving format)
     chunk: int = 8,          # calibration sequences per forward chunk
     quantize_attn: bool = True,   # deprecated: use a recipe rule instead
@@ -336,6 +385,11 @@ def quantize_model(
     activations for the taps the plan actually needs, (2) per-target
     application of the resolved action, (3) advancing the activations
     through the quantized block.
+
+    With ``hessian_mesh`` set, Hessian accumulation (the budget pre-pass
+    and pass 1) shards calibration rows across the mesh's
+    ``hessian_mesh_axis`` devices and merges partials with one psum per
+    accumulate call — numerically equivalent to single-device capture.
 
     With ``telemetry`` set, each stage additionally records a
     ``span.quant/<stage>`` histogram and the event log gains
@@ -388,9 +442,16 @@ def quantize_model(
     blocks = adapter.blocks()
     plan = recipe.resolve(_collect_targets(blocks))
     _check_plan(blocks, plan)
+    report_warnings: list[str] = []
     if budget_bpv is not None:
-        diag = _budget_prepass(adapter, chunks, plan, progress)
-        plan = _allocate(blocks, plan, diag, budget_bpv, progress)
+        with _stage("budget_prepass"):
+            diag, missed = _budget_prepass(
+                adapter, chunks, plan, progress, mesh=hessian_mesh,
+                mesh_axis=hessian_mesh_axis)
+        with _stage("budget_allocate"):
+            plan, report_warnings = _allocate(
+                blocks, plan, diag, missed, budget_bpv, progress,
+                scorer=budget_scorer)
 
     states = [adapter.calib_state(c, ci) for ci, c in enumerate(chunks)]
     report_rows = []
@@ -409,8 +470,12 @@ def quantize_model(
         taps: dict = {}
         if needed:
             with _stage("hessian_capture", blk.name):
-                for st in states:
-                    taps = blk.capture(st, taps, needed)
+                with contextlib.ExitStack() as cm:
+                    if hessian_mesh is not None:
+                        cm.enter_context(adapters.hessian_mesh(
+                            hessian_mesh, hessian_mesh_axis))
+                    for st in states:
+                        taps = blk.capture(st, taps, needed)
 
         # ---- pass 2: apply each target's resolved action ------------------
         new_block = blk.params()
@@ -473,7 +538,8 @@ def quantize_model(
     return new_params, QuantizeReport(
         report_rows, time.time() - t0, label, bpv,
         per_target=per_target, achieved_bpv=achieved,
-        recipe=recipe.to_json(), stage_seconds=stage_seconds)
+        recipe=recipe.to_json(), stage_seconds=stage_seconds,
+        warnings=report_warnings)
 
 
 def _target_entry(res: Resolved, spec, W) -> dict:

@@ -25,10 +25,12 @@ Actions:
 
 On top of rules, ``allocate_budget`` solves Hessian-budgeted mixed
 precision: given a global bits-per-value budget it scores every
-Quantize-resolved target at each candidate setting with a cheap
-diagonal-Hessian-weighted proxy (a short EM fit on a row subsample, no
-error feedback) and greedily upgrades the most error-reducing targets
-per bit spent until the model-wide weighted bpv (shape-aware codebook /
+Quantize-resolved target at each candidate setting with a
+diagonal-Hessian-weighted proxy — by default the O(r*c)
+rate-distortion closed form (``closed_form_proxy_error``; the original
+trimmed-EM refit survives as ``scorer="refit"``, the validation
+oracle) — and greedily upgrades the most error-reducing targets per
+bit spent until the model-wide weighted bpv (shape-aware codebook /
 scale overhead included, via ``bpv.effective_bpv``) meets the budget.
 
 JSON schema (see ROADMAP.md "Recipes" for worked per-family examples) —
@@ -49,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import fnmatch
+import functools
 import json
 from typing import Any, Union
 
@@ -72,10 +75,18 @@ from repro.core.bpv import (
 class Quantize:
     """Vector-quantize with GPTVQ (method="gptvq") or one of its data
     ablations ("kmeans": identity Hessian, no feedback; "kmeans_data":
-    diagonal Hessian, no feedback)."""
+    diagonal Hessian, no feedback).
+
+    ``solver`` picks the inner assignment rule of the GPTVQ sweep
+    (core/solvers.py): "gptq" (default, the paper's diagonal-metric
+    sweep), "babai" (full conditional span metric / nearest-plane), or
+    "cd" (gptq sweep + coordinate-descent refinement). Only meaningful
+    for method="gptvq"; bpv accounting is unaffected (same index and
+    codebook layout)."""
 
     cfg: VQConfig = VQConfig()
     method: str = "gptvq"
+    solver: str = "gptq"
 
     @property
     def needs_hessian(self) -> bool:
@@ -236,6 +247,26 @@ class QuantRecipe:
                         for r in self.rules),
             default=None if self.default is None else fix(self.default))
 
+    def with_solver(self, solver: str) -> "QuantRecipe":
+        """A copy with ``solver`` set on every Quantize action — the
+        launcher's ``--solver`` flag applies it globally."""
+        from repro.core.solvers import VALID_SOLVERS
+
+        if solver not in VALID_SOLVERS:
+            raise RecipeError(f"unknown solver {solver!r}; expected one "
+                              f"of {VALID_SOLVERS}")
+
+        def fix(action):
+            if not isinstance(action, Quantize):
+                return action
+            return dataclasses.replace(action, solver=solver)
+
+        return dataclasses.replace(
+            self,
+            rules=tuple(dataclasses.replace(r, action=fix(r.action))
+                        for r in self.rules),
+            default=None if self.default is None else fix(self.default))
+
     # -- construction helpers ----------------------------------------------
 
     @staticmethod
@@ -313,7 +344,8 @@ def _action_from_json(spec: dict) -> RuleAction:
     kind = spec.get("action", "quantize")
     if kind == "quantize":
         return Quantize(_vq_cfg_from_json(spec),
-                        method=spec.get("method", "gptvq"))
+                        method=spec.get("method", "gptvq"),
+                        solver=spec.get("solver", "gptq"))
     if kind == "int_quant":
         return IntQuant(int(spec.get("bits", 4)),
                         int(spec.get("group_size", 128)),
@@ -328,6 +360,8 @@ def _action_to_json(action: RuleAction) -> dict:
         out: dict[str, Any] = {"action": "quantize"}
         if action.method != "gptvq":
             out["method"] = action.method
+        if action.solver != "gptq":
+            out["solver"] = action.solver
         # emit the matching paper setting when one exists, else raw fields
         for name, cfg in PAPER_SETTINGS.items():
             if action.cfg == cfg:
@@ -405,9 +439,12 @@ class BudgetEntry:
 
 def _proxy_error(W: jax.Array, diag_h, cfg: VQConfig,
                  max_rows: int = 32) -> float:
-    """Cheap proxy for the reconstruction error of ``cfg`` on W: a short
+    """Refit proxy for the reconstruction error of ``cfg`` on W: a short
     diagonal-Hessian-weighted EM fit (no GPTQ error feedback) on a row
-    subsample, scaled back to the full matrix."""
+    subsample, scaled back to the full matrix. Kept as the validation
+    oracle for :func:`closed_form_proxy_error` (``scorer="refit"``) —
+    it runs a real (trimmed) sweep per (target, candidate) pair, which
+    is what made the budget pre-pass the throughput bottleneck."""
     from repro.core.gptvq import gptvq_quantize_matrix, layer_error
 
     r, c = W.shape
@@ -424,6 +461,79 @@ def _proxy_error(W: jax.Array, diag_h, cfg: VQConfig,
     return err * (r / Ws.shape[0])
 
 
+# Gersho's conjectured normalized second moments of the optimal lattice
+# quantizer per dimension (d=1 interval, d=2 hexagonal, d=3 BCC, d=4 D4)
+_GERSHO_G = {1: 1.0 / 12.0, 2: 5.0 / (36.0 * 3.0 ** 0.5),
+             3: 0.0785, 4: 0.0766}
+
+
+@functools.partial(jax.jit, static_argnames=("n_bands", "rg", "n_cg",
+                                             "spans_pg", "d"))
+def _cf_weighted_variance(W, h, *, n_bands, rg, n_cg, spans_pg, d):
+    """Hessian-weighted total variance per (band, column group), summed.
+    Jitted with the group plan static: the allocator evaluates it for
+    every (target, candidate) pair, so per-call dispatch overhead is
+    what would dominate the pre-pass."""
+    X = W.astype(jnp.float32).reshape(n_bands, rg, n_cg, spans_pg, d)
+    Hw = h.reshape(n_cg, spans_pg, d)
+    # weighted mean per (band, group, coordinate) over the n_vec vectors
+    wsum = rg * jnp.sum(Hw, axis=1)  # (n_cg, d)
+    mu = (jnp.einsum("bigjp,gjp->bgp", X, Hw)
+          / jnp.maximum(wsum[None], 1e-20))
+    diff = X - mu[:, None, :, None, :]
+    return jnp.einsum("bigjp,gjp->", diff * diff, Hw)
+
+
+def closed_form_proxy_error(W: jax.Array, diag_h, cfg: VQConfig) -> float:
+    """Rate-distortion closed form for the reconstruction error of
+    ``cfg`` on W — no EM refit, no sweep: O(r*c) per candidate.
+
+    High-rate VQ theory prices a k-centroid codebook on n d-vectors at
+
+        D  ≈  G_d * k^(-2/d) * V  =  G_d * 2^(-2*bits_per_dim) * V
+
+    where G_d is the Gersho lattice constant and V the (here
+    Hessian-weighted) total variance of the vectors around their
+    weighted mean. We apply it per (row band, column group) — each has
+    its own codebook under the group plan — and multiply by the finite-k
+    coverage factor ``max(1 - k/n_vec, 0)``: when the codebook has at
+    least as many centroids as vectors every vector is its own centroid
+    and the distortion collapses to ~0 (exactly what the refit proxy
+    reports on small smoke tensors).
+
+    Weighted variance uses ``diag_h`` per column as the coordinate
+    importances, matching the refit proxy's diagonal-Hessian metric.
+    Blockwise normalization is ignored (every PAPER_SETTINGS candidate
+    has ``scale_block=0``); scales would only rescale V per block and
+    cancel in the allocator's per-target comparisons.
+    """
+    from repro.core.gptvq import plan_groups
+
+    r, c = W.shape
+    cg, rg = plan_groups(r, c, cfg)
+    d, k = cfg.d, cfg.k
+    n_cg, n_bands, spans_pg = c // cg, r // rg, cg // d
+    n_vec = rg * spans_pg
+    coverage = max(1.0 - k / n_vec, 0.0)
+    if coverage == 0.0:
+        return 0.0
+    if diag_h is None:
+        h = jnp.ones((c,), jnp.float32)
+    else:
+        h = jnp.maximum(diag_h.astype(jnp.float32), 1e-10)
+    V = _cf_weighted_variance(W, h, n_bands=n_bands, rg=rg, n_cg=n_cg,
+                              spans_pg=spans_pg, d=d)
+    g_d = _GERSHO_G.get(d, _GERSHO_G[4])
+    return float(g_d * 2.0 ** (-2.0 * cfg.bits_per_dim) * coverage * V)
+
+
+PROXY_SCORERS = {
+    "closed_form": lambda W, diag_h, cfg: closed_form_proxy_error(
+        W, diag_h, cfg),
+    "refit": lambda W, diag_h, cfg: _proxy_error(W, diag_h, cfg),
+}
+
+
 def allocate_budget(
     entries: list[BudgetEntry],
     budget_bpv: float,
@@ -431,6 +541,7 @@ def allocate_budget(
     fixed_bits: float = 0.0,      # Σ numel*bpv of non-Quantize targets
     fixed_numel: int = 0,
     candidates: tuple[str, ...] = BUDGET_CANDIDATES,
+    scorer: str = "closed_form",
     progress=None,
 ) -> dict[str, tuple[str, VQConfig]]:
     """Greedy discrete allocation: start every target at its cheapest
@@ -438,9 +549,18 @@ def allocate_budget(
     proxy-error reduction per extra bit while the model-wide weighted
     bpv (including ``fixed_*`` contributions from int/dense targets)
     stays <= ``budget_bpv``. Returns {target name: (setting, VQConfig)}.
+
+    ``scorer`` picks the per-(target, candidate) error proxy:
+    "closed_form" (default) is the O(r*c) rate-distortion model, "refit"
+    the original trimmed-EM fit kept as the validation oracle.
     """
     if not entries:
         return {}
+    try:
+        score = PROXY_SCORERS[scorer]
+    except KeyError:
+        raise RecipeError(f"unknown budget scorer {scorer!r}; expected "
+                          f"one of {sorted(PROXY_SCORERS)}")
     table: dict[str, list[tuple[str, VQConfig, float, float]]] = {}
     for e in entries:
         r, c = e.W.shape
@@ -453,7 +573,7 @@ def allocate_budget(
                 e.base_cfg, d=base.d, bits_per_dim=base.bits_per_dim,
                 group_size=base.group_size, codebook_bits=base.codebook_bits)
             bpv = effective_bpv(cfg, r, c)
-            err = _proxy_error(e.W, e.diag_h, cfg) * e.replicas
+            err = score(e.W, e.diag_h, cfg) * e.replicas
             rows.append((setting, cfg, bpv, err))
         if not rows:
             raise RecipeError(

@@ -61,6 +61,20 @@ def main():
     ap.add_argument("--budget-bpv", type=float, default=None,
                     help="model-wide bits-per-value budget: per-target "
                          "settings are allocated by Hessian sensitivity")
+    ap.add_argument("--budget-scorer", default="closed_form",
+                    choices=("closed_form", "refit"),
+                    help="budget pre-pass error proxy: the O(r*c) "
+                         "rate-distortion closed form (default) or the "
+                         "original trimmed-EM refit (validation oracle)")
+    ap.add_argument("--solver", default=None,
+                    choices=("gptq", "babai", "cd"),
+                    help="inner sweep solver on every quantize action: "
+                         "gptq (paper default), babai (full conditional "
+                         "span metric), cd (+coordinate-descent "
+                         "refinement)")
+    ap.add_argument("--hessian-mesh", type=int, default=0,
+                    help="shard Hessian accumulation data-parallel over "
+                         "this many local devices (0 = single-device)")
     ap.add_argument("--sequences", type=int, default=16)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--em-iters", type=int, default=None,
@@ -108,9 +122,15 @@ def main():
                  if v is not None}
     if overrides:
         recipe = recipe.with_quantize_overrides(**overrides)
+    if args.solver is not None:
+        recipe = recipe.with_solver(args.solver)
+    mesh = None
+    if args.hessian_mesh > 1:
+        mesh = jax.make_mesh((args.hessian_mesh,), ("data",))
     budget = f" budget={args.budget_bpv}bpv" if args.budget_bpv else ""
-    print(f"arch={cfg.name} recipe={recipe.name or 'custom'}{budget} "
-          f"calib={calib.shape}")
+    solver = f" solver={args.solver}" if args.solver else ""
+    print(f"arch={cfg.name} recipe={recipe.name or 'custom'}{budget}"
+          f"{solver} calib={calib.shape}")
 
     # stub-frontend extras (audio frames) for families whose forward needs
     # more than tokens; {} for everyone else
@@ -120,6 +140,7 @@ def main():
     t0 = time.time()
     qparams, rep = quantize_model(
         model, params, calib, recipe=recipe, budget_bpv=args.budget_bpv,
+        budget_scorer=args.budget_scorer, hessian_mesh=mesh,
         pack=True, progress=lambda msg: print(f"  {msg}", flush=True),
         telemetry=telemetry)
     dt = time.time() - t0
@@ -133,7 +154,9 @@ def main():
             f"{k}={v:.1f}s ({100*v/max(total, 1e-9):.0f}%)"
             for k, v in sorted(rep.stage_seconds.items(),
                                key=lambda kv: -kv[1]))
-        print(f"  stages: {parts}  (column_sweep includes jitted EM init)")
+        print(f"  stages: {parts}")
+    for w in rep.warnings:
+        print(f"  WARNING: {w}")
     if args.metrics_out:
         telemetry.write_metrics(args.metrics_out)
         print(f"  metrics snapshot -> {args.metrics_out}")
@@ -150,7 +173,7 @@ def main():
         "achieved_bpv": rep.achieved_bpv, "per_target": rep.per_target,
         "budget_bpv": args.budget_bpv, "ppl_fp": float(ppl_fp),
         "ppl_vq": float(ppl_vq), "seconds": dt,
-        "stage_seconds": rep.stage_seconds,
+        "stage_seconds": rep.stage_seconds, "warnings": rep.warnings,
     })
     print(f"packed checkpoint written to {args.out}")
 

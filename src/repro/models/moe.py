@@ -102,7 +102,7 @@ def _dispatch_one(xf, p, cfg: ModelConfig, C: int):
     return y, aux
 
 
-def expert_hessians(p, cfg: ModelConfig, x):
+def expert_hessians(p, cfg: ModelConfig, x, diag_only: bool = False):
     """Per-expert GPTVQ Hessian statistics for one calibration chunk.
 
     x: (B, S, D) layer inputs. Routes every token with the layer's own
@@ -118,6 +118,10 @@ def expert_hessians(p, cfg: ModelConfig, x):
     counts for this chunk — counts sum across chunks, and the consumer
     clamps once at division time (clamping per chunk would inflate n for
     experts unrouted in some chunks and skew the mean-Hessian scale).
+
+    With ``diag_only`` (the budget pre-pass's O(c) capture mode) only the
+    Hessian diagonals are accumulated: (E, D) / (E, F) stacks instead of
+    (E, D, D) / (E, F, F).
     """
     B, S, D = x.shape
     E, K = cfg.n_experts, cfg.n_experts_active
@@ -126,8 +130,6 @@ def expert_hessians(p, cfg: ModelConfig, x):
     probs = jax.nn.softmax(logits, axis=-1)
     _, eids = jax.lax.top_k(probs, K)
     onehot = jax.nn.one_hot(eids, E, dtype=jnp.float32).sum(1)  # (N, E)
-    # input-side: H_e = sum over tokens routed to e of x x^T
-    Hin = jnp.einsum("ne,nd,nc->edc", onehot, xf, xf)
     # output-side: inputs to w_out are h = act(...) per expert
     act = cm.act_fn(cfg.activation)
     h = jnp.einsum("nd,edf->enf", xf, p["w_in"].astype(jnp.float32))
@@ -137,8 +139,14 @@ def expert_hessians(p, cfg: ModelConfig, x):
     else:
         h = act(h)
     h = h * onehot.T[..., None]  # zero out tokens not routed to e
-    Hout = jnp.einsum("enf,eng->efg", h, h)
     n = onehot.sum(0)
+    if diag_only:
+        Hin_d = jnp.einsum("ne,nd->ed", onehot, xf * xf)
+        Hout_d = jnp.einsum("enf->ef", h * h)
+        return (Hin_d, n), (Hout_d, n)
+    # input-side: H_e = sum over tokens routed to e of x x^T
+    Hin = jnp.einsum("ne,nd,nc->edc", onehot, xf, xf)
+    Hout = jnp.einsum("enf,eng->efg", h, h)
     return (Hin, n), (Hout, n)
 
 

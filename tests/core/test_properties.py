@@ -112,6 +112,33 @@ class TestGPTVQProps:
                                    atol=1e-5)
 
 
+class TestBudgetProps:
+    @settings(max_examples=8, deadline=None)
+    @given(budget=st.sampled_from([2.5, 3.0, 4.0]),
+           seed=st.integers(0, 20))
+    def test_allocation_under_ceiling_and_deterministic(self, budget, seed):
+        import dataclasses
+        from repro.core.bpv import PAPER_SETTINGS, effective_bpv
+        from repro.core.recipe import BudgetEntry, allocate_budget
+
+        base = dataclasses.replace(PAPER_SETTINGS["2.25bpv_2d"], em_iters=4,
+                                   codebook_update_iters=0)
+        entries = []
+        for i, (r, c) in enumerate([(64, 128), (32, 256), (96, 192)]):
+            k1, k2 = jax.random.split(
+                jax.random.fold_in(jax.random.PRNGKey(seed), i))
+            W = jax.random.normal(k1, (r, c))
+            dh = jnp.abs(jax.random.normal(k2, (c,))) + 0.1
+            entries.append(BudgetEntry(name=f"t{i}", W=W, diag_h=dh,
+                                       base_cfg=base, numel=r * c))
+        alloc = allocate_budget(entries, budget)
+        assert alloc == allocate_budget(entries, budget)
+        total = sum(e.numel for e in entries)
+        bits = sum(effective_bpv(alloc[e.name][1], *e.W.shape) * e.numel
+                   for e in entries)
+        assert bits / total <= budget + 1e-9
+
+
 class TestShardingProps:
     @settings(**SETTINGS)
     @given(dims=st.tuples(st.sampled_from([1, 3, 8, 16, 64, 100]),
